@@ -1,0 +1,61 @@
+"""Figure 1: decode latency is linear in batch size B and KV budget C.
+
+Measured on this host: the jitted slot-decode attention (jnp ref path) is
+timed across a (batch × budget) grid; we fit t = a + b·B + c·C + d·B·C and
+report R² plus the per-cross-section linear fits the paper plots.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timed
+from repro.core import LinearLatencyModel
+from repro.kernels.ref import fairkv_decode_ref
+
+
+def _decode_latency(B: int, C: int, S: int = 8, G: int = 4, Dh: int = 64,
+                    seed: int = 0) -> float:
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, S, G, Dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(S, B, C, Dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(S, B, C, Dh)), jnp.float32)
+    lengths = jnp.full((S, B), C, jnp.int32)
+    fn = jax.jit(lambda q, k, v, l: fairkv_decode_ref(q, k, v, l))
+    us, _ = timed(fn, q, k, v, lengths)
+    return us
+
+
+def run(batches=(8, 16, 32, 64), budgets=(128, 256, 512, 1024)) -> dict:
+    samples = []
+    for B in batches:
+        for C in budgets:
+            us = _decode_latency(B, C)
+            samples.append((float(B), float(C), us))
+    model = LinearLatencyModel.fit(samples)
+    r2 = model.r2(samples)
+    # per-cross-section linear fits (the paper's two panels)
+    slopes_b = {}
+    for C in budgets:
+        xs = np.array([s[0] for s in samples if s[1] == C])
+        ys = np.array([s[2] for s in samples if s[1] == C])
+        A = np.stack([xs, np.ones_like(xs)], 1)
+        coef, res, *_ = np.linalg.lstsq(A, ys, rcond=None)
+        ss_tot = ((ys - ys.mean()) ** 2).sum()
+        slopes_b[C] = 1 - (res[0] / ss_tot if len(res) and ss_tot > 0 else 0.0)
+    return {"samples": samples, "model": model, "r2": r2,
+            "r2_vs_batch": slopes_b}
+
+
+def main():
+    out = run()
+    m = out["model"]
+    print(f"fig1/bilinear_fit,{np.mean([s[2] for s in out['samples']]):.1f},"
+          f"r2={out['r2']:.4f};a={m.a:.2f};b={m.b:.3f};c={m.c:.4f};d={m.d:.5f}")
+    for C, r2 in out["r2_vs_batch"].items():
+        print(f"fig1/linear_in_B_at_budget{C},0,r2={r2:.4f}")
+
+
+if __name__ == "__main__":
+    main()

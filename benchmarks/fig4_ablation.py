@@ -1,0 +1,48 @@
+"""Figure 4: ablation — SHA vs FairKV w/o fair-copying vs FairKV with it.
+
+Paper: both FairKV arms beat the standard model; fair-copying adds a further
+step.  Utilization per arm on the 70B-like model across budgets.
+"""
+from __future__ import annotations
+
+from benchmarks.common import (
+    DecodeTimeModel,
+    SIM_MODELS,
+    make_plans,
+    realized_lengths,
+    v5e_overhead_tokens,
+)
+
+MODEL = "llama70b-like(qwen1.5-110b)"
+
+
+def run(budgets=(128, 256, 512, 1024), tp: int = 8, batch: int = 32,
+        layers_cap: int = 8) -> list:
+    dims = SIM_MODELS[MODEL]
+    L = min(dims["n_layers"], layers_cap)
+    scale = dims["n_layers"] / L
+    params_bytes = 2.0 * (dims["d_model"] * dims["d_ff"] * 3
+                          + dims["d_model"] * dims["d_model"] * 2
+                          ) * dims["n_layers"]
+    rows = []
+    for budget in budgets:
+        lengths = realized_lengths(L, dims["n_heads"], budget, batch,
+                                   head_skew=1.0, head_seed=7)
+        plans = make_plans(lengths, tp)
+        ovh = v5e_overhead_tokens(dims["d_model"], dims["d_ff"],
+                                  dims["n_layers"], batch, tp,
+                                  dims["head_dim"], params_bytes / tp) / scale
+        tm = DecodeTimeModel(overhead_tokens=ovh)
+        utils = {k: tm.utilization(p, lengths) for k, p in plans.items()}
+        rows.append({"name": f"fig4/budget{budget}/tp{tp}", **utils})
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"{r['name']},0,sha={r['sha']:.3f};"
+              f"nodp={r['fairkv_nodp']:.3f};dp={r['fairkv_dp']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Figure 5: utilization vs copied-head count CH (the fair-copying budget).
+
+Paper: large gains from the first few copies, diminishing after.  We sweep
+CH ∈ {0, 1, 2, 3, 4, 8} at TP=8 on the 70B-like model.
+"""
+from __future__ import annotations
+
+from benchmarks.common import (
+    DecodeTimeModel,
+    SIM_MODELS,
+    make_plans,
+    realized_lengths,
+    v5e_overhead_tokens,
+)
+from repro.core import PlannerConfig, build_plan, profile_from_lengths
+
+MODEL = "llama70b-like(qwen1.5-110b)"
+
+
+def run(budgets=(128, 256, 512, 1024), chs=(0, 1, 2, 3, 4, 8), tp: int = 8,
+        batch: int = 32, layers_cap: int = 8) -> list:
+    dims = SIM_MODELS[MODEL]
+    L = min(dims["n_layers"], layers_cap)
+    scale = dims["n_layers"] / L
+    params_bytes = 2.0 * (dims["d_model"] * dims["d_ff"] * 3
+                          + dims["d_model"] * dims["d_model"] * 2
+                          ) * dims["n_layers"]
+    rows = []
+    for budget in budgets:
+        lengths = realized_lengths(L, dims["n_heads"], budget, batch,
+                                   head_skew=1.0, head_seed=7)
+        prof = profile_from_lengths(lengths)
+        ovh = v5e_overhead_tokens(dims["d_model"], dims["d_ff"],
+                                  dims["n_layers"], batch, tp,
+                                  dims["head_dim"], params_bytes / tp) / scale
+        tm = DecodeTimeModel(overhead_tokens=ovh)
+        utils = {}
+        slots = max(1, -(-dims["n_heads"] // tp)) + 1
+        for ch in chs:
+            plan = build_plan(prof, tp, PlannerConfig(
+                mode="fairkv_dp", extra_copies=ch, slots_per_shard=slots,
+                fill_empty_slots=False))
+            utils[ch] = tm.utilization(plan, lengths)
+        rows.append({"name": f"fig5/budget{budget}/tp{tp}", "utils": utils})
+    return rows
+
+
+def main():
+    for r in run():
+        parts = ";".join(f"ch{c}={u:.3f}" for c, u in r["utils"].items())
+        print(f"{r['name']},0,{parts}")
+
+
+if __name__ == "__main__":
+    main()

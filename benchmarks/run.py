@@ -1,0 +1,47 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (one per measured entity).
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        fig1_latency_linearity,
+        fig3_throughput_gain,
+        fig4_ablation,
+        fig5_dp_size,
+        table1_cosine_similarity,
+        table2_gpu_utilization,
+        table3_quality_proxy,
+    )
+    print("name,us_per_call,derived")
+    suites = [
+        ("table1", table1_cosine_similarity.main),
+        ("table2", table2_gpu_utilization.main),
+        ("fig1", fig1_latency_linearity.main),
+        ("fig3", fig3_throughput_gain.main),
+        ("fig4", fig4_ablation.main),
+        ("fig5", fig5_dp_size.main),
+        ("table3", table3_quality_proxy.main),
+    ]
+    failed = []
+    for name, fn in suites:
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+        print(f"{name}/_suite,{(time.time() - t0) * 1e6:.0f},ok={name not in failed}")
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

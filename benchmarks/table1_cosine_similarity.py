@@ -1,0 +1,51 @@
+"""Table 1: cosine similarity of retained-KV profiles across datasets.
+
+The paper's claim: per-head budget allocation is dataset-invariant
+(cosine ≥ 0.94 for 70B, ≥ 0.87 for 8B), so a statically planned FairKV
+layout transfers.  We reproduce by running the real Ada-SnapKV selection on
+synthetic "datasets" (distinct score distributions per seed, same per-head
+skew pattern — the head identity is a *model* property, which is exactly the
+paper's point) and report pairwise profile cosines.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import realized_lengths, timed
+from repro.core import cosine_similarity, profile_from_lengths
+
+
+def run(budgets=(128, 256, 512, 1024), n_datasets: int = 8,
+        n_layers: int = 8, n_heads: int = 8) -> list:
+    rows = []
+    rng = np.random.default_rng(0)
+    # the model's head-skew pattern is fixed; datasets perturb the scores
+    for budget in budgets:
+        profiles = []
+        for ds in range(n_datasets):
+            # head pattern fixed (model property), data noise varies per set
+            lengths = realized_lengths(n_layers, n_heads, budget, batch=8,
+                                       T=4096, head_skew=1.0,
+                                       head_seed=0, data_seed=ds + 1)
+            profiles.append(profile_from_lengths(lengths))
+        sims = []
+        for i in range(n_datasets):
+            for j in range(i + 1, n_datasets):
+                sims.append(cosine_similarity(profiles[i], profiles[j]))
+        sims = np.array(sims)
+        rows.append({
+            "name": f"table1/ada_snapkv_budget{budget}",
+            "avg": float(sims.mean()), "max": float(sims.max()),
+            "min": float(sims.min()), "std": float(sims.std()),
+        })
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"{r['name']},0,avg={r['avg']:.3f};max={r['max']:.3f};"
+              f"min={r['min']:.3f};std={r['std']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,228 @@
+"""Slot-layout budgeted KV cache — the FairKV-native runtime structure.
+
+Layout (see DESIGN.md §2):  per layer, every model shard owns
+``slots_per_shard`` *slots*; globally the cache tensors are
+
+    k, v     : (L, S, B, C, Dh)   S = total slots (sharded over "model"),
+                                   C = static capacity per slot-row
+    lengths  : (L, S, B) int32     retained tokens per (slot, row); 0 for
+                                   unowned rows and empty slots
+    positions: (B,) int32          next absolute position per row (for RoPE)
+
+Replicas of one head split the batch by the strided rule
+``owner(slot, b) = (b % replica_count) == replica_idx``; a slot only ever has
+nonzero ``lengths`` on rows it owns, which simultaneously implements
+best-effort assignment, fair-copying, and empty-slot padding: work inside the
+decode kernel is proportional to Σ lengths.
+
+Decode appends are ring-buffered in the tail of the capacity region once a
+row is full: keys are stored post-RoPE (rotation at absolute positions), so
+attention is order-independent and overwriting the oldest *dynamic* entry
+implements a recency window without any re-sorting.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.placement import HeadPlacement
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class PlanArrays:
+    """Runtime form of a HeadPlacement.
+
+    slot_head / replica_idx / replica_count: (L, S) int32.
+    first_slot: (L, Hkv) int32 — the replica-0 slot of each head (used by
+    prefill to recover original-layout weights from the slot layout without
+    storing a second copy).
+    """
+
+    slot_head: jnp.ndarray
+    replica_idx: jnp.ndarray
+    replica_count: jnp.ndarray
+    first_slot: jnp.ndarray
+
+    @staticmethod
+    def from_plan(plan: HeadPlacement) -> "PlanArrays":
+        arrs = plan.as_arrays()
+        sh = arrs["slot_head"]
+        L, S = sh.shape
+        first = np.zeros((L, plan.n_heads), dtype=np.int32)
+        for l in range(L):
+            for h in range(plan.n_heads):
+                slots = np.nonzero(sh[l] == h)[0]
+                first[l, h] = int(slots[0])
+        return PlanArrays(
+            slot_head=jnp.asarray(arrs["slot_head"]),
+            replica_idx=jnp.asarray(arrs["replica_idx"]),
+            replica_count=jnp.asarray(arrs["replica_count"]),
+            first_slot=jnp.asarray(first),
+        )
+
+    def owner_mask(self, layer: int, batch: int) -> jnp.ndarray:
+        """(S, B) bool — slot owns row."""
+        rows = jnp.arange(batch, dtype=jnp.int32)[None, :]
+        rc = self.replica_count[layer][:, None]
+        ri = self.replica_idx[layer][:, None]
+        valid = (self.slot_head[layer] >= 0)[:, None]
+        return valid & ((rows % rc) == ri)
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class SlotCache:
+    k: jnp.ndarray  # (L, S, B, C, Dh)
+    v: jnp.ndarray  # (L, S, B, C, Dh)
+    lengths: jnp.ndarray  # (L, S, B) int32
+    pos: jnp.ndarray  # (L, S, B, C) int32 — absolute position of each entry
+    positions: jnp.ndarray  # (B,) int32
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[3]
+
+    @property
+    def n_slots(self) -> int:
+        return self.k.shape[1]
+
+
+def init_cache(n_layers: int, n_slots: int, batch: int, capacity: int,
+               head_dim: int, dtype=jnp.bfloat16) -> SlotCache:
+    return SlotCache(
+        k=jnp.zeros((n_layers, n_slots, batch, capacity, head_dim), dtype),
+        v=jnp.zeros((n_layers, n_slots, batch, capacity, head_dim), dtype),
+        lengths=jnp.zeros((n_layers, n_slots, batch), jnp.int32),
+        pos=jnp.full((n_layers, n_slots, batch, capacity), -1, jnp.int32),
+        positions=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def ring_write_index(lengths: jnp.ndarray, total_appended: jnp.ndarray,
+                     capacity: int, ring: int) -> jnp.ndarray:
+    """Write position for the next token.
+
+    While a row is below capacity, append at ``lengths``.  Once full, cycle
+    through the last ``ring`` positions (a recency window) — overwritten
+    entries are the oldest *dynamic* tokens; the head of the buffer (the
+    compression-selected prefix) is preserved.
+    ``total_appended`` counts decode appends so far (for the cycle phase).
+    """
+    ring = max(1, min(ring, capacity))
+    ring_start = capacity - ring
+    cyc = ring_start + total_appended % ring  # phase shared across rows; a ring
+    return jnp.where(lengths < capacity, lengths, cyc).astype(jnp.int32)
+
+
+def append_token(
+    cache: SlotCache,
+    layer: int,
+    k_new: jnp.ndarray,  # (S, B, Dh) post-RoPE
+    v_new: jnp.ndarray,  # (S, B, Dh)
+    own: jnp.ndarray,  # (S, B) bool
+    decode_step: jnp.ndarray,  # scalar int32: appends since prefill
+    ring: int = 128,
+    mode: str = "scatter",
+) -> SlotCache:
+    """Append one token into layer ``layer`` for owned (slot, row) pairs.
+
+    ``mode="scatter"`` uses advanced-index scatter (baseline; XLA SPMD falls
+    back to a replicated scatter — ~4 collectives per layer on the (S,B,Dh)
+    projections).  ``mode="onehot"`` writes via an elementwise mask over the
+    capacity dim — fully local under (slot, batch) sharding at the cost of a
+    full cache-slice rewrite (measured trade in EXPERIMENTS.md §Perf).
+    """
+    L, S, B, C, Dh = cache.k.shape
+    lengths = cache.lengths[layer]  # (S, B)
+    idx = ring_write_index(lengths, decode_step, C, ring)  # (S, B)
+    k_layer = cache.k[layer]
+    v_layer = cache.v[layer]
+    p_layer = cache.pos[layer]
+    k_new = k_new.astype(cache.k.dtype)
+    v_new = v_new.astype(cache.v.dtype)
+    p_new = jnp.broadcast_to(cache.positions[None, :], (S, B))
+    if mode == "onehot":
+        sel = (jnp.arange(C, dtype=jnp.int32)[None, None, :] == idx[:, :, None])
+        sel &= own[:, :, None]  # (S, B, C)
+        k_layer = jnp.where(sel[..., None], k_new[:, :, None, :], k_layer)
+        v_layer = jnp.where(sel[..., None], v_new[:, :, None, :], v_layer)
+        p_layer = jnp.where(sel, p_new[:, :, None], p_layer)
+    else:
+        s_ix = jnp.arange(S)[:, None].repeat(B, 1)
+        b_ix = jnp.arange(B)[None, :].repeat(S, 0)
+        # write only where owned (unowned rows keep old values)
+        k_upd = jnp.where(own[..., None], k_new, k_layer[s_ix, b_ix, idx])
+        v_upd = jnp.where(own[..., None], v_new, v_layer[s_ix, b_ix, idx])
+        p_upd = jnp.where(own, p_new, p_layer[s_ix, b_ix, idx])
+        k_layer = k_layer.at[s_ix, b_ix, idx].set(k_upd)
+        v_layer = v_layer.at[s_ix, b_ix, idx].set(v_upd)
+        p_layer = p_layer.at[s_ix, b_ix, idx].set(p_upd.astype(jnp.int32))
+    new_len = jnp.where(own, jnp.minimum(lengths + 1, C), lengths)
+    return SlotCache(
+        k=cache.k.at[layer].set(k_layer),
+        v=cache.v.at[layer].set(v_layer),
+        lengths=cache.lengths.at[layer].set(new_len.astype(jnp.int32)),
+        pos=cache.pos.at[layer].set(p_layer),
+        positions=cache.positions,
+    )
+
+
+def fill_from_selection(
+    cache: SlotCache,
+    layer: int,
+    k_full: jnp.ndarray,  # (B, T, Hkv, Dh) post-RoPE prefill keys
+    v_full: jnp.ndarray,  # (B, T, Hkv, Dh)
+    sel_idx: jnp.ndarray,  # (B, Hkv, C) selected positions into T
+    sel_len: jnp.ndarray,  # (B, Hkv) int32 retained counts (<= C)
+    plan: PlanArrays,
+) -> SlotCache:
+    """Scatter the compression-selected prefill KV into slot layout."""
+    L, S, B, C, Dh = cache.k.shape
+    heads = plan.slot_head[layer]  # (S,)
+    safe_heads = jnp.maximum(heads, 0)
+    own = plan.owner_mask(layer, B)  # (S, B)
+    # per-slot gather: idx (S, B, C) over T
+    idx = jnp.take(sel_idx, safe_heads, axis=1).transpose(1, 0, 2)  # (S, B, C)
+
+    def gather_one(kf, vf, ix):  # kf: (T, Hkv, Dh), ix: (S, C)
+        hh = safe_heads  # (S,)
+        kv_h = kf[:, hh, :]  # (T, S, Dh)
+        vv_h = vf[:, hh, :]
+        k_s = jnp.take_along_axis(kv_h.transpose(1, 0, 2), ix[..., None], axis=1)
+        v_s = jnp.take_along_axis(vv_h.transpose(1, 0, 2), ix[..., None], axis=1)
+        return k_s, v_s  # (S, C, Dh)
+
+    k_sel, v_sel = jax.vmap(gather_one)(k_full, v_full, idx.transpose(1, 0, 2))
+    # (B, S, Csel, Dh) -> (S, B, Csel, Dh); pad Csel up to cache capacity
+    k_sel = k_sel.transpose(1, 0, 2, 3).astype(cache.k.dtype)
+    v_sel = v_sel.transpose(1, 0, 2, 3).astype(cache.v.dtype)
+    if k_sel.shape[2] < C:
+        pad = C - k_sel.shape[2]
+        k_sel = jnp.pad(k_sel, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_sel = jnp.pad(v_sel, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    elif k_sel.shape[2] > C:
+        raise ValueError(
+            f"selection capacity {k_sel.shape[2]} exceeds cache capacity {C}")
+    lens = jnp.take(sel_len, safe_heads, axis=1).T  # (S, B)
+    lens = jnp.where(own, lens, 0).astype(jnp.int32)
+    k_sel = jnp.where(own[..., None, None], k_sel, 0)
+    v_sel = jnp.where(own[..., None, None], v_sel, 0)
+    # entry positions == selected indices (prefill positions are arange(T));
+    # pad/invalid entries get -1 (always outside any window, masked by length)
+    pos_sel = idx.astype(jnp.int32)  # (S, B, C_sel)
+    if pos_sel.shape[2] < C:
+        pos_sel = jnp.pad(pos_sel, ((0, 0), (0, 0), (0, C - pos_sel.shape[2])),
+                          constant_values=-1)
+    pos_sel = jnp.where(own[..., None], pos_sel, -1)
+    return SlotCache(
+        k=cache.k.at[layer].set(k_sel),
+        v=cache.v.at[layer].set(v_sel),
+        lengths=cache.lengths.at[layer].set(lens),
+        pos=cache.pos.at[layer].set(pos_sel),
+        positions=cache.positions,
+    )

@@ -1,0 +1,19 @@
+"""KV-cache compression policies (balanced + imbalanced per-head)."""
+from repro.compression.base import (  # noqa: F401
+    CompressionConfig,
+    observation_scores,
+    pool_scores,
+    topk_select,
+)
+from repro.compression.policies import (  # noqa: F401
+    BALANCED,
+    IMBALANCED,
+    POLICIES,
+    ada_snapkv,
+    h2o,
+    headkv,
+    pyramidkv,
+    select,
+    snapkv,
+    streaming_llm,
+)

@@ -1,0 +1,166 @@
+"""The six compression policies (4 balanced + 2 imbalanced).
+
+Each policy maps pooled observation scores (B, Hkv, T) → (indices, lengths):
+``indices`` (B, Hkv, C) positions retained per head, ``lengths`` (B, Hkv).
+
+Balanced (fair) per-head:
+- ``streaming_llm``  sinks + recent window (position-only, no scores)
+- ``snapkv``         per-head top-budget by pooled obs scores
+- ``pyramidkv``      snapkv with per-layer decaying budgets
+- ``h2o``            accumulated-attention heavy hitters + recent window
+
+Imbalanced (unfair) per-head — the paper's targets:
+- ``ada_snapkv``     layer-wide pool of Hkv·budget entries, allocated to heads
+                     by global score ranking (Ada-KV's safeguarded variant:
+                     every head keeps at least ``sink + obs_window``)
+- ``headkv``         static per-head importance splits the pool: uniform base
+                     ratio + importance-proportional dynamic share
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compression.base import CompressionConfig, topk_select
+
+Selection = Tuple[jnp.ndarray, jnp.ndarray]  # (idx (B,Hkv,C), lengths (B,Hkv))
+
+
+def _boost_guaranteed(scores: jnp.ndarray, t_len: int, cfg: CompressionConfig,
+                      positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Force sinks + the observation window into every selection."""
+    T = scores.shape[-1]
+    pos = jnp.arange(T) if positions is None else positions
+    guaranteed = (pos < cfg.sink) | (pos >= t_len - cfg.obs_window)
+    return jnp.where(guaranteed, jnp.inf, scores)
+
+
+def _uniform_budget(scores: jnp.ndarray, budget: int, capacity: int) -> Selection:
+    B, Hkv, T = scores.shape
+    keep = jnp.full((B, Hkv), min(budget, T, capacity), jnp.int32)
+    return topk_select(scores, keep, capacity)
+
+
+def streaming_llm(scores: jnp.ndarray, cfg: CompressionConfig,
+                  layer_idx: int, n_layers: int) -> Selection:
+    """Sinks + recent window; scores are ignored (balanced, position-only)."""
+    B, Hkv, T = scores.shape
+    pos = jnp.arange(T, dtype=jnp.float32)
+    recent = cfg.budget - cfg.sink
+    synthetic = jnp.where(pos < cfg.sink, 2.0, 0.0) + jnp.where(
+        pos >= T - recent, 1.0, 0.0)
+    synthetic = jnp.broadcast_to(synthetic, (B, Hkv, T))
+    cap = cfg.static_capacity()
+    keep = jnp.full((B, Hkv), min(cfg.budget, T, cap), jnp.int32)
+    return topk_select(synthetic + 1e-6 * pos / T, keep, cap)
+
+
+def snapkv(scores: jnp.ndarray, cfg: CompressionConfig,
+           layer_idx: int, n_layers: int) -> Selection:
+    scores = _boost_guaranteed(scores, scores.shape[-1], cfg)
+    return _uniform_budget(scores, cfg.budget, cfg.static_capacity())
+
+
+def pyramidkv(scores: jnp.ndarray, cfg: CompressionConfig,
+              layer_idx: int, n_layers: int) -> Selection:
+    """Budget decays linearly with depth (early layers keep more)."""
+    beta = cfg.pyramid_beta
+    frac = 1.0 + beta - 2.0 * beta * (layer_idx / max(n_layers - 1, 1))
+    budget = max(cfg.sink + cfg.obs_window, int(round(cfg.budget * frac)))
+    scores = _boost_guaranteed(scores, scores.shape[-1], cfg)
+    return _uniform_budget(scores, budget, cfg.static_capacity())
+
+
+def h2o(scores: jnp.ndarray, cfg: CompressionConfig,
+        layer_idx: int, n_layers: int) -> Selection:
+    """Heavy hitters: half budget by accumulated score, half recent.
+
+    Our ``scores`` are obs-window accumulated attention — the closest offline
+    stand-in for H2O's running accumulation during generation.
+    """
+    B, Hkv, T = scores.shape
+    pos = jnp.arange(T)
+    half = cfg.budget // 2
+    recent_boost = jnp.where(pos >= T - half, jnp.inf, 0.0)
+    scores = scores + recent_boost
+    scores = jnp.where(pos < cfg.sink, jnp.inf, scores)
+    return _uniform_budget(scores, cfg.budget, cfg.static_capacity())
+
+
+def _pooled_allocation(scores: jnp.ndarray, pool_size: jnp.ndarray,
+                       floor: int, capacity: int) -> jnp.ndarray:
+    """Ada-KV allocation: per-row global threshold over (Hkv·T) scores.
+
+    keep[b, h] = #scores of head h among the layer-wide top-``pool_size``,
+    safeguarded to at least ``floor`` and clipped to ``capacity``.
+    """
+    B, Hkv, T = scores.shape
+    flat = scores.reshape(B, Hkv * T)
+    k = int(pool_size)
+    k = min(k, Hkv * T)
+    thresh = jax.lax.top_k(flat, k)[0][:, -1]  # (B,)
+    keep = (scores >= thresh[:, None, None]).sum(axis=-1)  # (B, Hkv)
+    keep = jnp.clip(keep, floor, capacity)
+    return keep.astype(jnp.int32)
+
+
+def ada_snapkv(scores: jnp.ndarray, cfg: CompressionConfig,
+               layer_idx: int, n_layers: int) -> Selection:
+    B, Hkv, T = scores.shape
+    scores = _boost_guaranteed(scores, T, cfg)
+    cap = cfg.static_capacity()
+    floor = min(cfg.sink + cfg.obs_window, cfg.budget)
+    keep = _pooled_allocation(scores, Hkv * cfg.budget, floor, min(cap, T))
+    return topk_select(scores, keep, cap)
+
+
+def headkv(scores: jnp.ndarray, cfg: CompressionConfig,
+           layer_idx: int, n_layers: int,
+           head_importance: Optional[jnp.ndarray] = None) -> Selection:
+    """Static base budget + importance-proportional dynamic share.
+
+    ``head_importance`` (Hkv,) — offline per-head weights (from a profile
+    sample); defaults to the realized mean obs score per head.
+    """
+    B, Hkv, T = scores.shape
+    pool = Hkv * cfg.budget
+    base = int(round(cfg.headkv_base_ratio * cfg.budget))
+    if head_importance is None:
+        imp = scores.mean(axis=(0, 2))  # (Hkv,)
+    else:
+        imp = jnp.asarray(head_importance, jnp.float32)
+    imp = imp / jnp.maximum(imp.sum(), 1e-9)
+    dynamic = (pool - Hkv * base) * imp  # (Hkv,)
+    keep = jnp.broadcast_to(base + dynamic, (B, Hkv))
+    cap = cfg.static_capacity()
+    keep = jnp.clip(keep, min(cfg.sink + cfg.obs_window, cfg.budget),
+                    min(cap, T)).astype(jnp.int32)
+    scores = _boost_guaranteed(scores, T, cfg)
+    return topk_select(scores, keep, cap)
+
+
+POLICIES = {
+    "streaming_llm": streaming_llm,
+    "snapkv": snapkv,
+    "pyramidkv": pyramidkv,
+    "h2o": h2o,
+    "ada_snapkv": ada_snapkv,
+    "headkv": headkv,
+}
+
+BALANCED = {"streaming_llm", "snapkv", "pyramidkv", "h2o"}
+IMBALANCED = {"ada_snapkv", "headkv"}
+
+
+def select(policy: str, scores: jnp.ndarray, cfg: CompressionConfig,
+           layer_idx: int, n_layers: int, **kw) -> Selection:
+    if policy == "none":
+        B, Hkv, T = scores.shape
+        idx = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, Hkv, T))
+        return idx, jnp.full((B, Hkv), T, jnp.int32)
+    if policy not in POLICIES:
+        raise KeyError(f"unknown policy {policy!r}; known: {sorted(POLICIES)}")
+    return POLICIES[policy](scores, cfg, layer_idx, n_layers, **kw)

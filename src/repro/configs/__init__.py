@@ -1,0 +1,27 @@
+"""Architecture config registry.  Importing this package registers all archs."""
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    InputShape,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    get_config,
+    get_smoke_config,
+    list_archs,
+)
+
+# importing each module registers its arch
+from repro.configs import (  # noqa: F401
+    gemma2_9b,
+    granite_3_2b,
+    granite_moe_1b,
+    hymba_1_5b,
+    llava_next_34b,
+    mamba2_1_3b,
+    minitron_8b,
+    qwen15_110b,
+    qwen3_moe_30b,
+    whisper_small,
+)
+
+ALL_ARCHS = list_archs()

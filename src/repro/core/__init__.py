@@ -1,0 +1,24 @@
+"""FairKV core: the paper's contribution as a composable library.
+
+Workflow (paper §4.1):  compression policy → per-head length statistics
+(`profiles`) → best-effort assignment + fair-copying (`planner`) →
+`HeadPlacement` plan → consumed by the serving runtime (weight permutation +
+slot-layout KV cache) and by the efficiency/throughput simulators.
+"""
+from repro.core.assignment import assign_items, backtracking, greedy_lpt, local_search  # noqa: F401
+from repro.core.efficiency import SimResult, simulate, utilization_from_loads  # noqa: F401
+from repro.core.latency import (  # noqa: F401
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS_BF16,
+    LinearLatencyModel,
+    RooflineLatencyModel,
+)
+from repro.core.placement import HeadPlacement, LayerPlacement, layer_from_assignment  # noqa: F401
+from repro.core.planner import PlannerConfig, build_plan, plan_layer, replan_for_stragglers  # noqa: F401
+from repro.core.profiles import (  # noqa: F401
+    cosine_similarity,
+    profile_from_lengths,
+    profile_from_samples,
+    synthetic_profile,
+)

@@ -1,0 +1,107 @@
+"""Post-SPMD HLO statistics: collective bytes + while-body bookkeeping.
+
+Collective-bytes convention (per device, documented in EXPERIMENTS.md):
+- all-gather          → output bytes (each device materializes the gather)
+- all-reduce          → 2 × tensor bytes (ring: reduce-scatter + all-gather)
+- reduce-scatter      → input bytes
+- all-to-all          → tensor bytes
+- collective-permute  → tensor bytes
+
+While-loop bodies appear once in the HLO; their trip counts are known to the
+caller (scan lengths), so ``while_body_stats`` reports per-body collective
+bytes for the roofline to scale.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+# one shaped value like bf16[16,128]{1,0}
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+# an HLO instruction: %name = <shape or tuple> opcode(
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(\([^)]*\)|[^\s]+)\s+([\w\-]+)")
+_COMP_RE = re.compile(r"^(\%?[\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _comm_bytes(op: str, out_bytes: int) -> int:
+    if op == "all-reduce":
+        return 2 * out_bytes
+    return out_bytes
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Total per-device collective traffic by op type (whole module,
+    while bodies counted once)."""
+    stats: Dict[str, Dict[str, float]] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        base = None
+        for c in _COLL_OPS:
+            if op == c or op.startswith(c + "-"):  # e.g. all-gather-start
+                base = c
+                break
+        if base is None or op.endswith("-done"):
+            continue
+        nbytes = _comm_bytes(base, _shape_bytes(shape_str))
+        d = stats.setdefault(base, {"count": 0, "bytes": 0})
+        d["count"] += 1
+        d["bytes"] += nbytes
+    return stats
+
+
+def while_body_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Collective bytes inside each named computation that looks like a loop
+    body (name contains 'while' or 'body'), for trip-count scaling."""
+    out: Dict[str, Dict[str, float]] = {}
+    current = None
+    for line in hlo_text.splitlines():
+        if line and not line.startswith(" ") and "{" in line and "->" in line:
+            name = line.split()[0].lstrip("%")
+            current = name if ("while" in name or "body" in name) else None
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        if current is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        for c in _COLL_OPS:
+            if (op == c or op.startswith(c + "-")) and not op.endswith("-done"):
+                nbytes = _comm_bytes(c, _shape_bytes(shape_str))
+                d = out.setdefault(current, {"count": 0, "bytes": 0})
+                d["count"] += 1
+                d["bytes"] += nbytes
+                break
+    return out

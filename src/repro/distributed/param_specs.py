@@ -1,0 +1,145 @@
+"""Parameter / state PartitionSpecs by leaf path.
+
+Rules are *divisibility-guarded*: a logical axis is only mapped onto mesh
+axes when the dimension divides the mesh-axis product (e.g. hymba's 25 query
+heads cannot shard 16 ways → replicated), so every assigned arch lowers on
+every mesh without bespoke cases.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import ShardingRules
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def guarded(rules: ShardingRules, dim: int, logical: Optional[str]):
+    """logical axis name if dim divides its mesh extent, else None."""
+    if logical is None:
+        return None
+    phys = rules.rules.get(logical)
+    if phys is None:
+        return None
+    if dim % _axis_size(rules.mesh, phys) != 0:
+        return None
+    return phys
+
+
+def spec_for(rules: ShardingRules, shape: Tuple[int, ...],
+             logical: Tuple[Optional[str], ...]) -> P:
+    assert len(shape) == len(logical), (shape, logical)
+    return P(*(guarded(rules, d, l) for d, l in zip(shape, logical)))
+
+
+# leaf-name → logical axes per dim (original / train layout)
+_TRAIN_MAP = {
+    "embed": ("vocab", "fsdp"),
+    "head": ("vocab", "fsdp"),
+    # train attention is sequence-parallel (scores shard over the query
+    # dim), so attention weights shard over fsdp only
+    "wq": ("fsdp", None, None),
+    "wk": ("fsdp", None, None),
+    "wv": ("fsdp", None, None),
+    "wo": (None, None, "fsdp"),
+    "bq": (None, None),
+    "bk": (None, None),
+    "bv": (None, None),
+    "w1": ("fsdp", "ff"),
+    "w3": ("fsdp", "ff"),
+    "w2": ("ff", "fsdp"),
+    "router": (None, "expert"),
+    "we1": ("expert", "fsdp", None),
+    "we3": ("expert", "fsdp", None),
+    "we2": ("expert", None, "fsdp"),
+    "in_proj": ("fsdp", "ff"),
+    "out_proj": ("ff", "fsdp"),
+    "conv_w": (None, "ff"),
+    "enc_pos": (None, None),
+    "dec_pos": (None, None),
+}
+
+# serve layout additions (slot weights).  "fsdp_w" maps to the data axis in
+# 2D weight sharding mode (serve_rules(weights_2d=True)), else to None.
+_SERVE_MAP = {
+    **_TRAIN_MAP,
+    "wq_s": ("kv_slot", "fsdp_w", None, None),
+    "wk_s": ("kv_slot", "fsdp_w", None),
+    "wv_s": ("kv_slot", "fsdp_w", None),
+    "wo_s": ("kv_slot", None, None, "fsdp_w"),
+    "bq_s": ("kv_slot", None, None),
+    "bk_s": ("kv_slot", None),
+    "bv_s": ("kv_slot", None),
+    "attn_out_norm_s": ("kv_slot", None, None),
+    # serving keeps weights weight-stationary on the model axis (+ data in 2D)
+    "embed": ("vocab", "fsdp_w"),
+    "head": ("vocab", "fsdp_w"),
+    "w1": ("fsdp_w", "ff"),
+    "w3": ("fsdp_w", "ff"),
+    "w2": ("ff", "fsdp_w"),
+    "we1": ("expert", "fsdp_w", None),
+    "we3": ("expert", "fsdp_w", None),
+    "we2": ("expert", None, "fsdp_w"),
+    "in_proj": ("fsdp_w", "ff"),
+    "out_proj": ("ff", "fsdp_w"),
+    "wq": ("fsdp_w", "heads", None),
+    "wk": ("fsdp_w", "kv_heads", None),
+    "wv": ("fsdp_w", "kv_heads", None),
+    "wo": ("heads", None, "fsdp_w"),
+    "c_wq": ("fsdp_w", "heads", None),
+    "c_wk": ("fsdp_w", "kv_heads", None),
+    "c_wv": ("fsdp_w", "kv_heads", None),
+    "c_wo": ("heads", None, "fsdp_w"),
+}
+# cross-attn weights in train layout
+for _k in ("wq", "wk", "wv", "wo", "bq", "bk", "bv"):
+    _TRAIN_MAP["c_" + _k] = _TRAIN_MAP[_k]
+
+
+def _leaf_key(path) -> str:
+    """Last dict key on the path; QTensor fields resolve to the parent weight
+    name ('q' carries the weight's spec; 'scale' is replicated)."""
+    last = None
+    attr = None
+    for p in path:
+        if hasattr(p, "key"):
+            last = str(p.key)
+            attr = None
+        elif hasattr(p, "name"):
+            attr = str(p.name)
+    if attr == "scale":
+        return "__scale__"
+    return last or "root"
+
+
+def tree_pspecs(tree: Any, rules: ShardingRules, mode: str = "train") -> Any:
+    """PartitionSpec pytree matching ``tree`` (params or optimizer state)."""
+    table = _TRAIN_MAP if mode == "train" else _SERVE_MAP
+
+    def one(path, leaf):
+        key = _leaf_key(path)
+        logical = table.get(key)
+        if logical is None or len(logical) != len(leaf.shape):
+            # norms / scalars / unknown: shard nothing
+            return P()
+        return spec_for(rules, leaf.shape, logical)
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def tree_shardings(tree: Any, rules: ShardingRules, mode: str = "train") -> Any:
+    return jax.tree.map(lambda s: NamedSharding(rules.mesh, s),
+                        tree_pspecs(tree, rules, mode))

@@ -1,0 +1,119 @@
+"""Logical-axis sharding rules (MaxText-style) + constraint helper.
+
+Models are written against *logical* axis names; the launcher installs a
+``ShardingRules`` mapping (logical name → mesh axis/axes) for the current
+(mesh × shape-kind).  ``constrain(x, *axes)`` is a no-op outside a rules
+context, so all model code runs unmodified on a single CPU device.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Logical → physical axis mapping."""
+
+    mesh: Mesh
+    rules: Dict[str, MeshAxes] = field(default_factory=dict)
+
+    def spec(self, *logical: Optional[str]) -> P:
+        parts = []
+        for name in logical:
+            if name is None:
+                parts.append(None)
+                continue
+            ax = self.rules.get(name, None)
+            parts.append(ax)
+        return P(*parts)
+
+    def sharding(self, *logical: Optional[str]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+
+_state = threading.local()
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def constrain(x, *logical: Optional[str]):
+    """Apply with_sharding_constraint under the active rules (else no-op)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, rules.sharding(*logical))
+
+
+# Default logical-axis rule sets ------------------------------------------------
+
+
+def train_rules(mesh: Mesh) -> ShardingRules:
+    """FSDP(data) × TP(model); batch over pod too when present."""
+    axes = mesh.axis_names
+    batch = ("pod", "data") if "pod" in axes else ("data",)
+    return ShardingRules(mesh=mesh, rules={
+        "batch": batch,
+        "seq": None,
+        "seq_act": "model",  # Megatron-SP: residual stream seq-sharded over TP
+        "d_model": None,
+        "ff": "model",
+        "heads": "model",
+        "kv_slot": "model",
+        "kv_heads": "model",
+        "vocab": "model",
+        "expert": "model",
+        "fsdp": "data",  # weight shards gathered per-layer (ZeRO-3)
+        "cache_len": None,
+    })
+
+
+def serve_rules(mesh: Mesh, long_context: bool = False,
+                weights_2d: bool = False) -> ShardingRules:
+    """Decode: batch over data, slots/ff over model.  Long-context (B==1):
+    the data axis shards the retained-KV capacity instead (split-S
+    flash-decode; the o-projection psum over 'data' recombines partials).
+
+    ``weights_2d``: additionally shard every weight's d_model-side dim over
+    the data axis (2D tensor parallelism).  Decode activations are tiny, so
+    the per-layer reshard collectives cost MBs while weight memory drops by
+    |data|× — required for ≥100B params on 16 GiB chips, and the main §Perf
+    lever for weight-read-bound decode.
+    """
+    axes = mesh.axis_names
+    batch = ("pod", "data") if "pod" in axes else ("data",)
+    rules = {
+        "batch": None if long_context else batch,
+        "seq": None,
+        "seq_act": None,
+        "d_model": None,
+        "ff": "model",
+        "heads": "model",
+        "kv_slot": "model",
+        "kv_heads": "model",
+        "vocab": "model",
+        "expert": "model",
+        "fsdp": None,
+        "fsdp_w": "data" if weights_2d else None,
+        "cache_len": batch if long_context else None,
+    }
+    return ShardingRules(mesh=mesh, rules=rules)

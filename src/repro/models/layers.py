@@ -1,0 +1,361 @@
+"""Shared model layers: norms, RoPE, attention (dense + chunked-flash), SwiGLU.
+
+All code is pure JAX (jnp + lax); sharding is injected via
+``repro.distributed.sharding.constrain`` on logical axis names.
+
+Numerics: matmuls run in the param dtype (bf16 in production configs);
+softmax / logsumexp accumulate in fp32.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import constrain
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    return cap * jnp.tanh(x / cap) if cap > 0 else x
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    freqs = rope_freqs(x.shape[-1], theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (training / prefill): dense and chunked-flash
+# ---------------------------------------------------------------------------
+
+
+def _causal_mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+                 window: int = 0) -> jnp.ndarray:
+    """(..., Q, K) bool mask; window > 0 adds a sliding-window lower bound."""
+    m = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window > 0:
+        m &= k_pos[..., None, :] > (q_pos[..., :, None] - window)
+    return m
+
+
+def dense_attention(
+    q: jnp.ndarray,  # (B, Q, Hq, Dh)
+    k: jnp.ndarray,  # (B, K, Hkv, Dh)
+    v: jnp.ndarray,  # (B, K, Hkv, Dh)
+    q_pos: jnp.ndarray,  # (B, Q)
+    k_pos: jnp.ndarray,  # (B, K)
+    window: int = 0,
+    attn_cap: float = 0.0,
+    kv_mask: Optional[jnp.ndarray] = None,  # (B, K) bool, False = masked out
+    causal: bool = True,
+) -> jnp.ndarray:
+    """Reference GQA attention with full score materialization."""
+    B, Q, Hq, Dh = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Q, Hkv, G, Dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(Dh)
+    scores = softcap(scores, attn_cap)
+    if causal:
+        mask = _causal_mask(q_pos, k_pos, window)  # (B, Q, K)
+    else:
+        mask = jnp.ones((B, Q, k.shape[1]), dtype=bool)
+    if kv_mask is not None:
+        mask &= kv_mask[:, None, :]
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # rows with no valid key (fully masked) produce uniform probs over garbage;
+    # zero them explicitly
+    any_valid = mask.any(axis=-1)[:, None, None, :, None]
+    probs = jnp.where(any_valid, probs, 0.0)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Q, Hq, Dh).astype(q.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (B, Q, Hq, Dh)
+    k: jnp.ndarray,  # (B, K, Hkv, Dh)
+    v: jnp.ndarray,  # (B, K, Hkv, Dh)
+    q_pos: jnp.ndarray,  # (B, Q)
+    k_pos: jnp.ndarray,  # (B, K)
+    window: int = 0,
+    attn_cap: float = 0.0,
+    kv_mask: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+    chunk: int = 1024,
+) -> jnp.ndarray:
+    """Online-softmax attention, scanning KV chunks: O(Q·chunk) memory.
+
+    Matches ``dense_attention`` to fp32 accumulation accuracy.
+    """
+    B, Q, Hq, Dh = q.shape
+    K = k.shape[1]
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    if K % chunk != 0:
+        pad = chunk - K % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+        pad_mask = jnp.zeros((B, pad), dtype=bool)
+        kv_mask = (jnp.concatenate([kv_mask, pad_mask], 1)
+                   if kv_mask is not None
+                   else jnp.concatenate([jnp.ones((B, K), bool), pad_mask], 1))
+        K += pad
+    n_chunks = K // chunk
+    qg = q.reshape(B, Q, Hkv, G, Dh).astype(jnp.float32)
+    kc = k.reshape(B, n_chunks, chunk, Hkv, Dh)
+    vc = v.reshape(B, n_chunks, chunk, Hkv, Dh)
+    pc = k_pos.reshape(B, n_chunks, chunk)
+    mc = (kv_mask.reshape(B, n_chunks, chunk) if kv_mask is not None
+          else jnp.ones((B, n_chunks, chunk), bool))
+
+    def body(carry, inp):
+        acc, m_run, l_run = carry
+        k_i, v_i, pos_i, mask_i = inp  # (B, chunk, Hkv, Dh), ..., (B, chunk)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg,
+                       k_i.astype(jnp.float32)) / math.sqrt(Dh)
+        s = softcap(s, attn_cap)
+        if causal:
+            msk = _causal_mask(q_pos, pos_i, window)
+        else:
+            msk = jnp.ones((B, Q, chunk), bool)
+        msk &= mask_i[:, None, :]
+        s = jnp.where(msk[:, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_run, s.max(axis=-1))
+        # explicit mask: a fully-masked chunk keeps m_new at NEG_INF, where
+        # exp(NEG_INF - NEG_INF) would be 1 — the mask zeroes it instead
+        p = jnp.where(msk[:, None, None], jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, v_i.astype(jnp.float32))
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, Hkv, G, Q, Dh), jnp.float32)
+    m0 = jnp.full((B, Hkv, G, Q), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Q), jnp.float32)
+    (acc, m_run, l_run), _ = lax.scan(
+        body, (acc0, m0, l0),
+        (kc.swapaxes(0, 1), vc.swapaxes(0, 1), pc.swapaxes(0, 1),
+         mc.swapaxes(0, 1)))
+    out = acc / jnp.maximum(l_run[..., None], 1e-30)
+    out = jnp.moveaxis(out, 3, 1)  # (B, Q, Hkv, G, Dh)
+    return out.reshape(B, Q, Hq, Dh).astype(q.dtype)
+
+
+def attention(q, k, v, q_pos, k_pos, *, window=0, attn_cap=0.0, kv_mask=None,
+              causal=True, flash_threshold=2048, chunk=1024):
+    """Dispatch dense vs chunked-flash on KV length."""
+    if k.shape[1] <= flash_threshold:
+        return dense_attention(q, k, v, q_pos, k_pos, window=window,
+                               attn_cap=attn_cap, kv_mask=kv_mask, causal=causal)
+    return flash_attention_vjp(q, k, v, q_pos, k_pos, window, attn_cap,
+                               causal, chunk)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention with a memory-efficient custom VJP.
+#
+# A plain lax.scan over KV chunks saves every chunk's probability matrix as a
+# linearization residual — O(Q·K) backward memory, defeating the point.  The
+# custom VJP saves only (q, k, v, out, m, l) and *recomputes* each chunk's
+# scores in the backward pass (the FlashAttention backward algorithm).
+# ---------------------------------------------------------------------------
+
+
+def _flash_fwd_core(q, k, v, q_pos, k_pos, window, attn_cap, causal, chunk):
+    """Forward returning (out, m, l); all fp32 internals, O(Q·chunk) memory."""
+    B, Q, Hq, Dh = q.shape
+    K, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    nc = K // chunk
+    qg = q.reshape(B, Q, Hkv, G, Dh).astype(jnp.float32)
+    kc = k.reshape(B, nc, chunk, Hkv, Dh)
+    vc = v.reshape(B, nc, chunk, Hkv, Dh)
+    pc = k_pos.reshape(B, nc, chunk)
+
+    def body(carry, inp):
+        acc, m_run, l_run = carry
+        k_i, v_i, pos_i = inp
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg,
+                       k_i.astype(jnp.float32)) / math.sqrt(Dh)
+        s = softcap(s, attn_cap)
+        msk = (_causal_mask(q_pos, pos_i, window) if causal
+               else jnp.ones((B, Q, chunk), bool))
+        s = jnp.where(msk[:, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_run, s.max(axis=-1))
+        p = jnp.where(msk[:, None, None], jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, v_i.astype(jnp.float32))
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, Hkv, G, Q, Dh), jnp.float32)
+    m0 = jnp.full((B, Hkv, G, Q), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Q), jnp.float32)
+    (acc, m, l), _ = lax.scan(
+        body, (acc0, m0, l0),
+        (kc.swapaxes(0, 1), vc.swapaxes(0, 1), pc.swapaxes(0, 1)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out, m, l  # out: (B, Hkv, G, Q, Dh)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def flash_attention_vjp(q, k, v, q_pos, k_pos, window, attn_cap, causal,
+                        chunk):
+    out, _, _ = _flash_fwd_padded(q, k, v, q_pos, k_pos, window, attn_cap,
+                                  causal, chunk)
+    B, Q, Hq, Dh = q.shape
+    return jnp.moveaxis(out, 3, 1).reshape(B, Q, Hq, Dh).astype(q.dtype)
+
+
+def _flash_fwd_padded(q, k, v, q_pos, k_pos, window, attn_cap, causal, chunk):
+    K = k.shape[1]
+    chunk = min(chunk, K)
+    if K % chunk != 0:
+        pad = chunk - K % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)),
+                        constant_values=jnp.iinfo(jnp.int32).max)
+    return _flash_fwd_core(q, k, v, q_pos, k_pos, window, attn_cap, causal,
+                           chunk)
+
+
+def _flash_vjp_fwd(q, k, v, q_pos, k_pos, window, attn_cap, causal, chunk):
+    out, m, l = _flash_fwd_padded(q, k, v, q_pos, k_pos, window, attn_cap,
+                                  causal, chunk)
+    B, Q, Hq, Dh = q.shape
+    o = jnp.moveaxis(out, 3, 1).reshape(B, Q, Hq, Dh).astype(q.dtype)
+    # store residuals seq-sharded (and o in the input dtype): the backward
+    # re-gathers k/v; per-layer residual memory drops |model|x
+    res = (
+        constrain(q, "batch", "seq_act", None, None),
+        constrain(k, "batch", "seq_act", None, None),
+        constrain(v, "batch", "seq_act", None, None),
+        q_pos, k_pos,
+        constrain(o, "batch", "seq_act", None, None),
+        constrain(m, "batch", None, None, "seq_act"),
+        constrain(l, "batch", None, None, "seq_act"),
+    )
+    return o, res
+
+
+def _flash_vjp_bwd(window, attn_cap, causal, chunk, res, do):
+    q, k, v, q_pos, k_pos, o_saved, m, l = res
+    k = constrain(k, "batch", None, None, None)  # re-gather for the K sweep
+    v = constrain(v, "batch", None, None, None)
+    B, Q, Hq, Dh = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    out = jnp.moveaxis(o_saved.reshape(B, Q, Hkv, G, Dh), 1, 3
+                       ).astype(jnp.float32)  # (B, Hkv, G, Q, Dh)
+    K_orig = k.shape[1]
+    chunk_ = min(chunk, K_orig)
+    Kp = -(-K_orig // chunk_) * chunk_
+    if Kp != K_orig:
+        pad = Kp - K_orig
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)),
+                        constant_values=jnp.iinfo(jnp.int32).max)
+    nc = Kp // chunk_
+    qg = q.reshape(B, Q, Hkv, G, Dh).astype(jnp.float32)
+    dog = do.reshape(B, Q, Hkv, G, Dh).astype(jnp.float32)
+    dog = jnp.moveaxis(dog, 1, 3)  # (B, Hkv, G, Q, Dh)
+    lsafe = jnp.maximum(l, 1e-30)
+    # D_i = Σ_d dout_i · out_i (out already normalized)
+    Dvec = (dog * out).sum(-1)  # (B, Hkv, G, Q)
+
+    kc = k.reshape(B, nc, chunk_, Hkv, Dh).swapaxes(0, 1)
+    vc = v.reshape(B, nc, chunk_, Hkv, Dh).swapaxes(0, 1)
+    pc = k_pos.reshape(B, nc, chunk_).swapaxes(0, 1)
+
+    def body(dq_acc, inp):
+        k_i, v_i, pos_i = inp
+        u = jnp.einsum("bqhgd,bkhd->bhgqk", qg,
+                       k_i.astype(jnp.float32)) / math.sqrt(Dh)
+        s = softcap(u, attn_cap)
+        msk = (_causal_mask(q_pos, pos_i, window) if causal
+               else jnp.ones((B, Q, chunk_), bool))
+        s_m = jnp.where(msk[:, None, None], s, NEG_INF)
+        p = jnp.where(msk[:, None, None],
+                      jnp.exp(s_m - m[..., None]), 0.0) / lsafe[..., None]
+        dv_i = jnp.einsum("bhgqk,bhgqd->bkhd", p, dog)
+        dp = jnp.einsum("bhgqd,bkhd->bhgqk", dog, v_i.astype(jnp.float32))
+        ds = p * (dp - Dvec[..., None])
+        if attn_cap > 0:  # softcap chain rule: d tanh
+            ds = ds * (1.0 - (s / attn_cap) ** 2)
+        dq_i = jnp.einsum("bhgqk,bkhd->bqhgd", ds,
+                          k_i.astype(jnp.float32)) / math.sqrt(Dh)
+        dk_i = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qg) / math.sqrt(Dh)
+        return dq_acc + dq_i, (dk_i, dv_i)
+
+    dq0 = jnp.zeros((B, Q, Hkv, G, Dh), jnp.float32)
+    dq, (dk_c, dv_c) = lax.scan(body, dq0, (kc, vc, pc))
+    dk = dk_c.swapaxes(0, 1).reshape(B, Kp, Hkv, Dh)[:, :K_orig]
+    dv = dv_c.swapaxes(0, 1).reshape(B, Kp, Hkv, Dh)[:, :K_orig]
+    dq = dq.reshape(B, Q, Hq, Dh)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            None, None)
+
+
+flash_attention_vjp.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def swiglu(x: jnp.ndarray, w1, w3, w2) -> jnp.ndarray:
+    from repro.serving.quant import deq
+    h = jax.nn.silu(x @ deq(w1)) * (x @ deq(w3))
+    h = constrain(h, "batch", "seq", "ff")
+    return h @ deq(w2)
+
+
+def embed(tokens: jnp.ndarray, table) -> jnp.ndarray:
+    from repro.serving.quant import QTensor
+    if isinstance(table, QTensor):
+        rows = jnp.take(table.q, tokens, axis=0).astype(jnp.float32)
+        scale = jnp.take(table.scale, jnp.minimum(tokens, table.scale.shape[0] - 1),
+                         axis=0) if table.scale.shape[0] > 1 else table.scale
+        return (rows * scale).astype(jnp.bfloat16)
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x: jnp.ndarray, table, cap: float = 0.0) -> jnp.ndarray:
+    from repro.serving.quant import deq
+    logits = jnp.einsum("bsd,vd->bsv", x, deq(table)).astype(jnp.float32)
+    return softcap(logits, cap)

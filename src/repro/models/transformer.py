@@ -1,0 +1,361 @@
+"""Model zoo: parameter init + block functions + training forward.
+
+One parameterization covers all 10 assigned archs; family-specific pieces
+(MoE FFN, SSD branch, cross-attention, stub frontends) are toggled by the
+``ModelConfig``.  All forwards are pure functions of (params, batch).
+
+Layer loop is an unrolled Python loop: compile times are fine up to 80
+layers (measured), and unrolled HLO makes the dry-run cost analysis exact
+(DESIGN.md §5).  Training wraps each layer in ``jax.checkpoint`` (remat).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.moe import init_moe_params, moe_block
+
+GLOBAL_WINDOW = 0  # sentinel: no sliding window
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _dense_attn_params(rng, cfg: ModelConfig, dtype) -> dict:
+    D, Hq, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(rng, 4)
+    s = 1.0 / math.sqrt(D)
+    p = {
+        "wq": (jax.random.normal(ks[0], (D, Hq, Dh)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (D, Hkv, Dh)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (D, Hkv, Dh)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (Hq, Dh, D)) * (1.0 / math.sqrt(Hq * Dh))).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((Hq, Dh), dtype)
+        p["bk"] = jnp.zeros((Hkv, Dh), dtype)
+        p["bv"] = jnp.zeros((Hkv, Dh), dtype)
+    return p
+
+
+def _mlp_params(rng, D: int, F: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "w1": (jax.random.normal(k1, (D, F)) / math.sqrt(D)).astype(dtype),
+        "w3": (jax.random.normal(k2, (D, F)) / math.sqrt(D)).astype(dtype),
+        "w2": (jax.random.normal(k3, (F, D)) / math.sqrt(F)).astype(dtype),
+    }
+
+
+def _ssm_params(rng, cfg: ModelConfig, dtype) -> dict:
+    s = cfg.ssm
+    D = cfg.d_model
+    d_in = s.d_inner
+    proj = 2 * d_in + 2 * s.n_groups * s.state_size + s.num_heads
+    conv_dim = d_in + 2 * s.n_groups * s.state_size
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "in_proj": (jax.random.normal(k1, (D, proj)) / math.sqrt(D)).astype(dtype),
+        "conv_w": (jax.random.normal(k2, (s.conv_width, conv_dim)) * 0.1).astype(dtype),
+        "A_log": jnp.zeros((s.num_heads,), jnp.float32),
+        "ssm_D": jnp.ones((s.num_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((s.num_heads,), jnp.float32),
+        "ssm_norm": jnp.zeros((d_in,), dtype),
+        "out_proj": (jax.random.normal(k3, (d_in, D)) / math.sqrt(d_in)).astype(dtype),
+    }
+
+
+def _layer_params(rng, cfg: ModelConfig, dtype, cross_attn: bool = False) -> dict:
+    D = cfg.d_model
+    keys = jax.random.split(rng, 8)
+    p: dict = {"ln1": jnp.zeros((D,), dtype), "ln2": jnp.zeros((D,), dtype)}
+    if not cfg.attention_free:
+        p.update(_dense_attn_params(keys[0], cfg, dtype))
+    if cfg.family in ("ssm", "hybrid"):
+        p.update(_ssm_params(keys[1], cfg, dtype))
+    if cfg.family == "hybrid":
+        # per-branch output norms (Hymba fuses mean of normed branches)
+        p["attn_out_norm"] = jnp.zeros((cfg.n_heads * cfg.head_dim,), dtype)
+        p["ssm_out_norm"] = jnp.zeros((cfg.ssm.d_inner,), dtype)
+    if cfg.moe.num_experts > 0:
+        p.update(init_moe_params(keys[2], cfg, dtype))
+    elif cfg.d_ff > 0:
+        p.update(_mlp_params(keys[3], D, cfg.d_ff, dtype))
+    if cross_attn:
+        ca = _dense_attn_params(keys[4], cfg, dtype)
+        p.update({f"c_{k}": v for k, v in ca.items()})
+        p["ln_cross"] = jnp.zeros((D,), dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, rng: jax.Array, dtype=jnp.bfloat16,
+                max_seq_len: int = 4096) -> dict:
+    """Original-layout parameters (heads unpermuted)."""
+    keys = jax.random.split(rng, cfg.n_layers + cfg.n_encoder_layers + 4)
+    D = cfg.d_model
+    params: dict = {
+        "embed": (jax.random.normal(keys[0], (cfg.padded_vocab, D)) * 0.02).astype(dtype),
+        "final_norm": jnp.zeros((D,), dtype),
+        "layers": [
+            _layer_params(keys[2 + i], cfg, dtype,
+                          cross_attn=cfg.is_encoder_decoder)
+            for i in range(cfg.n_layers)
+        ],
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = (jax.random.normal(keys[1], (cfg.padded_vocab, D)) * 0.02).astype(dtype)
+    if cfg.is_encoder_decoder:
+        base = 2 + cfg.n_layers
+        params["enc_layers"] = [
+            _layer_params(keys[base + i], cfg, dtype)
+            for i in range(cfg.n_encoder_layers)
+        ]
+        params["enc_final_norm"] = jnp.zeros((D,), dtype)
+        params["enc_pos"] = (jax.random.normal(
+            keys[-1], (cfg.encoder_seq_len, D)) * 0.02).astype(dtype)
+        params["dec_pos"] = (jax.random.normal(
+            keys[-2], (max_seq_len, D)) * 0.02).astype(dtype)
+    return params
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Blocks (shared by train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def layer_window(cfg: ModelConfig, layer_idx: int) -> int:
+    return cfg.sliding_window if cfg.layer_is_local(layer_idx) else GLOBAL_WINDOW
+
+
+def qkv_proj(pl: dict, h: jnp.ndarray, cfg: ModelConfig, prefix: str = ""):
+    """(B, T, D) → q (B,T,Hq,Dh), k/v (B,T,Hkv,Dh), pre-RoPE."""
+    from repro.serving.quant import deq
+    q = jnp.einsum("btd,dhx->bthx", h, deq(pl[prefix + "wq"]))
+    k = jnp.einsum("btd,dhx->bthx", h, deq(pl[prefix + "wk"]))
+    v = jnp.einsum("btd,dhx->bthx", h, deq(pl[prefix + "wv"]))
+    if cfg.qkv_bias and (prefix + "bq") in pl:
+        q = q + pl[prefix + "bq"]
+        k = k + pl[prefix + "bk"]
+        v = v + pl[prefix + "bv"]
+    return q, k, v
+
+
+def attn_block_full(
+    pl: dict,
+    h: jnp.ndarray,  # (B, T, D) normed input
+    positions: jnp.ndarray,  # (B, T)
+    cfg: ModelConfig,
+    layer_idx: int,
+    kv_mask: Optional[jnp.ndarray] = None,
+    return_kv: bool = False,
+):
+    """Full-sequence causal attention (train / prefill).  Returns
+    (attn_out_flat (B,T,Hq*Dh), (k_rot, v) if return_kv)."""
+    q, k, v = qkv_proj(pl, h, cfg)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    # sequence-parallel attention: scores shard over the query dim, so head
+    # counts need not divide the mesh (hymba's 25 heads, whisper's 12)
+    q = constrain(q, "batch", "seq_act", None, None)
+    k = constrain(k, "batch", None, None, None)
+    v = constrain(v, "batch", None, None, None)
+    out = L.attention(
+        q, k, v, positions, positions,
+        window=layer_window(cfg, layer_idx),
+        attn_cap=cfg.attn_softcap, kv_mask=kv_mask, causal=True)
+    B, T = h.shape[:2]
+    out = out.reshape(B, T, cfg.n_heads * cfg.head_dim)
+    return (out, (k, v)) if return_kv else (out, None)
+
+
+def cross_attn_block(pl: dict, h: jnp.ndarray, enc_kv: Tuple[jnp.ndarray, jnp.ndarray],
+                     cfg: ModelConfig) -> jnp.ndarray:
+    """Decoder cross-attention onto precomputed encoder K/V (no RoPE)."""
+    from repro.serving.quant import deq
+    B, T, D = h.shape
+    q = jnp.einsum("btd,dhx->bthx", h, deq(pl["c_wq"]))
+    k, v = enc_kv
+    T_enc = k.shape[1]
+    pos_q = jnp.zeros((B, T), jnp.int32)
+    pos_k = jnp.zeros((B, T_enc), jnp.int32)
+    out = L.attention(q, k, v, pos_q, pos_k, causal=False)
+    out = out.reshape(B, T, cfg.n_heads * cfg.head_dim)
+    return jnp.einsum("bte,ed->btd",
+                      out, deq(pl["c_wo"]).reshape(cfg.n_heads * cfg.head_dim, D))
+
+
+def o_proj(pl: dict, attn_flat: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    from repro.serving.quant import deq
+    D = cfg.d_model
+    wo = deq(pl["wo"]).reshape(cfg.n_heads * cfg.head_dim, D)
+    return jnp.einsum("bte,ed->btd", attn_flat, wo)
+
+
+def mlp_block(pl: dict, h: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if cfg.moe.num_experts > 0:
+        return moe_block(pl, h, cfg)
+    return L.swiglu(h, pl["w1"], pl["w3"], pl["w2"]), jnp.float32(0.0)
+
+
+def ssm_split(pl: dict, h: jnp.ndarray, cfg: ModelConfig):
+    """in_proj → (z, x_conv_input, B, C, dt) with shapes per SSD convention."""
+    s = cfg.ssm
+    d_in, G, N, H = s.d_inner, s.n_groups, s.state_size, s.num_heads
+    from repro.serving.quant import deq
+    proj = h @ deq(pl["in_proj"])  # (B, T, 2*d_in + 2*G*N + H)
+    z, xBC, dt_raw = jnp.split(proj, [d_in, d_in + d_in + 2 * G * N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + pl["dt_bias"])  # (B,T,H)
+    return z, xBC, dt
+
+
+def ssm_block_full(pl: dict, h: jnp.ndarray, cfg: ModelConfig,
+                   conv_state: Optional[jnp.ndarray] = None,
+                   init_state: Optional[jnp.ndarray] = None,
+                   return_state: bool = False):
+    """Full-sequence SSD branch.  Returns (out (B,T,D), (conv_state, ssm_state))."""
+    s = cfg.ssm
+    d_in, G, N, H, P = s.d_inner, s.n_groups, s.state_size, s.num_heads, s.head_dim
+    B, T, _ = h.shape
+    z, xBC, dt = ssm_split(pl, h, cfg)
+    xBC, conv_out_state = S.conv1d_causal(xBC, pl["conv_w"], conv_state)
+    xBC = jax.nn.silu(xBC)
+    x, B_, C_ = jnp.split(xBC, [d_in, d_in + G * N], axis=-1)
+    x = x.reshape(B, T, H, P)
+    B_ = B_.reshape(B, T, G, N)
+    C_ = C_.reshape(B, T, G, N)
+    y, state = S.ssd_chunked(x, dt, pl["A_log"], B_, C_, pl["ssm_D"],
+                             chunk=s.chunk_size, init_state=init_state)
+    y = y.reshape(B, T, d_in)
+    from repro.serving.quant import deq as _deq
+    y = L.rms_norm(y * jax.nn.silu(z), pl["ssm_norm"])  # gated norm
+    out = y @ _deq(pl["out_proj"])
+    if return_state:
+        return out, (conv_out_state, state)
+    return out, None
+
+
+# ---------------------------------------------------------------------------
+# Whole-layer application (training / prefill structure)
+# ---------------------------------------------------------------------------
+
+
+def apply_layer_full(
+    pl: dict,
+    h: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg: ModelConfig,
+    layer_idx: int,
+    enc_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    kv_mask: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One decoder layer, full-sequence.  Returns (h, aux_loss)."""
+    aux = jnp.float32(0.0)
+    hn = L.rms_norm(h, pl["ln1"], cfg.rms_eps)
+    # SP -> TP transition: gather seq shards before head/ff-parallel compute
+    hn = constrain(hn, "batch", None, None)
+    if cfg.family == "hybrid":
+        attn_flat, _ = attn_block_full(pl, hn, positions, cfg, layer_idx, kv_mask)
+        attn_out = o_proj(pl, L.rms_norm(attn_flat, pl["attn_out_norm"], cfg.rms_eps), cfg)
+        ssm_out, _ = ssm_block_full(pl, hn, cfg)
+        h = h + 0.5 * (attn_out + ssm_out)
+    elif cfg.family == "ssm":
+        ssm_out, _ = ssm_block_full(pl, hn, cfg)
+        h = h + ssm_out
+    elif not cfg.attention_free:
+        attn_flat, _ = attn_block_full(pl, hn, positions, cfg, layer_idx, kv_mask)
+        h = h + o_proj(pl, attn_flat, cfg)
+    if enc_kv is not None:
+        hc = L.rms_norm(h, pl["ln_cross"], cfg.rms_eps)
+        h = h + cross_attn_block(pl, hc, enc_kv, cfg)
+    if cfg.d_ff > 0 or cfg.moe.num_experts > 0:
+        hn2 = L.rms_norm(h, pl["ln2"], cfg.rms_eps)
+        hn2 = constrain(hn2, "batch", None, None)
+        mlp_out, aux = mlp_block(pl, hn2, cfg)
+        h = h + mlp_out
+    # TP -> SP transition: the stored residual boundary is seq-sharded
+    h = constrain(h, "batch", "seq_act", "d_model")
+    return h, aux
+
+
+def encode(params: dict, frames: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Whisper encoder over stub-frontend frame embeddings (B, T_enc, D)."""
+    h = frames + params["enc_pos"][None, : frames.shape[1]]
+    B, T = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    for i, pl in enumerate(params["enc_layers"]):
+        hn = L.rms_norm(h, pl["ln1"], cfg.rms_eps)
+        q, k, v = qkv_proj(pl, hn, cfg)
+        out = L.attention(q, k, v, positions, positions, causal=False)
+        h = h + o_proj(pl, out.reshape(B, T, -1), cfg)
+        hn2 = L.rms_norm(h, pl["ln2"], cfg.rms_eps)
+        h = h + L.swiglu(hn2, pl["w1"], pl["w3"], pl["w2"])
+    return L.rms_norm(h, params["enc_final_norm"], cfg.rms_eps)
+
+
+def encoder_cross_kv(params: dict, enc_out: jnp.ndarray, cfg: ModelConfig):
+    """Per-decoder-layer cross K/V from encoder output."""
+    kvs = []
+    for pl in params["layers"]:
+        from repro.serving.quant import deq
+        k = jnp.einsum("btd,dhx->bthx", enc_out, deq(pl["c_wk"]))
+        v = jnp.einsum("btd,dhx->bthx", enc_out, deq(pl["c_wv"]))
+        if cfg.qkv_bias and "c_bk" in pl:
+            k, v = k + pl["c_bk"], v + pl["c_bv"]
+        kvs.append((k, v))
+    return kvs
+
+
+def embed_inputs(params: dict, batch: Dict[str, jnp.ndarray],
+                 cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Token (+ stub-frontend) embedding.  Returns (h (B,S,D), positions)."""
+    tokens = batch["tokens"]
+    h = L.embed(tokens, params["embed"])
+    if cfg.name.startswith("gemma2"):
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+    if cfg.is_vlm:
+        h = jnp.concatenate([batch["image_embeds"].astype(h.dtype), h], axis=1)
+    if cfg.is_encoder_decoder:
+        T = h.shape[1]
+        h = h + params["dec_pos"][None, :T]
+    B, T = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    return h, positions
+
+
+def forward_train(params: dict, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+                  remat: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Causal-LM (or enc-dec) logits.  Returns (logits (B,S,V), aux_loss)."""
+    h, positions = embed_inputs(params, batch, cfg)
+    enc_kvs = None
+    if cfg.is_encoder_decoder:
+        enc_out = encode(params, batch["frames"], cfg)
+        enc_kvs = encoder_cross_kv(params, enc_out, cfg)
+    aux_total = jnp.float32(0.0)
+
+    def run_layer(pl, h, enc_kv, idx):
+        return apply_layer_full(pl, h, positions, cfg, idx, enc_kv)
+
+    for i, pl in enumerate(params["layers"]):
+        f = jax.checkpoint(partial(run_layer, idx=i)) if remat else partial(run_layer, idx=i)
+        h, aux = f(pl, h, enc_kvs[i] if enc_kvs is not None else None)
+        aux_total = aux_total + aux
+    h = L.rms_norm(h, params["final_norm"], cfg.rms_eps)
+    table = params.get("head", params["embed"])
+    logits = L.unembed(h, table, cfg.logit_softcap)
+    if cfg.is_vlm:  # image positions carry no next-token loss
+        logits = logits[:, batch["image_embeds"].shape[1]:]
+    return logits, aux_total

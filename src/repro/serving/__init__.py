@@ -1,0 +1,8 @@
+"""Serving runtime: prefill + compression + FairKV slot-layout decode."""
+from repro.serving.engine import (  # noqa: F401
+    ServeState,
+    decode_step,
+    first_weights,
+    prefill,
+    slotify_params,
+)

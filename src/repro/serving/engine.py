@@ -1,0 +1,441 @@
+"""Serving engine: prefill (+compression) → slot-layout cache → decode.
+
+The FairKV plan enters the runtime in two places:
+
+1. **Weight layout** — ``slotify_params`` permutes/replicates the attention
+   projections into slot layout once at load time: per layer,
+   ``wq: (S, D, G, Dh)``, ``wk/wv: (S, D, Dh)``, ``wo: (S, G, Dh, D)`` with
+   slot s carrying kv-head ``slot_head[l, s]`` (zeros for empty slots).  The
+   slot dim shards over the "model" mesh axis, so each shard physically owns
+   exactly the heads the planner gave it.
+
+2. **Cache ownership** — replicas split the batch by the strided owner rule;
+   unowned (slot, row) pairs keep ``lengths == 0`` forever, so their decode
+   output is exactly zero and the o-projection contraction over S (an
+   all-reduce across model shards) reassembles the full batch.
+
+The decode step is the paper's measured quantity; its attention inner loop is
+``kernels.ops.fairkv_decode`` (Pallas on TPU, jnp ref elsewhere).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cache.slot_cache import (
+    PlanArrays,
+    SlotCache,
+    append_token,
+    fill_from_selection,
+    init_cache,
+)
+from repro.compression.base import CompressionConfig
+from repro.compression.policies import select as policy_select
+from repro.configs.base import ModelConfig
+from repro.core.placement import HeadPlacement
+from repro.distributed.sharding import constrain
+from repro.kernels import ops as K
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models import transformer as M
+
+
+# ---------------------------------------------------------------------------
+# Serve state
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class ServeState:
+    cache: Optional[SlotCache]
+    ssm_state: Optional[jnp.ndarray]  # (L, B, H, P, N) fp32
+    conv_state: Optional[jnp.ndarray]  # (L, B, W-1, conv_dim)
+    cross_k: Optional[jnp.ndarray]  # (L, B, T_enc, Hkv, Dh)
+    cross_v: Optional[jnp.ndarray]
+    last_tokens: jnp.ndarray  # (B,)
+    decode_steps: jnp.ndarray  # scalar int32
+
+
+# ---------------------------------------------------------------------------
+# Slot-layout weights
+# ---------------------------------------------------------------------------
+
+
+def slotify_layer(pl: dict, slot_head: np.ndarray, cfg: ModelConfig) -> dict:
+    """Build slot-layout q/k/v/o (+bias) weights for one layer."""
+    G, Dh, D = cfg.q_per_kv, cfg.head_dim, cfg.d_model
+    S_ = slot_head.shape[0]
+    heads = np.maximum(slot_head, 0)
+    empty = slot_head < 0
+    wq = pl["wq"].reshape(D, cfg.n_kv_heads, G, Dh)
+    out = dict(pl)
+    q_s = jnp.take(wq, heads, axis=1).transpose(1, 0, 2, 3)  # (S, D, G, Dh)
+    k_s = jnp.take(pl["wk"], heads, axis=1).transpose(1, 0, 2)  # (S, D, Dh)
+    v_s = jnp.take(pl["wv"], heads, axis=1).transpose(1, 0, 2)
+    wo = pl["wo"].reshape(cfg.n_kv_heads, G, Dh, D)
+    o_s = jnp.take(wo, heads, axis=0)  # (S, G, Dh, D)
+    mask = jnp.asarray(~empty, q_s.dtype)
+    out["wq_s"] = q_s * mask[:, None, None, None]
+    out["wk_s"] = k_s * mask[:, None, None]
+    out["wv_s"] = v_s * mask[:, None, None]
+    out["wo_s"] = o_s * mask[:, None, None, None]
+    if cfg.qkv_bias and "bq" in pl:
+        bq = pl["bq"].reshape(cfg.n_kv_heads, G, Dh)
+        out["bq_s"] = jnp.take(bq, heads, axis=0) * mask[:, None, None]
+        out["bk_s"] = jnp.take(pl["bk"], heads, axis=0) * mask[:, None]
+        out["bv_s"] = jnp.take(pl["bv"], heads, axis=0) * mask[:, None]
+    if "attn_out_norm" in pl:  # hybrid: per-branch norm scale in slot layout
+        sc = pl["attn_out_norm"].reshape(cfg.n_kv_heads, G, Dh)
+        out["attn_out_norm_s"] = jnp.take(sc, heads, axis=0)  # (S, G, Dh)
+    for k in ("wq", "wk", "wv", "wo", "bq", "bk", "bv"):
+        out.pop(k, None)
+    return out
+
+
+def slotify_params(params: dict, plan: HeadPlacement, cfg: ModelConfig) -> dict:
+    """Serve-layout params: attention weights per plan; everything else kept."""
+    if cfg.attention_free:
+        return params
+    arrs = plan.as_arrays()["slot_head"]
+    out = dict(params)
+    out["layers"] = [
+        slotify_layer(pl, arrs[i], cfg) for i, pl in enumerate(params["layers"])
+    ]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def prefill(
+    serve_params: dict,
+    batch: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    plan: PlanArrays,
+    ccfg: CompressionConfig,
+    head_importance: Optional[np.ndarray] = None,
+) -> Tuple[ServeState, jnp.ndarray, jnp.ndarray]:
+    """Run the full prompt, compress each layer's KV into the slot cache.
+
+    Prefill attention runs in *original head layout* (slot layout only pays
+    off once per-head lengths diverge); q/k/v are recovered from the slot
+    weights of the replica-0 slots so only one weight copy is kept.
+
+    Returns (state, last_logits (B, V), lengths (L, Hkv, B) — the realized
+    per-head retained lengths, i.e. the paper's workload observable).
+    """
+    h, positions = M.embed_inputs(serve_params, batch, cfg)
+    B, T, D = h.shape
+    Hkv, G, Dh = cfg.n_kv_heads, cfg.q_per_kv, cfg.head_dim
+    n_layers = cfg.n_layers
+    cap = ccfg.static_capacity()
+
+    enc_kvs = None
+    cross_k = cross_v = None
+    if cfg.is_encoder_decoder:
+        enc_out = M.encode(serve_params, batch["frames"], cfg)
+        enc_kvs = M.encoder_cross_kv(serve_params, enc_out, cfg)
+        cross_k = jnp.stack([kv[0] for kv in enc_kvs])
+        cross_v = jnp.stack([kv[1] for kv in enc_kvs])
+
+    has_attn = not cfg.attention_free
+    cache = (init_cache(n_layers, plan.slot_head.shape[1], B, cap, Dh,
+                        dtype=h.dtype) if has_attn else None)
+    ssm_state = conv_state = None
+    if cfg.family in ("ssm", "hybrid"):
+        s = cfg.ssm
+        ssm_state = jnp.zeros((n_layers, B, s.num_heads, s.head_dim,
+                               s.state_size), jnp.float32)
+        conv_state = jnp.zeros(
+            (n_layers, B, s.conv_width - 1,
+             s.d_inner + 2 * s.n_groups * s.state_size), h.dtype)
+
+    lengths_all = []
+    W = min(ccfg.obs_window, T)
+    for i, pl in enumerate(serve_params["layers"]):
+        hn = L.rms_norm(h, pl["ln1"], cfg.rms_eps)
+        if cfg.family == "hybrid":
+            attn_flat, cache, lens = _prefill_attention(
+                pl, hn, positions, cfg, i, cache, plan, ccfg, W,
+                head_importance)
+            a = L.rms_norm(attn_flat, pl["attn_out_norm"], cfg.rms_eps)
+            attn_out = _slot_o_proj(pl, a, cfg, plan, i)
+            ssm_out, (cs, ss) = M.ssm_block_full(pl, hn, cfg, return_state=True)
+            conv_state = conv_state.at[i].set(cs)
+            ssm_state = ssm_state.at[i].set(ss)
+            h = h + 0.5 * (attn_out + ssm_out)
+            lengths_all.append(lens)
+        elif cfg.family == "ssm":
+            ssm_out, (cs, ss) = M.ssm_block_full(pl, hn, cfg, return_state=True)
+            conv_state = conv_state.at[i].set(cs)
+            ssm_state = ssm_state.at[i].set(ss)
+            h = h + ssm_out
+        else:
+            attn_flat, cache, lens = _prefill_attention(
+                pl, hn, positions, cfg, i, cache, plan, ccfg, W,
+                head_importance)
+            h = h + _slot_o_proj(pl, attn_flat, cfg, plan, i)
+            lengths_all.append(lens)
+        if enc_kvs is not None:
+            hc = L.rms_norm(h, pl["ln_cross"], cfg.rms_eps)
+            h = h + M.cross_attn_block(pl, hc, enc_kvs[i], cfg)
+        if cfg.d_ff > 0 or cfg.moe.num_experts > 0:
+            hn2 = L.rms_norm(h, pl["ln2"], cfg.rms_eps)
+            mlp_out, _ = M.mlp_block(pl, hn2, cfg)
+            h = h + mlp_out
+        h = constrain(h, "batch", "seq", "d_model")
+
+    h_last = L.rms_norm(h[:, -1:], serve_params["final_norm"], cfg.rms_eps)
+    table = serve_params.get("head", serve_params["embed"])
+    logits = L.unembed(h_last, table, cfg.logit_softcap)[:, 0]
+    if cache is not None:
+        cache = SlotCache(k=cache.k, v=cache.v, lengths=cache.lengths,
+                          pos=cache.pos,
+                          positions=jnp.full((B,), T, jnp.int32))
+    state = ServeState(
+        cache=cache, ssm_state=ssm_state, conv_state=conv_state,
+        cross_k=cross_k, cross_v=cross_v,
+        last_tokens=jnp.argmax(
+            logits[..., :cfg.vocab_size], axis=-1).astype(jnp.int32),
+        decode_steps=jnp.int32(0))
+    lengths = (jnp.stack(lengths_all) if lengths_all
+               else jnp.zeros((0, Hkv, B), jnp.int32))
+    return state, logits, lengths
+
+
+def _take0(w, idx):
+    """take along axis 0 through QTensor or plain array."""
+    from repro.serving.quant import QTensor
+    if isinstance(w, QTensor):
+        sc = (jnp.take(w.scale, idx, axis=0) if w.scale.shape[0] > 1
+              else w.scale)
+        return QTensor(q=jnp.take(w.q, idx, axis=0), scale=sc)
+    return jnp.take(w, idx, axis=0)
+
+
+def first_weights(pl: dict, plan: PlanArrays, layer_idx: int) -> dict:
+    """Recover original-layout q/k/v/o weights from each head's replica-0
+    slot (a cheap gather — no second weight copy is stored)."""
+    from repro.serving.quant import deq
+    fs = plan.first_slot[layer_idx]  # (Hkv,)
+    out = {
+        "wq": deq(_take0(pl["wq_s"], fs)),  # (Hkv, D, G, Dh)
+        "wk": deq(_take0(pl["wk_s"], fs)),  # (Hkv, D, Dh)
+        "wv": deq(_take0(pl["wv_s"], fs)),
+        "wo": deq(_take0(pl["wo_s"], fs)),  # (Hkv, G, Dh, D)
+    }
+    if "bq_s" in pl:
+        out["bq"] = jnp.take(pl["bq_s"], fs, axis=0)
+        out["bk"] = jnp.take(pl["bk_s"], fs, axis=0)
+        out["bv"] = jnp.take(pl["bv_s"], fs, axis=0)
+    return out
+
+
+def _prefill_attention(pl, hn, positions, cfg, layer_idx, cache, plan, ccfg,
+                       W, head_importance):
+    """Full attention + compression + slot-cache fill for one layer."""
+    B, T, D = hn.shape
+    Hkv, G, Dh = cfg.n_kv_heads, cfg.q_per_kv, cfg.head_dim
+    fw = first_weights(pl, plan, layer_idx)
+    q = jnp.einsum("btd,hdgx->bthgx", hn, fw["wq"])  # (B,T,Hkv,G,Dh)
+    k = jnp.einsum("btd,hdx->bthx", hn, fw["wk"])
+    v = jnp.einsum("btd,hdx->bthx", hn, fw["wv"])
+    if "bq" in fw:
+        q = q + fw["bq"]
+        k = k + fw["bk"]
+        v = v + fw["bv"]
+    q = q.reshape(B, T, Hkv * G, Dh)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    out = L.attention(q, k, v, positions, positions,
+                      window=M.layer_window(cfg, layer_idx),
+                      attn_cap=cfg.attn_softcap, causal=True)
+    out_flat = out.reshape(B, T, Hkv * G * Dh)
+
+    # --- compression ---------------------------------------------------------
+    q_obs = q[:, T - W:]
+    scores = K.snapkv_scores(q_obs, k, positions[:, T - W:], positions,
+                             attn_cap=cfg.attn_softcap)
+    from repro.compression.base import pool_scores
+    scores = pool_scores(scores, ccfg.pool)
+    window = M.layer_window(cfg, layer_idx)
+    if window > 0:
+        # sliding-window layers never need positions older than the window
+        pos = jnp.arange(T)
+        scores = jnp.where(pos[None, None, :] >= T - window, scores, -jnp.inf)
+    kw = {}
+    if ccfg.policy == "headkv" and head_importance is not None:
+        kw["head_importance"] = jnp.asarray(head_importance[layer_idx])
+    idx, keep = policy_select(ccfg.policy, scores, ccfg, layer_idx,
+                              cfg.n_layers, **kw)
+    cache = fill_from_selection(cache, layer_idx, k, v, idx, keep, plan)
+    return out_flat, cache, keep.transpose(1, 0)  # lens (Hkv, B)
+
+
+def _slot_o_proj(pl, attn_flat, cfg, plan, layer_idx):
+    """(B, T, Hkv·G·Dh) → (B, T, D) via the first-replica o weights."""
+    D = cfg.d_model
+    from repro.serving.quant import deq
+    fs = plan.first_slot[layer_idx]
+    wo = deq(_take0(pl["wo_s"], fs))
+    wo = wo.reshape(cfg.n_kv_heads * cfg.q_per_kv * cfg.head_dim, D)
+    return jnp.einsum("bte,ed->btd", attn_flat, wo)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def decode_step(
+    serve_params: dict,
+    state: ServeState,
+    cfg: ModelConfig,
+    plan: PlanArrays,
+    ccfg: CompressionConfig,
+    tokens: Optional[jnp.ndarray] = None,
+) -> Tuple[ServeState, jnp.ndarray]:
+    """One decode step for the whole batch.  Returns (state, logits (B, V))."""
+    tokens = state.last_tokens if tokens is None else tokens
+    B = tokens.shape[0]
+    h = L.embed(tokens[:, None], serve_params["embed"])  # (B, 1, D)
+    if cfg.name.startswith("gemma2"):
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+    positions = (state.cache.positions if state.cache is not None
+                 else state.decode_steps.astype(jnp.int32) + jnp.zeros((B,), jnp.int32))
+    if cfg.is_encoder_decoder:
+        h = h + serve_params["dec_pos"][positions][:, None]
+    cache, ssm_state, conv_state = state.cache, state.ssm_state, state.conv_state
+
+    for i, pl in enumerate(serve_params["layers"]):
+        hn = L.rms_norm(h, pl["ln1"], cfg.rms_eps)
+        if cfg.family == "hybrid":
+            attn_flat, cache = _decode_attention(pl, hn, positions, cfg, i,
+                                                 cache, plan, state.decode_steps,
+                                                 ccfg)
+            a = _slot_rms_norm(attn_flat, pl["attn_out_norm_s"],
+                               cfg.n_heads * cfg.head_dim, cfg.rms_eps)
+            attn_out = _decode_slot_o(pl, a, cfg)
+            ssm_out, ssm_state, conv_state = _decode_ssm(
+                pl, hn, cfg, i, ssm_state, conv_state)
+            h = h + 0.5 * (attn_out + ssm_out)
+        elif cfg.family == "ssm":
+            ssm_out, ssm_state, conv_state = _decode_ssm(
+                pl, hn, cfg, i, ssm_state, conv_state)
+            h = h + ssm_out
+        else:
+            attn_flat, cache = _decode_attention(pl, hn, positions, cfg, i,
+                                                 cache, plan, state.decode_steps,
+                                                 ccfg)
+            h = h + _decode_slot_o(pl, attn_flat, cfg)
+        if cfg.is_encoder_decoder:
+            hc = L.rms_norm(h, pl["ln_cross"], cfg.rms_eps)
+            h = h + M.cross_attn_block(
+                pl, hc, (state.cross_k[i], state.cross_v[i]), cfg)
+        if cfg.d_ff > 0 or cfg.moe.num_experts > 0:
+            hn2 = L.rms_norm(h, pl["ln2"], cfg.rms_eps)
+            mlp_out, _ = M.mlp_block(pl, hn2, cfg)
+            h = h + mlp_out
+        h = constrain(h, "batch", None, "d_model")
+
+    h = L.rms_norm(h, serve_params["final_norm"], cfg.rms_eps)
+    table = serve_params.get("head", serve_params["embed"])
+    logits = L.unembed(h, table, cfg.logit_softcap)[:, 0]  # (B, V)
+    if cache is not None:
+        cache = SlotCache(k=cache.k, v=cache.v, lengths=cache.lengths,
+                          pos=cache.pos, positions=cache.positions + 1)
+    new_state = ServeState(
+        cache=cache, ssm_state=ssm_state, conv_state=conv_state,
+        cross_k=state.cross_k, cross_v=state.cross_v,
+        last_tokens=jnp.argmax(
+            logits[..., :cfg.vocab_size], axis=-1).astype(jnp.int32),
+        decode_steps=state.decode_steps + 1)
+    return new_state, logits
+
+
+def _decode_attention(pl, hn, positions, cfg, layer_idx, cache, plan,
+                      decode_steps, ccfg):
+    """Slot-layout attention for one new token; appends to the cache."""
+    B = hn.shape[0]
+    G, Dh = cfg.q_per_kv, cfg.head_dim
+    from repro.serving.quant import deq
+    x = hn[:, 0]  # (B, D)
+    q = jnp.einsum("bd,sdgx->bsgx", x, deq(pl["wq_s"]))  # (B, S, G, Dh)
+    k_new = jnp.einsum("bd,sdx->bsx", x, deq(pl["wk_s"]))  # (B, S, Dh)
+    v_new = jnp.einsum("bd,sdx->bsx", x, deq(pl["wv_s"]))
+    if "bq_s" in pl:
+        q = q + pl["bq_s"]
+        k_new = k_new + pl["bk_s"][None]
+        v_new = v_new + pl["bv_s"][None]
+    # RoPE at each row's absolute position
+    q = _rope_slots(q, positions, cfg)
+    k_new = _rope_slots(k_new[:, :, None, :], positions, cfg)[:, :, 0, :]
+    own = plan.owner_mask(layer_idx, B)  # (S, B)
+    cache = append_token(cache, layer_idx, k_new.swapaxes(0, 1),
+                         v_new.swapaxes(0, 1), own, decode_steps,
+                         ring=max(1, ccfg.decode_margin),
+                         mode=ccfg.append_mode)
+    window = M.layer_window(cfg, layer_idx)
+    out = K.fairkv_decode(q, cache.k[layer_idx], cache.v[layer_idx],
+                          cache.lengths[layer_idx], attn_cap=cfg.attn_softcap,
+                          k_pos=cache.pos[layer_idx], q_pos=positions,
+                          window=window)
+    return out, cache  # (B, S, G, Dh)
+
+
+def _rope_slots(q, positions, cfg):
+    """RoPE over (B, S, G, Dh) at per-row positions."""
+    B, S_, G, Dh = q.shape
+    q2 = q.reshape(B, 1, S_ * G, Dh)  # one 'seq' position per row
+    q2 = L.apply_rope(q2, positions[:, None], cfg.rope_theta)
+    return q2.reshape(B, S_, G, Dh)
+
+
+def _slot_rms_norm(x, scale_slot, n_channels, eps):
+    """RMS norm over the slot layout (B, S, G, Dh).
+
+    Unowned-slot entries are exactly zero (fairkv_decode guarantees it), and
+    every head contributes through exactly one owned slot per row, so
+    Σx² over (S, G, Dh) equals the original-channel Σx²; the mean divides by
+    the *true* channel count (Hq·Dh), not the padded slot width.  Under
+    sharding the Σ over S is a (tiny) cross-shard psum.
+    """
+    xf = x.astype(jnp.float32)
+    ss = (xf * xf).sum(axis=(1, 2, 3), keepdims=True) / n_channels
+    return (xf * jax.lax.rsqrt(ss + eps)
+            * (1.0 + scale_slot.astype(jnp.float32))[None]).astype(x.dtype)
+
+
+def _decode_slot_o(pl, attn, cfg):
+    """(B, S, G, Dh) → (B, 1, D); contraction over S psums across shards."""
+    from repro.serving.quant import deq
+    out = jnp.einsum("bsgx,sgxd->bd", attn, deq(pl["wo_s"]))
+    return out[:, None]
+
+
+def _decode_ssm(pl, hn, cfg, layer_idx, ssm_state, conv_state):
+    s = cfg.ssm
+    d_in, G, N, H, P = s.d_inner, s.n_groups, s.state_size, s.num_heads, s.head_dim
+    B = hn.shape[0]
+    z, xBC, dt = M.ssm_split(pl, hn, cfg)  # (B, 1, ...)
+    cs = conv_state[layer_idx]  # (B, W-1, conv_dim)
+    xBC, new_cs = S.conv1d_causal(xBC, pl["conv_w"], cs)
+    xBC = jax.nn.silu(xBC)
+    x, B_, C_ = jnp.split(xBC[:, 0], [d_in, d_in + G * N], axis=-1)
+    y, new_ss = S.ssd_decode_step(
+        x.reshape(B, H, P), dt[:, 0], pl["A_log"],
+        B_.reshape(B, G, N), C_.reshape(B, G, N), pl["ssm_D"],
+        ssm_state[layer_idx])
+    y = y.reshape(B, 1, d_in)
+    y = L.rms_norm(y * jax.nn.silu(z), pl["ssm_norm"])
+    out = y @ pl["out_proj"]
+    return out, ssm_state.at[layer_idx].set(new_ss), conv_state.at[layer_idx].set(new_cs)

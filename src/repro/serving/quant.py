@@ -1,0 +1,89 @@
+"""Weight-only int8 quantization for serving (AWQ/Marlin-style, TPU-adapted).
+
+Symmetric per-output-channel int8 with a bf16 dequant at use: weight HBM
+residency and read bandwidth halve vs bf16 — decisive for ≥100B params on
+16 GiB chips (qwen1.5-110b: 13.9 GB/chip bf16 → 6.9 GB int8 at TP=16) and a
+direct reduction of the decode memory-roofline term.
+
+``QTensor`` is a pytree; ``deq`` materializes bf16 transiently per use (the
+XLA fusion keeps it in registers ahead of the MXU on TPU).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Union
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class QTensor:
+    q: jnp.ndarray  # int8, same shape as the original weight
+    scale: jnp.ndarray  # f32, broadcastable (per-out-channel)
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def dtype(self):
+        return jnp.bfloat16
+
+
+def quantize_weight(w: jnp.ndarray, channel_axis: int = -1) -> QTensor:
+    """Symmetric per-channel int8 along ``channel_axis``."""
+    wf = w.astype(jnp.float32)
+    reduce_axes = tuple(a for a in range(w.ndim)
+                        if a != (channel_axis % w.ndim))
+    amax = jnp.max(jnp.abs(wf), axis=reduce_axes, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
+    return QTensor(q=q, scale=scale)
+
+
+def deq(w: Union[QTensor, jnp.ndarray]) -> jnp.ndarray:
+    """Dequantize (or pass through a plain array)."""
+    if isinstance(w, QTensor):
+        return (w.q.astype(jnp.float32) * w.scale).astype(jnp.bfloat16)
+    return w
+
+
+# weights worth quantizing in the serve tree (big 2D+ projections)
+_QUANT_KEYS = {
+    "wq_s", "wk_s", "wv_s", "wo_s", "w1", "w2", "w3",
+    "we1", "we2", "we3", "in_proj", "out_proj", "embed", "head",
+    "c_wq", "c_wk", "c_wv", "c_wo", "wq", "wk", "wv", "wo",
+}
+# channel axis per key (the output/channel dim the scale attaches to)
+_CHANNEL_AXIS = {
+    "wq_s": 0, "wk_s": 0, "wv_s": 0, "wo_s": 3,
+    "w1": 1, "w3": 1, "w2": 1,
+    "we1": 2, "we3": 2, "we2": 2,
+    "in_proj": 1, "out_proj": 1, "embed": 0, "head": 0,
+    "c_wq": 1, "c_wk": 1, "c_wv": 1, "c_wo": 2,
+    "wq": 1, "wk": 1, "wv": 1, "wo": 2,
+}
+
+
+def quantize_serve_params(serve_params: Any) -> Any:
+    """Quantize the large projection weights of a serve-layout param tree."""
+
+    def walk(node):
+        if isinstance(node, dict):
+            return {k: (QTensor(*_q(v, k)) if k in _QUANT_KEYS and _is_big(v)
+                        else walk(v))
+                    for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        return node
+
+    def _is_big(v):
+        return hasattr(v, "ndim") and v.ndim >= 2 and v.size >= 1 << 16
+
+    def _q(v, k):
+        t = quantize_weight(v, _CHANNEL_AXIS.get(k, -1))
+        return t.q, t.scale
+
+    return walk(serve_params)

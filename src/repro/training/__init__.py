@@ -1,0 +1,26 @@
+"""Training substrate: optimizer, step, data, checkpointing, resilience."""
+from repro.training.checkpoint import (  # noqa: F401
+    AsyncCheckpointer,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.training.data import DataConfig, SyntheticLM  # noqa: F401
+from repro.training.optimizer import (  # noqa: F401
+    AdamWState,
+    OptimizerConfig,
+    adamw_update,
+    init_optimizer,
+    lr_schedule,
+)
+from repro.training.resilience import (  # noqa: F401
+    StragglerDetector,
+    SupervisorConfig,
+    TrainingSupervisor,
+)
+from repro.training.train_loop import (  # noqa: F401
+    cross_entropy,
+    loss_fn,
+    make_train_step,
+    train_step,
+)

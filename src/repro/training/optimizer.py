@@ -1,0 +1,102 @@
+"""AdamW with fp32 master weights, global-norm clipping, LR schedules.
+
+Pure JAX (no optax offline).  State layout keeps {master, mu, nu} in fp32
+(sharded like the params — the FSDP rules apply to the whole pytree) while
+the live params stay bf16, the standard mixed-precision training recipe.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray  # scalar int32
+    master: dict  # fp32 copy of params
+    mu: dict
+    nu: dict
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup → cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    frac = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    frac = jnp.clip(frac, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_optimizer(params) -> AdamWState:
+    f32 = lambda t: jax.tree.map(lambda x: x.astype(jnp.float32), t)
+    zeros = lambda t: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return AdamWState(step=jnp.zeros((), jnp.int32), master=f32(params),
+                      mu=zeros(params), nu=zeros(params))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    grads,  # same pytree as params (any float dtype)
+    state: AdamWState,
+    cfg: OptimizerConfig,
+) -> Tuple[dict, AdamWState, dict]:
+    """Returns (new_params (cast back to original dtypes), new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm > 0 else jnp.float32(1.0)
+    lr = lr_schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, w):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        w_new = w - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * w)
+        return m, v, w_new
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    flat_w = jax.tree.leaves(state.master)
+    new_m, new_v, new_w = [], [], []
+    for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w):
+        m2, v2, w2 = upd(g, m, v, w)
+        new_m.append(m2)
+        new_v.append(v2)
+        new_w.append(w2)
+    mu = jax.tree.unflatten(tdef, new_m)
+    nu = jax.tree.unflatten(tdef, new_v)
+    master = jax.tree.unflatten(tdef, new_w)
+    # live params keep their original dtypes
+    return master, AdamWState(step=step, master=master, mu=mu, nu=nu), {
+        "grad_norm": gnorm, "lr": lr}
+
+
+def cast_like(master, params_template):
+    return jax.tree.map(lambda w, p: w.astype(p.dtype), master, params_template)

@@ -1,0 +1,60 @@
+"""Training step: loss, grads, AdamW — pure function for pjit.
+
+Loss is next-token cross-entropy (+ MoE aux).  Logit softcap (gemma2) is
+inside the model.  The step is written params-functional so XLA can donate
+buffers: (params, opt_state, batch) → (params, opt_state, metrics).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import forward_train
+from repro.training.optimizer import (
+    AdamWState,
+    OptimizerConfig,
+    adamw_update,
+    cast_like,
+    init_optimizer,
+)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean next-token xent; logits (B, S, V) fp32, labels (B, S)."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return (logz - gold).mean()
+
+
+def loss_fn(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            remat: bool = True):
+    logits, aux = forward_train(params, batch, cfg, remat=remat)
+    tokens = batch["tokens"]
+    xent = cross_entropy(logits[:, :-1], tokens[:, 1:])
+    total = xent + cfg.moe.router_aux_coef * aux
+    return total, {"xent": xent, "aux": aux}
+
+
+def train_step(
+    params,
+    opt_state: AdamWState,
+    batch: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    ocfg: OptimizerConfig,
+    remat: bool = True,
+) -> Tuple[dict, AdamWState, Dict[str, jnp.ndarray]]:
+    (loss, parts), grads = jax.value_and_grad(
+        loss_fn, has_aux=True)(params, batch, cfg, remat)
+    master, opt_state, opt_metrics = adamw_update(grads, opt_state, ocfg)
+    new_params = cast_like(master, params)
+    metrics = {"loss": loss, **parts, **opt_metrics}
+    return new_params, opt_state, metrics
+
+
+def make_train_step(cfg: ModelConfig, ocfg: OptimizerConfig, remat: bool = True):
+    return partial(train_step, cfg=cfg, ocfg=ocfg, remat=remat)

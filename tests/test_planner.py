@@ -1,0 +1,136 @@
+"""FairKV planner: unit + hypothesis property tests on the plan invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    PlannerConfig,
+    build_plan,
+    synthetic_profile,
+)
+from repro.core.assignment import backtracking, greedy_lpt, local_search
+from repro.core.placement import layer_from_assignment
+
+
+# ---------------------------------------------------------------------------
+# assignment engines
+# ---------------------------------------------------------------------------
+
+
+def test_lpt_basic():
+    w = [10, 9, 8, 1, 1, 1]
+    a = greedy_lpt(w, 3, 2)
+    loads = sorted(sum(w[i] for i in s) for s in a)
+    assert loads == [9, 10, 11] or max(loads) <= 11
+
+
+def test_backtracking_beats_or_matches_lpt():
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        w = rng.integers(1, 100, size=10).astype(float)
+        lpt = greedy_lpt(list(w), 4, 4)
+        lpt_ms = max(sum(w[i] for i in s) for s in lpt)
+        _, bt_ms = backtracking(list(w), 4, 4, incumbent=lpt)
+        assert bt_ms <= lpt_ms + 1e-9
+
+
+def test_backtracking_optimal_small():
+    # known optimum: weights {5,4,3,3,3} on 2 shards -> makespan 9
+    w = [5.0, 4.0, 3.0, 3.0, 3.0]
+    _, ms = backtracking(w, 2, 5)
+    assert ms == pytest.approx(9.0)
+
+
+def test_shard_speeds_shift_load():
+    w = [10.0] * 8
+    a = greedy_lpt(w, 2, 8, shard_speeds=[1.0, 3.0])
+    # fast shard should get ~3x the items
+    assert len(a[1]) > len(a[0])
+
+
+# ---------------------------------------------------------------------------
+# plan invariants (Eq. 2 / Eq. 3 / distinct shards) under random profiles
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_heads=st.integers(2, 24),
+    n_shards=st.sampled_from([2, 4, 8, 16]),
+    n_layers=st.integers(1, 4),
+    skew=st.floats(0.1, 2.0),
+    mode=st.sampled_from(["sha", "fairkv_nodp", "fairkv_dp"]),
+    ch=st.integers(0, 8),
+)
+def test_plan_invariants(n_heads, n_shards, n_layers, skew, mode, ch):
+    prof = synthetic_profile(n_layers, n_heads, budget=256, skew=skew, seed=1)
+    slots = max(1, -(-n_heads // n_shards))
+    plan = build_plan(prof, n_shards,
+                      PlannerConfig(mode=mode, extra_copies=ch,
+                                    slots_per_shard=slots))
+    plan.validate()  # Eq.2 coverage, Eq.3 cap, distinct shards, replica idx
+    assert 0.0 < plan.efficiency(prof) <= 1.0 + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_heads=st.sampled_from([4, 5, 8]),
+    skew=st.floats(0.5, 1.5),
+)
+def test_fairkv_no_worse_than_sha(n_heads, skew):
+    """FairKV-DP's planned makespan never exceeds SHA's on the profile it
+    planned for (the paper's core claim, in expectation)."""
+    prof = synthetic_profile(8, n_heads, budget=512, skew=skew, seed=2)
+    sha = build_plan(prof, 16, PlannerConfig(mode="sha", slots_per_shard=1))
+    dp = build_plan(prof, 16, PlannerConfig(mode="fairkv_dp", extra_copies=4,
+                                            slots_per_shard=1))
+    assert dp.makespan(prof) <= sha.makespan(prof) * 1.001
+
+
+def test_ablation_ordering():
+    """Fig. 4: SHA <= NoDP <= DP in efficiency (on the planning profile)."""
+    prof = synthetic_profile(16, 8, budget=1024, skew=1.0, seed=3)
+    cfgs = {
+        "sha": PlannerConfig(mode="sha", slots_per_shard=1),
+        "nodp": PlannerConfig(mode="fairkv_nodp", slots_per_shard=1),
+        "dp": PlannerConfig(mode="fairkv_dp", extra_copies=8, slots_per_shard=1),
+    }
+    eff = {k: build_plan(prof, 16, c).efficiency(prof) for k, c in cfgs.items()}
+    assert eff["dp"] >= eff["nodp"] - 1e-9
+    assert eff["dp"] >= eff["sha"] - 1e-9
+
+
+def test_ch_monotone_efficiency():
+    """Fig. 5: efficiency is (weakly) monotone in the copied-head count."""
+    prof = synthetic_profile(4, 8, budget=1024, skew=1.2, seed=5)
+    effs = []
+    for ch in [0, 1, 2, 4, 8]:
+        plan = build_plan(prof, 16, PlannerConfig(
+            mode="fairkv_dp", extra_copies=ch, slots_per_shard=2))
+        effs.append(plan.efficiency(prof))
+    assert all(b >= a - 0.02 for a, b in zip(effs, effs[1:])), effs
+
+
+def test_serialization_roundtrip():
+    from repro.core.placement import HeadPlacement
+    prof = synthetic_profile(3, 8, budget=128, skew=1.0, seed=0)
+    plan = build_plan(prof, 4, PlannerConfig(mode="fairkv_dp", extra_copies=2))
+    plan2 = HeadPlacement.from_json(plan.to_json())
+    for a, b in zip(plan.layers, plan2.layers):
+        np.testing.assert_array_equal(a.slot_head, b.slot_head)
+        np.testing.assert_array_equal(a.replica_idx, b.replica_idx)
+        np.testing.assert_array_equal(a.replica_count, b.replica_count)
+
+
+def test_straggler_replan():
+    from repro.core import replan_for_stragglers
+    prof = synthetic_profile(8, 8, budget=512, skew=0.8, seed=4)
+    plan = build_plan(prof, 4, PlannerConfig(mode="fairkv_dp", extra_copies=4))
+    speeds = np.array([1.0, 1.0, 1.0, 0.5])  # shard 3 at half speed
+    replanned = replan_for_stragglers(prof, plan, speeds)
+    loads = replanned.per_shard_load(prof)
+    # slow shard receives the least load
+    assert loads[3] == pytest.approx(loads.min())
+    # heterogeneous makespan (load/speed) beats using the naive plan
+    naive = (plan.per_shard_load(prof) / speeds).max()
+    assert (loads / speeds).max() <= naive + 1e-9

@@ -1,0 +1,133 @@
+"""Training substrate: optimizer math, checkpoint/restart bit-exactness,
+elastic resharding, straggler detection, gradient compression."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke_config
+from repro.configs.base import InputShape
+from repro.models import init_params
+from repro.training import (
+    OptimizerConfig,
+    StragglerDetector,
+    SyntheticLM,
+    init_optimizer,
+    latest_step,
+    lr_schedule,
+    make_train_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.training.grad_compress import (
+    compress_tree,
+    decompress_tree,
+    ef_compress_leaf,
+    init_error_state,
+)
+
+
+def test_lr_schedule_shape():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_ratio=0.1)
+    lrs = [float(lr_schedule(cfg, jnp.int32(s))) for s in [0, 5, 10, 50, 100]]
+    assert lrs[0] < lrs[1] < lrs[2]  # warmup
+    assert lrs[2] == pytest.approx(1.0, rel=1e-3)
+    assert lrs[2] > lrs[3] > lrs[4]  # cosine decay
+    assert lrs[4] == pytest.approx(0.1, rel=1e-2)
+
+
+def _train_setup(arch="granite-3-2b"):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    opt = init_optimizer(params)
+    ocfg = OptimizerConfig(lr=1e-3, warmup_steps=2, total_steps=50)
+    step = jax.jit(make_train_step(cfg, ocfg, remat=True))
+    data = SyntheticLM(cfg, InputShape("t", 24, 2, "train"))
+    return params, opt, step, data
+
+
+def test_checkpoint_restart_bit_exact():
+    params, opt, step, data = _train_setup()
+    for s in range(3):
+        params, opt, _ = step(params, opt, data.get_batch(s))
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 3, {"params": params, "opt": opt})
+        assert latest_step(d) == 3
+        restored = restore_checkpoint(d, 3, {"params": params, "opt": opt})
+        pa, oa, _ = step(params, opt, data.get_batch(3))
+        pb, ob, _ = step(restored["params"], restored["opt"], data.get_batch(3))
+        for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_prune_and_latest():
+    params, opt, step, data = _train_setup()
+    with tempfile.TemporaryDirectory() as d:
+        for s in (1, 2, 3, 4):
+            save_checkpoint(d, s, {"p": jnp.zeros(3)}, keep=2)
+        assert latest_step(d) == 4
+        kept = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+        assert len(kept) == 2
+
+
+def test_checkpoint_shape_mismatch_raises():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, {"p": jnp.zeros((3,))})
+        with pytest.raises(ValueError):
+            restore_checkpoint(d, 1, {"p": jnp.zeros((4,))})
+
+
+def test_deterministic_data_replay():
+    cfg = get_smoke_config("minitron-8b")
+    d1 = SyntheticLM(cfg, InputShape("t", 32, 4, "train"))
+    d2 = SyntheticLM(cfg, InputShape("t", 32, 4, "train"))
+    for s in (0, 7, 123):
+        np.testing.assert_array_equal(np.asarray(d1.get_batch(s)["tokens"]),
+                                      np.asarray(d2.get_batch(s)["tokens"]))
+    assert not np.array_equal(np.asarray(d1.get_batch(0)["tokens"]),
+                              np.asarray(d1.get_batch(1)["tokens"]))
+
+
+def test_straggler_detector():
+    det = StragglerDetector(n_shards=4, min_samples=3, threshold=1.3)
+    for _ in range(2):
+        assert det.observe(np.array([1.0, 1.0, 1.0, 1.0])) is None
+    out = det.observe(np.array([1.0, 1.0, 1.0, 1.0]))
+    assert out is None  # uniform: no straggler
+    for _ in range(10):
+        out = det.observe(np.array([1.0, 1.0, 1.0, 2.5]))
+    assert out is not None
+    assert out[3] < 0.6  # slow shard speed factor
+    assert out[0] == pytest.approx(1.0, abs=0.05)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_int8_ef_quant_bounded_error(seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(64,)) * rng.uniform(0.1, 10), jnp.float32)
+    q, scale, err = ef_compress_leaf(g, jnp.zeros_like(g))
+    deq = q.astype(jnp.float32) * scale
+    # per-element error bounded by half a quantization step
+    assert float(jnp.abs(deq + err - g).max()) < 1e-5
+    assert float(jnp.abs(err).max()) <= float(scale) * 0.5 + 1e-6
+
+
+def test_error_feedback_accumulates():
+    """With EF, the *running sum* of dequantized grads tracks the true sum."""
+    rng = np.random.default_rng(0)
+    true_sum = np.zeros(32)
+    deq_sum = np.zeros(32)
+    err = init_error_state({"g": jnp.zeros(32)})
+    for _ in range(50):
+        g = rng.normal(size=32).astype(np.float32) * 0.01
+        true_sum += g
+        q, s, err = compress_tree({"g": jnp.asarray(g)}, err)
+        deq_sum += np.asarray(decompress_tree(q, s)["g"])
+    resid = np.abs(deq_sum - true_sum).max()
+    assert resid < 0.01 * 0.5 + 1e-4  # bounded by one step's quant error
