@@ -1,0 +1,93 @@
+"""Figure 6 (repo extension): continuous-batching throughput under load.
+
+Drives the real scheduler (`repro.serving.scheduler`) — admission, interleaved
+decode, retirement — over an identical Poisson request trace for the ``sha``
+and ``fairkv_dp`` planners on a smoke model, and reports end-to-end tokens/s
+plus p50/p99 request latency (in scheduler steps and wall seconds).
+
+This measures the *system* path the paper's 1.66× claim lives on: sustained
+multi-request load against the slot cache, not a single fixed batch.  On CPU
+the absolute tok/s is compile-dominated; the latency-step percentiles and the
+sha-vs-fairkv comparison are the meaningful outputs.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.compression.base import CompressionConfig
+from repro.configs import get_smoke_config
+from repro.core import PlannerConfig, build_plan, synthetic_profile
+from repro.models import init_params
+from repro.serving import (
+    Scheduler,
+    SchedulerConfig,
+    latency_percentiles,
+    synthesize_requests,
+)
+
+ARCH = "minitron-8b"
+N_REQUESTS = 8
+RATE = 0.5  # arrivals per decode step
+ROWS = 2
+GEN = 8
+SHARDS = 4
+BUDGET = 16
+
+
+def run_one(planner: str, cfg, params, ccfg) -> dict:
+    prof = synthetic_profile(cfg.n_layers, cfg.n_kv_heads, budget=BUDGET,
+                             skew=1.0, seed=1)
+    pcfg = PlannerConfig(mode=planner, extra_copies=4, batch_cap=ROWS)
+    plan = build_plan(prof, SHARDS, pcfg)
+    scfg = SchedulerConfig(max_rows=ROWS, enable_replan=False)
+    sched = Scheduler(cfg, params, plan, ccfg, scfg, planner_cfg=pcfg)
+    # compile this instance's decode step outside the timed region (each
+    # Scheduler wraps its own jax.jit; an all-inactive step has the same
+    # signature as live ones and is a no-op on state)
+    sched._decode(sched.state, sched.active_mask())
+    # fresh Request objects per arm: the scheduler mutates them in place
+    reqs = synthesize_requests(N_REQUESTS, RATE, cfg.vocab_size,
+                               min_prompt=12, max_prompt=24,
+                               max_new_tokens=GEN, seed=0)
+    t0 = time.time()
+    out = sched.run(reqs, max_steps=2000)
+    out["wall_s"] = time.time() - t0
+    out["pct"] = latency_percentiles(sched.finished)
+    out["imbalance"] = sched.imbalance()
+    assert out["finished"] == out["total"], out
+    return out
+
+
+def main():
+    cfg = get_smoke_config(ARCH)
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32,
+                         max_seq_len=24 + GEN + 8)
+    ccfg = CompressionConfig(policy="ada_snapkv", budget=BUDGET,
+                             alpha_max=2.0, obs_window=8, sink=2,
+                             decode_margin=8)
+    # warmup: populate the op-dispatch/compile caches so neither timed arm
+    # pays the one-time tracing cost (CPU runs are otherwise compile-bound)
+    run_one("sha", cfg, params, ccfg)
+    results = {}
+    for planner in ("sha", "fairkv_dp"):
+        r = run_one(planner, cfg, params, ccfg)
+        results[planner] = r
+        pct = r["pct"]
+        print(f"fig6/{ARCH}/{planner},{r['wall_s'] * 1e6:.0f},"
+              f"tokens_per_s={r['generated_tokens'] / r['wall_s']:.2f};"
+              f"p50_steps={pct['p50_steps']:.0f};"
+              f"p99_steps={pct['p99_steps']:.0f};"
+              f"p50_s={pct['p50_s']:.3f};p99_s={pct['p99_s']:.3f};"
+              f"steps={r['steps']};"
+              f"mid_stream_admissions={r['mid_stream_admissions']}")
+    gain = (results["fairkv_dp"]["generated_tokens"]
+            / results["fairkv_dp"]["wall_s"]) / (
+        results["sha"]["generated_tokens"] / results["sha"]["wall_s"])
+    print(f"fig6/gain_dp_over_sha,0,gain={gain:.3f}")
+
+
+if __name__ == "__main__":
+    main()

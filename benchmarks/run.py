@@ -15,6 +15,7 @@ def main() -> None:
         fig3_throughput_gain,
         fig4_ablation,
         fig5_dp_size,
+        fig6_continuous_throughput,
         table1_cosine_similarity,
         table2_gpu_utilization,
         table3_quality_proxy,
@@ -27,6 +28,7 @@ def main() -> None:
         ("fig3", fig3_throughput_gain.main),
         ("fig4", fig4_ablation.main),
         ("fig5", fig5_dp_size.main),
+        ("fig6", fig6_continuous_throughput.main),
         ("table3", table3_quality_proxy.main),
     ]
     failed = []

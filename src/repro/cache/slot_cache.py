@@ -67,10 +67,28 @@ class PlanArrays:
 
     def owner_mask(self, layer: int, batch: int) -> jnp.ndarray:
         """(S, B) bool — slot owns row."""
-        rows = jnp.arange(batch, dtype=jnp.int32)[None, :]
+        return self.owner_mask_rows(layer, jnp.arange(batch, dtype=jnp.int32))
+
+    def owner_mask_rows(self, layer: int, rows: jnp.ndarray) -> jnp.ndarray:
+        """(S, len(rows)) bool ownership for explicit *global* row ids.
+
+        The strided owner rule keys on the global batch-row index, so a
+        sub-batch (e.g. a freshly admitted request prefilled alone) must be
+        masked with the rows it will occupy in the live cache, not with
+        ``arange(sub_batch)`` — otherwise its KV lands on the wrong replica.
+        """
+        rows = jnp.asarray(rows, jnp.int32)[None, :]
         rc = self.replica_count[layer][:, None]
         ri = self.replica_idx[layer][:, None]
         valid = (self.slot_head[layer] >= 0)[:, None]
+        return valid & ((rows % rc) == ri)
+
+    def owner_mask_all(self, batch: int) -> jnp.ndarray:
+        """(L, S, B) bool — vectorized owner_mask over every layer."""
+        rows = jnp.arange(batch, dtype=jnp.int32)[None, None, :]
+        rc = self.replica_count[:, :, None]
+        ri = self.replica_idx[:, :, None]
+        valid = (self.slot_head >= 0)[:, :, None]
         return valid & ((rows % rc) == ri)
 
 
@@ -180,12 +198,19 @@ def fill_from_selection(
     sel_idx: jnp.ndarray,  # (B, Hkv, C) selected positions into T
     sel_len: jnp.ndarray,  # (B, Hkv) int32 retained counts (<= C)
     plan: PlanArrays,
+    rows: Optional[jnp.ndarray] = None,  # (B,) global row ids for ownership
 ) -> SlotCache:
-    """Scatter the compression-selected prefill KV into slot layout."""
+    """Scatter the compression-selected prefill KV into slot layout.
+
+    ``rows`` overrides the global row ids used by the strided owner rule —
+    required when prefilling a sub-batch destined for specific rows of a
+    larger live cache (continuous batching admission, DESIGN.md §7).
+    """
     L, S, B, C, Dh = cache.k.shape
     heads = plan.slot_head[layer]  # (S,)
     safe_heads = jnp.maximum(heads, 0)
-    own = plan.owner_mask(layer, B)  # (S, B)
+    own = (plan.owner_mask(layer, B) if rows is None
+           else plan.owner_mask_rows(layer, rows))  # (S, B)
     # per-slot gather: idx (S, B, C) over T
     idx = jnp.take(sel_idx, safe_heads, axis=1).transpose(1, 0, 2)  # (S, B, C)
 
@@ -224,5 +249,117 @@ def fill_from_selection(
         v=cache.v.at[layer].set(v_sel),
         lengths=cache.lengths.at[layer].set(lens),
         pos=cache.pos.at[layer].set(pos_sel),
+        positions=cache.positions,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Row-level ops (continuous batching, DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+
+def rows_to_mask(rows, batch: int) -> jnp.ndarray:
+    """(B,) bool mask from int row indices (bool input passes through)."""
+    rows = jnp.asarray(rows)
+    if rows.dtype == jnp.bool_:
+        return rows
+    return jnp.zeros((batch,), jnp.bool_).at[rows].set(True)
+
+
+def reset_rows(cache: SlotCache, rows) -> SlotCache:
+    """Retire batch rows: zero K/V and ``lengths``, invalidate ``pos``, and
+    reset ``positions`` for every (layer, slot) of the given rows.
+
+    ``rows`` is a (B,) bool mask or an int index array.  A reset row's decode
+    output is exactly zero (the kernel masks by length), so retired rows ride
+    along in the batched decode step for free until re-admission.
+    """
+    B = cache.k.shape[2]
+    m = rows_to_mask(rows, B)
+    return SlotCache(
+        k=jnp.where(m[None, None, :, None, None], 0, cache.k),
+        v=jnp.where(m[None, None, :, None, None], 0, cache.v),
+        lengths=jnp.where(m[None, None, :], 0, cache.lengths),
+        pos=jnp.where(m[None, None, :, None], -1, cache.pos),
+        positions=jnp.where(m, 0, cache.positions),
+    )
+
+
+def insert_rows(cache: SlotCache, sub: SlotCache, rows: jnp.ndarray) -> SlotCache:
+    """Splice a freshly prefilled sub-cache into the live cache.
+
+    ``sub`` has batch ``len(rows)`` and must share (L, S, C, Dh) with
+    ``cache``; its contents fully replace the target rows (lengths, pos and
+    per-row ``positions`` included).  The sub-cache must have been filled with
+    ownership computed at the *target* global row ids
+    (``fill_from_selection(..., rows=rows)``), or replicas will disagree about
+    who owns the spliced rows.
+    """
+    L, S, B, C, Dh = cache.k.shape
+    if sub.k.shape[0] != L or sub.k.shape[1] != S or sub.k.shape[3:] != (C, Dh):
+        raise ValueError(
+            f"sub-cache layout {sub.k.shape} incompatible with {cache.k.shape}")
+    rows = jnp.asarray(rows, jnp.int32)
+    return SlotCache(
+        k=cache.k.at[:, :, rows].set(sub.k.astype(cache.k.dtype)),
+        v=cache.v.at[:, :, rows].set(sub.v.astype(cache.v.dtype)),
+        lengths=cache.lengths.at[:, :, rows].set(sub.lengths),
+        pos=cache.pos.at[:, :, rows].set(sub.pos),
+        positions=cache.positions.at[rows].set(sub.positions),
+    )
+
+
+def gather_head_layout(cache: SlotCache, plan: PlanArrays):
+    """Slot layout → original head layout.
+
+    Returns ``(k, v, lengths, pos)`` with shapes ``(L, H, B, C, Dh)`` /
+    ``(L, H, B)`` / ``(L, H, B, C)``.  Every (head, row) pair has exactly one
+    owning slot (replicas partition the batch), so a masked sum over slots
+    recovers the unique per-head entry.
+    """
+    L, S, B, C, Dh = cache.k.shape
+    H = int(plan.first_slot.shape[1])
+    own = plan.owner_mask_all(B)  # (L, S, B)
+    onehot = (plan.slot_head[:, :, None]
+              == jnp.arange(H, dtype=jnp.int32)[None, None, :])  # (L, S, H)
+    ow = own.astype(jnp.float32)
+    oh = onehot.astype(jnp.float32)
+    k = jnp.einsum("lsh,lsb,lsbcd->lhbcd", oh, ow, cache.k.astype(jnp.float32))
+    v = jnp.einsum("lsh,lsb,lsbcd->lhbcd", oh, ow, cache.v.astype(jnp.float32))
+    lens = jnp.einsum("lsh,lsb,lsb->lhb", oh, ow,
+                      cache.lengths.astype(jnp.float32))
+    pos = jnp.einsum("lsh,lsb,lsbc->lhbc", oh, ow,
+                     cache.pos.astype(jnp.float32))
+    return (k.astype(cache.k.dtype), v.astype(cache.v.dtype),
+            lens.astype(jnp.int32), jnp.round(pos).astype(jnp.int32))
+
+
+def migrate_cache(cache: SlotCache, old_plan: PlanArrays,
+                  new_plan: PlanArrays) -> SlotCache:
+    """Re-layout a live cache for a new HeadPlacement (online replanning).
+
+    Gathers the cache back to original head layout under ``old_plan``, then
+    scatters it into the slot/ownership layout of ``new_plan``.  Capacity and
+    the slot-grid width must match (replans keep ``slots_per_shard`` fixed);
+    row ``positions`` are plan-independent and carried through unchanged.
+    """
+    L, S, B, C, Dh = cache.k.shape
+    if new_plan.slot_head.shape != old_plan.slot_head.shape:
+        raise ValueError(
+            f"plan slot grids differ: {old_plan.slot_head.shape} vs "
+            f"{new_plan.slot_head.shape}")
+    k_h, v_h, len_h, pos_h = gather_head_layout(cache, old_plan)
+    heads = jnp.maximum(new_plan.slot_head, 0)  # (L, S)
+    own = new_plan.owner_mask_all(B)  # (L, S, B)
+    idx = heads[:, :, None, None, None]
+    k_s = jnp.take_along_axis(k_h, idx, axis=1)  # (L, S, B, C, Dh)
+    v_s = jnp.take_along_axis(v_h, idx, axis=1)
+    len_s = jnp.take_along_axis(len_h, heads[:, :, None], axis=1)
+    pos_s = jnp.take_along_axis(pos_h, heads[:, :, None, None], axis=1)
+    return SlotCache(
+        k=jnp.where(own[..., None, None], k_s, 0),
+        v=jnp.where(own[..., None, None], v_s, 0),
+        lengths=jnp.where(own, len_s, 0).astype(jnp.int32),
+        pos=jnp.where(own[..., None], pos_s, -1),
         positions=cache.positions,
     )

@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import compiler_params
+
 NEG_INF = -1e30
 
 
@@ -170,7 +172,7 @@ def fairkv_decode_pallas(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, S, G, Dh), q.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(lengths, q_pos, q, k, v, k_pos)
     return out

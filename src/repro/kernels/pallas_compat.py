@@ -1,0 +1,19 @@
+"""Version shims for jax.experimental.pallas TPU APIs.
+
+jax renamed ``TPUCompilerParams`` to ``CompilerParams``; support both and
+fail with a message naming the missing symbol rather than a late
+``'NoneType' object is not callable``.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def compiler_params(**kwargs):
+    cp = (getattr(pltpu, "CompilerParams", None)
+          or getattr(pltpu, "TPUCompilerParams", None))
+    if cp is None:
+        raise ImportError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+            "TPUCompilerParams; unsupported jax version")
+    return cp(**kwargs)

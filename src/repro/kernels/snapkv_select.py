@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import compiler_params
+
 NEG_INF = -1e30
 
 
@@ -146,7 +148,7 @@ def snapkv_scores_pallas(
         out_shape=jax.ShapeDtypeStruct((B, Hkv, n_blocks * block_t),
                                        jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(obs_positions, qt.reshape(B * Hkv, W * G, Dh),
       k.transpose(0, 2, 1, 3), k_positions)

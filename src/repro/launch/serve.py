@@ -1,8 +1,15 @@
 """Serving driver: ``python -m repro.launch.serve --arch <id> [--smoke]``.
 
-Prefill + compression (Ada-SnapKV by default) → FairKV plan → slot-layout
-decode.  Prints per-step latency, the realized per-head budget imbalance,
-the plan's efficiency E, and the generated tokens.
+Default (one-shot) mode: prefill + compression (Ada-SnapKV by default) →
+FairKV plan → slot-layout decode over a fixed batch.  Prints per-step
+latency, the realized per-head budget imbalance, the plan's efficiency E,
+and the generated tokens.
+
+``--continuous`` mode drives the continuous-batching scheduler instead
+(DESIGN.md §7): a Poisson trace of requests (``--rate`` arrivals per decode
+step, ``--requests`` total) flows through admission → interleaved decode →
+retirement, with online replanning when the realized per-shard KV imbalance
+drifts.  Prints per-request latency, p50/p99, and the replan log.
 """
 from __future__ import annotations
 
@@ -19,8 +26,76 @@ from repro.configs import get_config, get_smoke_config
 from repro.configs.base import InputShape
 from repro.core import PlannerConfig, build_plan, profile_from_lengths, synthetic_profile
 from repro.models import init_params
-from repro.serving import decode_step, prefill, slotify_params
+from repro.serving import (
+    Scheduler,
+    SchedulerConfig,
+    decode_step,
+    latency_percentiles,
+    prefill,
+    slotify_params,
+    synthesize_requests,
+)
 from repro.training.data import SyntheticLM
+
+
+def run_continuous(args) -> None:
+    """Poisson-trace continuous batching on the scheduler."""
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    dtype = jnp.float32 if args.smoke else jnp.bfloat16
+    max_prompt = max(args.min_prompt, args.max_prompt)
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=dtype,
+                         max_seq_len=max_prompt + args.gen + 8)
+    ccfg = CompressionConfig(policy=args.policy, budget=args.budget,
+                             alpha_max=2.0, obs_window=8, sink=2,
+                             decode_margin=max(8, args.gen))
+    if cfg.attention_free:
+        pcfg = PlannerConfig(mode="sha", slots_per_shard=1)
+        plan = build_plan(np.ones((cfg.n_layers, 1)), 1, pcfg)
+    else:
+        prof = synthetic_profile(cfg.n_layers, cfg.n_kv_heads,
+                                 budget=args.budget, skew=1.0, seed=1)
+        pcfg = PlannerConfig(mode=args.planner, extra_copies=args.copies,
+                             batch_cap=args.rows)
+        plan = build_plan(prof, args.shards, pcfg)
+    scfg = SchedulerConfig(
+        max_rows=args.rows,
+        max_live_tokens=args.max_live_tokens or None,
+        replan_window=args.replan_window,
+        replan_threshold=args.replan_threshold,
+        replan_cooldown=args.replan_cooldown,
+        enable_replan=not args.no_replan,
+    )
+    sched = Scheduler(cfg, params, plan, ccfg, scfg, planner_cfg=pcfg,
+                      dtype=dtype)
+    reqs = synthesize_requests(args.requests, args.rate, cfg.vocab_size,
+                               min_prompt=args.min_prompt,
+                               max_prompt=max_prompt,
+                               max_new_tokens=args.gen, seed=args.seed)
+    print(f"continuous: {len(reqs)} requests, rate {args.rate}/step, "
+          f"{args.rows} rows, planner {args.planner}")
+    out = sched.run(reqs, max_steps=args.max_steps)
+    for r in sched.finished:
+        print(f"req {r.req_id}: prompt {r.prompt_len:3d} | arrive "
+              f"{r.arrival_step:3d} admit {r.admit_step:3d} finish "
+              f"{r.finish_step:3d} | queued {r.queueing_steps():2d} steps | "
+              f"{r.n_generated} tokens")
+    pct = latency_percentiles(sched.finished)
+    print(f"steps {out['steps']} | {out['generated_tokens']} tokens in "
+          f"{out['wall_s']:.1f}s = {out['tokens_per_s']:.1f} tok/s | "
+          f"latency p50 {pct.get('p50_steps', float('nan')):.0f} / p99 "
+          f"{pct.get('p99_steps', float('nan')):.0f} steps")
+    print(f"mid-stream admissions: {out['mid_stream_admissions']} | "
+          f"replans: {out['replans']}")
+    for ev in out["replan_log"]:
+        tag = "accepted" if ev["accepted"] else "rejected"
+        print(f"  replan @ step {ev['step']} ({tag}): imbalance "
+              f"{ev['imbalance_before']:.3f} -> {ev['imbalance_after']:.3f}")
+    if out["finished"] != out["total"]:
+        raise RuntimeError(
+            f"only {out['finished']}/{out['total']} requests finished")
+    if args.smoke and out["mid_stream_admissions"] < 1:
+        raise RuntimeError("smoke trace produced no mid-stream admission — "
+                           "raise --requests or lower --rows")
 
 
 def main() -> None:
@@ -37,7 +112,30 @@ def main() -> None:
     ap.add_argument("--shards", type=int, default=4,
                     help="logical model shards for the plan")
     ap.add_argument("--copies", type=int, default=4, help="CH")
+    # --- continuous batching -------------------------------------------------
+    ap.add_argument("--continuous", action="store_true",
+                    help="run the continuous-batching scheduler on a "
+                         "Poisson request trace")
+    ap.add_argument("--rows", type=int, default=2,
+                    help="batch rows (concurrent requests)")
+    ap.add_argument("--requests", type=int, default=5)
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="Poisson arrival rate, requests per decode step")
+    ap.add_argument("--min-prompt", type=int, default=12)
+    ap.add_argument("--max-prompt", type=int, default=24)
+    ap.add_argument("--max-steps", type=int, default=2000)
+    ap.add_argument("--max-live-tokens", type=int, default=0,
+                    help="admission token budget (0 = rows-only admission)")
+    ap.add_argument("--replan-window", type=int, default=8)
+    ap.add_argument("--replan-threshold", type=float, default=1.25)
+    ap.add_argument("--replan-cooldown", type=int, default=16)
+    ap.add_argument("--no-replan", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.continuous:
+        run_continuous(args)
+        return
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     dtype = jnp.float32 if args.smoke else jnp.bfloat16

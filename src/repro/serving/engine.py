@@ -34,6 +34,9 @@ from repro.cache.slot_cache import (
     append_token,
     fill_from_selection,
     init_cache,
+    insert_rows,
+    reset_rows,
+    rows_to_mask,
 )
 from repro.compression.base import CompressionConfig
 from repro.compression.policies import select as policy_select
@@ -123,12 +126,18 @@ def prefill(
     plan: PlanArrays,
     ccfg: CompressionConfig,
     head_importance: Optional[np.ndarray] = None,
+    rows: Optional[jnp.ndarray] = None,
 ) -> Tuple[ServeState, jnp.ndarray, jnp.ndarray]:
     """Run the full prompt, compress each layer's KV into the slot cache.
 
     Prefill attention runs in *original head layout* (slot layout only pays
     off once per-head lengths diverge); q/k/v are recovered from the slot
     weights of the replica-0 slots so only one weight copy is kept.
+
+    ``rows`` (optional, (B,) int32) are the *global* batch-row ids this
+    sub-batch will occupy in a larger live cache: the strided owner rule is
+    evaluated at those ids so the resulting sub-cache can be spliced in with
+    ``insert_rows`` (continuous-batching admission).  Default: arange(B).
 
     Returns (state, last_logits (B, V), lengths (L, Hkv, B) — the realized
     per-head retained lengths, i.e. the paper's workload observable).
@@ -166,7 +175,7 @@ def prefill(
         if cfg.family == "hybrid":
             attn_flat, cache, lens = _prefill_attention(
                 pl, hn, positions, cfg, i, cache, plan, ccfg, W,
-                head_importance)
+                head_importance, rows)
             a = L.rms_norm(attn_flat, pl["attn_out_norm"], cfg.rms_eps)
             attn_out = _slot_o_proj(pl, a, cfg, plan, i)
             ssm_out, (cs, ss) = M.ssm_block_full(pl, hn, cfg, return_state=True)
@@ -182,7 +191,7 @@ def prefill(
         else:
             attn_flat, cache, lens = _prefill_attention(
                 pl, hn, positions, cfg, i, cache, plan, ccfg, W,
-                head_importance)
+                head_importance, rows)
             h = h + _slot_o_proj(pl, attn_flat, cfg, plan, i)
             lengths_all.append(lens)
         if enc_kvs is not None:
@@ -241,7 +250,7 @@ def first_weights(pl: dict, plan: PlanArrays, layer_idx: int) -> dict:
 
 
 def _prefill_attention(pl, hn, positions, cfg, layer_idx, cache, plan, ccfg,
-                       W, head_importance):
+                       W, head_importance, rows=None):
     """Full attention + compression + slot-cache fill for one layer."""
     B, T, D = hn.shape
     Hkv, G, Dh = cfg.n_kv_heads, cfg.q_per_kv, cfg.head_dim
@@ -277,7 +286,8 @@ def _prefill_attention(pl, hn, positions, cfg, layer_idx, cache, plan, ccfg,
         kw["head_importance"] = jnp.asarray(head_importance[layer_idx])
     idx, keep = policy_select(ccfg.policy, scores, ccfg, layer_idx,
                               cfg.n_layers, **kw)
-    cache = fill_from_selection(cache, layer_idx, k, v, idx, keep, plan)
+    cache = fill_from_selection(cache, layer_idx, k, v, idx, keep, plan,
+                                rows=rows)
     return out_flat, cache, keep.transpose(1, 0)  # lens (Hkv, B)
 
 
@@ -303,8 +313,16 @@ def decode_step(
     plan: PlanArrays,
     ccfg: CompressionConfig,
     tokens: Optional[jnp.ndarray] = None,
+    active: Optional[jnp.ndarray] = None,
 ) -> Tuple[ServeState, jnp.ndarray]:
-    """One decode step for the whole batch.  Returns (state, logits (B, V))."""
+    """One decode step for the whole batch.  Returns (state, logits (B, V)).
+
+    ``active`` ((B,) bool, optional) marks the rows that carry a live request
+    under continuous batching: cache appends and position increments are
+    suppressed on inactive rows, so a retired row's ``lengths`` stay 0 (its
+    decode-attention output stays exactly zero) until the scheduler splices a
+    new request in.  ``None`` treats every row as active (one-shot serving).
+    """
     tokens = state.last_tokens if tokens is None else tokens
     B = tokens.shape[0]
     h = L.embed(tokens[:, None], serve_params["embed"])  # (B, 1, D)
@@ -321,7 +339,7 @@ def decode_step(
         if cfg.family == "hybrid":
             attn_flat, cache = _decode_attention(pl, hn, positions, cfg, i,
                                                  cache, plan, state.decode_steps,
-                                                 ccfg)
+                                                 ccfg, active)
             a = _slot_rms_norm(attn_flat, pl["attn_out_norm_s"],
                                cfg.n_heads * cfg.head_dim, cfg.rms_eps)
             attn_out = _decode_slot_o(pl, a, cfg)
@@ -335,7 +353,7 @@ def decode_step(
         else:
             attn_flat, cache = _decode_attention(pl, hn, positions, cfg, i,
                                                  cache, plan, state.decode_steps,
-                                                 ccfg)
+                                                 ccfg, active)
             h = h + _decode_slot_o(pl, attn_flat, cfg)
         if cfg.is_encoder_decoder:
             hc = L.rms_norm(h, pl["ln_cross"], cfg.rms_eps)
@@ -351,8 +369,11 @@ def decode_step(
     table = serve_params.get("head", serve_params["embed"])
     logits = L.unembed(h, table, cfg.logit_softcap)[:, 0]  # (B, V)
     if cache is not None:
+        pos_next = (cache.positions + 1 if active is None
+                    else jnp.where(active, cache.positions + 1,
+                                   cache.positions))
         cache = SlotCache(k=cache.k, v=cache.v, lengths=cache.lengths,
-                          pos=cache.pos, positions=cache.positions + 1)
+                          pos=cache.pos, positions=pos_next)
     new_state = ServeState(
         cache=cache, ssm_state=ssm_state, conv_state=conv_state,
         cross_k=state.cross_k, cross_v=state.cross_v,
@@ -363,7 +384,7 @@ def decode_step(
 
 
 def _decode_attention(pl, hn, positions, cfg, layer_idx, cache, plan,
-                      decode_steps, ccfg):
+                      decode_steps, ccfg, active=None):
     """Slot-layout attention for one new token; appends to the cache."""
     B = hn.shape[0]
     G, Dh = cfg.q_per_kv, cfg.head_dim
@@ -380,6 +401,8 @@ def _decode_attention(pl, hn, positions, cfg, layer_idx, cache, plan,
     q = _rope_slots(q, positions, cfg)
     k_new = _rope_slots(k_new[:, :, None, :], positions, cfg)[:, :, 0, :]
     own = plan.owner_mask(layer_idx, B)  # (S, B)
+    if active is not None:
+        own = own & active[None, :]
     cache = append_token(cache, layer_idx, k_new.swapaxes(0, 1),
                          v_new.swapaxes(0, 1), own, decode_steps,
                          ring=max(1, ccfg.decode_margin),
@@ -439,3 +462,82 @@ def _decode_ssm(pl, hn, cfg, layer_idx, ssm_state, conv_state):
     y = L.rms_norm(y * jax.nn.silu(z), pl["ssm_norm"])
     out = y @ pl["out_proj"]
     return out, ssm_state.at[layer_idx].set(new_ss), conv_state.at[layer_idx].set(new_cs)
+
+
+# ---------------------------------------------------------------------------
+# Row-level state ops (continuous batching, DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+
+def init_serve_state(cfg: ModelConfig, plan: PlanArrays, batch: int,
+                     ccfg: CompressionConfig, dtype=jnp.float32) -> ServeState:
+    """Empty B-row ServeState: every row retired (lengths 0, positions 0).
+
+    The continuous-batching scheduler starts from this and splices prefilled
+    requests into rows as they are admitted.  Encoder-decoder models are not
+    supported (their cross-KV shape depends on per-request encoder inputs).
+    """
+    if cfg.is_encoder_decoder:
+        raise NotImplementedError(
+            "continuous batching does not support encoder-decoder models")
+    cache = None
+    if not cfg.attention_free:
+        cache = init_cache(cfg.n_layers, int(plan.slot_head.shape[1]), batch,
+                           ccfg.static_capacity(), cfg.head_dim, dtype=dtype)
+    ssm_state = conv_state = None
+    if cfg.family in ("ssm", "hybrid"):
+        s = cfg.ssm
+        ssm_state = jnp.zeros((cfg.n_layers, batch, s.num_heads, s.head_dim,
+                               s.state_size), jnp.float32)
+        conv_state = jnp.zeros(
+            (cfg.n_layers, batch, s.conv_width - 1,
+             s.d_inner + 2 * s.n_groups * s.state_size), dtype)
+    return ServeState(cache=cache, ssm_state=ssm_state, conv_state=conv_state,
+                      cross_k=None, cross_v=None,
+                      last_tokens=jnp.zeros((batch,), jnp.int32),
+                      decode_steps=jnp.int32(0))
+
+
+def splice_state(state: ServeState, sub: ServeState,
+                 rows: jnp.ndarray) -> ServeState:
+    """Splice a prefilled sub-batch state into ``rows`` of the live state.
+
+    ``sub`` must come from ``prefill(..., rows=rows)`` so its slot-cache
+    ownership matches the target global rows.  ``decode_steps`` keeps the
+    live value — the ring-write phase is global, not per-request.
+    """
+    rows = jnp.asarray(rows, jnp.int32)
+    cache = state.cache
+    if cache is not None:
+        cache = insert_rows(cache, sub.cache, rows)
+    ssm = state.ssm_state
+    if ssm is not None:
+        ssm = ssm.at[:, rows].set(sub.ssm_state)
+    conv = state.conv_state
+    if conv is not None:
+        conv = conv.at[:, rows].set(sub.conv_state.astype(conv.dtype))
+    return ServeState(
+        cache=cache, ssm_state=ssm, conv_state=conv,
+        cross_k=state.cross_k, cross_v=state.cross_v,
+        last_tokens=state.last_tokens.at[rows].set(sub.last_tokens),
+        decode_steps=state.decode_steps)
+
+
+def reset_state_rows(state: ServeState, rows) -> ServeState:
+    """Retire rows: clear their cache/SSM state so their decode output is
+    exactly zero and the rows can be handed back to the freelist."""
+    m = rows_to_mask(rows, state.last_tokens.shape[0])
+    cache = state.cache
+    if cache is not None:
+        cache = reset_rows(cache, rows)
+    ssm = state.ssm_state
+    if ssm is not None:
+        ssm = jnp.where(m[None, :, None, None, None], 0, ssm)
+    conv = state.conv_state
+    if conv is not None:
+        conv = jnp.where(m[None, :, None, None], 0, conv)
+    return ServeState(
+        cache=cache, ssm_state=ssm, conv_state=conv,
+        cross_k=state.cross_k, cross_v=state.cross_v,
+        last_tokens=jnp.where(m, 0, state.last_tokens),
+        decode_steps=state.decode_steps)

@@ -1,0 +1,132 @@
+"""Request lifecycle for continuous batching (DESIGN.md §7).
+
+A ``Request`` carries one prompt through the scheduler's state machine::
+
+    QUEUED ──admit──▶ PREFILLING ──splice──▶ DECODING ──EOS/max──▶ FINISHED
+
+PREFILLING is transient inside a single scheduler tick (prefill runs
+synchronously, then the sub-state is spliced into the live batch row), but it
+is modeled explicitly so telemetry can attribute time-to-first-token to the
+prefill, and so a future async-prefill engine can hold requests there.
+
+Timestamps are recorded in *scheduler steps* (one decode tick each) and in
+wall-clock seconds; the benchmark reports both.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    FINISHED = "finished"
+
+
+@dataclass
+class Request:
+    """One generation request and its realized lifecycle telemetry."""
+
+    req_id: int
+    prompt: np.ndarray  # (T,) int32 token ids
+    arrival_step: int = 0  # scheduler step at which the request exists
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+
+    state: RequestState = RequestState.QUEUED
+    row: Optional[int] = None  # live batch row while DECODING
+    generated: List[int] = field(default_factory=list)
+    logits: Optional[List[np.ndarray]] = None  # per-token logits if collected
+
+    admit_step: Optional[int] = None
+    first_token_step: Optional[int] = None
+    finish_step: Optional[int] = None
+    arrival_time: Optional[float] = None
+    finish_time: Optional[float] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(np.asarray(self.prompt).shape[0])
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.generated)
+
+    @property
+    def is_finished(self) -> bool:
+        return self.state is RequestState.FINISHED
+
+    def queueing_steps(self) -> Optional[int]:
+        if self.admit_step is None:
+            return None
+        return self.admit_step - self.arrival_step
+
+    def latency_steps(self) -> Optional[int]:
+        """Arrival → last token, in scheduler steps."""
+        if self.finish_step is None:
+            return None
+        return self.finish_step - self.arrival_step
+
+    def latency_seconds(self) -> Optional[float]:
+        if self.finish_time is None or self.arrival_time is None:
+            return None
+        return self.finish_time - self.arrival_time
+
+
+def poisson_arrivals(n_requests: int, rate: float,
+                     rng: np.random.Generator) -> np.ndarray:
+    """(n,) sorted integer arrival steps with ``rate`` requests/step.
+
+    Inter-arrival gaps are exponential with mean ``1/rate`` (rounded down to
+    whole scheduler steps), i.e. a discretized Poisson process; the first
+    request always arrives at step 0 so a trace never starts idle.
+    """
+    if rate <= 0:
+        raise ValueError("rate must be positive")
+    if n_requests == 0:
+        return np.zeros(0, dtype=int)
+    gaps = np.floor(rng.exponential(1.0 / rate, size=n_requests)).astype(int)
+    arrivals = np.cumsum(gaps)
+    return arrivals - arrivals[0]
+
+
+def synthesize_requests(
+    n_requests: int,
+    rate: float,
+    vocab_size: int,
+    min_prompt: int = 16,
+    max_prompt: int = 48,
+    max_new_tokens: int = 12,
+    seed: int = 0,
+) -> List[Request]:
+    """A reproducible Poisson trace of random-token requests."""
+    rng = np.random.default_rng(seed)
+    arrivals = poisson_arrivals(n_requests, rate, rng)
+    reqs = []
+    for i, step in enumerate(arrivals):
+        T = int(rng.integers(min_prompt, max_prompt + 1))
+        prompt = rng.integers(0, vocab_size, size=T).astype(np.int32)
+        reqs.append(Request(req_id=i, prompt=prompt, arrival_step=int(step),
+                            max_new_tokens=max_new_tokens))
+    return reqs
+
+
+def latency_percentiles(requests: List[Request]) -> dict:
+    """p50/p99 of request latency over the finished subset, in steps and
+    seconds (seconds only when wall-clock stamps were recorded)."""
+    steps = [r.latency_steps() for r in requests if r.latency_steps() is not None]
+    secs = [r.latency_seconds() for r in requests
+            if r.latency_seconds() is not None]
+    out = {"n_finished": len(steps)}
+    if steps:
+        out["p50_steps"] = float(np.percentile(steps, 50))
+        out["p99_steps"] = float(np.percentile(steps, 99))
+    if secs:
+        out["p50_s"] = float(np.percentile(secs, 50))
+        out["p99_s"] = float(np.percentile(secs, 99))
+    return out

@@ -1,0 +1,430 @@
+"""Continuous-batching scheduler over the slot cache (DESIGN.md §7).
+
+The engine's decode step is batch-shaped: every tick runs all ``max_rows``
+batch rows, and a retired row (``lengths == 0`` everywhere) contributes
+exactly zero work inside ``fairkv_decode`` and zero output through the
+o-projection.  Continuous batching therefore reduces to *row bookkeeping*:
+
+- a **freelist** hands out retired rows to queued requests;
+- **admission** prefills the new request alone — with slot-cache ownership
+  evaluated at its target global row id (``prefill(..., rows=[row])``) — and
+  splices the resulting sub-state into the live batch (``splice_state``);
+- **retirement** (EOS or max-new-tokens) zeroes the row's cache/SSM state
+  (``reset_state_rows``) and returns the row to the freelist.
+
+On top of the lifecycle the scheduler watches the *realized* per-shard KV
+load (Σ ``lengths`` per shard, the paper's Eq. 4 observable) over a sliding
+window; when the max/mean imbalance stays above a threshold for the whole
+window (hysteresis) and a cooldown has elapsed, it rebuilds the
+``HeadPlacement`` from the realized per-head profile (``build_plan``),
+re-slotifies the weights, and migrates the live cache into the new layout
+(``migrate_cache``) — the online form of ``examples/straggler_replan.py``.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cache.slot_cache import PlanArrays, migrate_cache
+from repro.compression.base import CompressionConfig
+from repro.configs.base import ModelConfig
+from repro.core.placement import HeadPlacement
+from repro.core.planner import PlannerConfig, build_plan
+from repro.serving.engine import (
+    ServeState,
+    decode_step,
+    init_serve_state,
+    prefill,
+    reset_state_rows,
+    slotify_params,
+    splice_state,
+)
+from repro.serving.request import Request, RequestState
+
+
+# ---------------------------------------------------------------------------
+# Row freelist
+# ---------------------------------------------------------------------------
+
+
+class RowFreelist:
+    """Free batch rows, handed out lowest-index-first (deterministic)."""
+
+    def __init__(self, n_rows: int):
+        self.n_rows = n_rows
+        self._free = sorted(range(n_rows))
+
+    def __len__(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.n_rows - len(self._free)
+
+    def acquire(self) -> Optional[int]:
+        return self._free.pop(0) if self._free else None
+
+    def release(self, row: int) -> None:
+        if not 0 <= row < self.n_rows:
+            raise ValueError(f"row {row} out of range [0, {self.n_rows})")
+        if row in self._free:
+            raise ValueError(f"row {row} double-freed")
+        self._free.append(row)
+        self._free.sort()
+
+
+# ---------------------------------------------------------------------------
+# Replan trigger (hysteresis)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ReplanTrigger:
+    """Fires when imbalance stays above ``threshold`` for a full sliding
+    ``window`` of observations, at most once per ``cooldown`` steps.
+
+    The window acts as hysteresis: one transient spike (e.g. right after an
+    admission, before other rows catch up) never triggers a replan.
+    """
+
+    window: int = 8
+    threshold: float = 1.25
+    cooldown: int = 16
+    _history: deque = field(default_factory=deque, repr=False)
+    _last_fire: Optional[int] = None
+
+    def observe(self, imbalance: float) -> None:
+        """Record one per-step imbalance observation."""
+        self._history.append(float(imbalance))
+        while len(self._history) > self.window:
+            self._history.popleft()
+
+    def ready(self, step: int) -> bool:
+        """Armed: full window above threshold + cooldown elapsed."""
+        if len(self._history) < self.window:
+            return False
+        if any(x <= self.threshold for x in self._history):
+            return False
+        return (self._last_fire is None
+                or step - self._last_fire >= self.cooldown)
+
+    def fire(self, step: int) -> None:
+        """Consume the armed state (called when a replan actually runs)."""
+        self._last_fire = step
+        self._history.clear()
+
+
+# ---------------------------------------------------------------------------
+# Scheduler
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SchedulerConfig:
+    max_rows: int = 4  # fixed decode batch width (row slots)
+    # admission token budget: projected Σ lengths over (L, H) the live cache
+    # may hold; None admits on free rows alone
+    max_live_tokens: Optional[int] = None
+    replan_window: int = 8
+    replan_threshold: float = 1.25
+    replan_cooldown: int = 16
+    replan_min_rows: int = 2  # don't replan a near-empty batch
+    enable_replan: bool = True
+    collect_logits: bool = False  # keep per-token logits on each Request
+
+
+class Scheduler:
+    """Admission + interleaved decode + retirement + online replanning."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: dict,
+        plan: HeadPlacement,
+        ccfg: CompressionConfig,
+        scfg: SchedulerConfig,
+        planner_cfg: Optional[PlannerConfig] = None,
+        dtype=jnp.float32,
+    ):
+        if cfg.is_encoder_decoder or cfg.is_vlm:
+            raise NotImplementedError(
+                "continuous batching supports token-prompt decoder models")
+        self.cfg = cfg
+        self.params = params  # original layout — kept for re-slotify on replan
+        self.plan = plan
+        self.pa = PlanArrays.from_plan(plan)
+        self.ccfg = ccfg
+        self.scfg = scfg
+        self.pcfg = planner_cfg or PlannerConfig(
+            mode=plan.mode, slots_per_shard=plan.slots_per_shard,
+            r_max=plan.r_max, batch_cap=scfg.max_rows)
+        self.dtype = dtype
+        self.sp = slotify_params(params, plan, cfg)
+        self.state = init_serve_state(cfg, self.pa, scfg.max_rows, ccfg,
+                                      dtype=dtype)
+
+        self.queue: deque = deque()
+        self.active: Dict[int, Request] = {}  # row -> request
+        self.freelist = RowFreelist(scfg.max_rows)
+        self.trigger = ReplanTrigger(window=scfg.replan_window,
+                                     threshold=scfg.replan_threshold,
+                                     cooldown=scfg.replan_cooldown)
+        self.step_idx = 0
+        self.n_replans = 0
+        self.replan_log: List[dict] = []  # {step, imbalance_before/after}
+        self.finished: List[Request] = []
+        self._decode = self._make_decode()
+
+    # ---- engine plumbing ---------------------------------------------------
+
+    def _make_decode(self):
+        sp, cfg, pa, ccfg = self.sp, self.cfg, self.pa, self.ccfg
+        return jax.jit(lambda st, act: decode_step(sp, st, cfg, pa, ccfg,
+                                                   active=act))
+
+    # ---- load accounting ---------------------------------------------------
+
+    def live_tokens(self) -> int:
+        """Σ retained lengths over the whole live cache (all layers/slots)."""
+        if self.state.cache is None:
+            return 0
+        return int(np.asarray(self.state.cache.lengths).sum())
+
+    def per_shard_load(self) -> np.ndarray:
+        """(n_shards,) realized Σ lengths per shard — the Eq. 4 observable."""
+        S_per = self.plan.slots_per_shard
+        if self.state.cache is None:
+            return np.zeros(self.plan.n_shards)
+        lens = np.asarray(self.state.cache.lengths)  # (L, S, B)
+        per_slot = lens.sum(axis=(0, 2))  # (S,)
+        return per_slot.reshape(self.plan.n_shards, S_per).sum(axis=1)
+
+    def imbalance(self) -> float:
+        """max/mean per-shard realized load (1.0 = perfectly fair)."""
+        load = self.per_shard_load()
+        mean = load.mean()
+        return float(load.max() / mean) if mean > 0 else 1.0
+
+    def realized_profile(self) -> np.ndarray:
+        """(L, H) mean retained length per head over *active* rows.
+
+        Replicas of one head own disjoint rows, so summing ``lengths`` over
+        the head's slots recovers each row's full per-head length.
+        """
+        lens = np.asarray(self.state.cache.lengths)  # (L, S, B)
+        sh = np.asarray(self.pa.slot_head)  # (L, S)
+        L, S, B = lens.shape
+        H = self.plan.n_heads
+        rows = sorted(self.active)
+        if not rows:
+            raise RuntimeError("no active rows to profile")
+        prof = np.zeros((L, H), dtype=np.float64)
+        for h in range(H):
+            contrib = np.where(sh[:, :, None] == h, lens, 0)  # (L, S, B)
+            prof[:, h] = contrib[:, :, rows].sum(axis=1).mean(axis=1)
+        return np.maximum(prof, 1.0)
+
+    # ---- admission ---------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        # fail fast on a request that could never be admitted: FCFS would
+        # head-of-line block behind it until max_steps with no diagnostic
+        if (self.scfg.max_live_tokens is not None
+                and self._estimated_cost(req) > self.scfg.max_live_tokens):
+            raise ValueError(
+                f"request {req.req_id} can never be admitted: projected cost "
+                f"{self._estimated_cost(req)} tokens exceeds max_live_tokens="
+                f"{self.scfg.max_live_tokens} even on an empty cache")
+        req.state = RequestState.QUEUED
+        if req.arrival_time is None:
+            req.arrival_time = time.time()
+        self.queue.append(req)
+
+    def _estimated_cost(self, req: Request) -> int:
+        """Projected Σ lengths the request can pin: every head of every layer
+        retains at most min(prompt+gen, static capacity) tokens."""
+        cap = self.ccfg.static_capacity()
+        per_head = min(req.prompt_len + req.max_new_tokens, cap)
+        return self.cfg.n_layers * self.cfg.n_kv_heads * per_head
+
+    def admissible(self, req: Request) -> bool:
+        if len(self.freelist) == 0:
+            return False
+        if self.scfg.max_live_tokens is None:
+            return True
+        return (self.live_tokens() + self._estimated_cost(req)
+                <= self.scfg.max_live_tokens)
+
+    def _admit(self, req: Request) -> int:
+        row = self.freelist.acquire()
+        assert row is not None
+        req.state = RequestState.PREFILLING
+        req.row = row
+        req.admit_step = self.step_idx
+        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
+        sub, logits, _lens = prefill(self.sp, batch, self.cfg, self.pa,
+                                     self.ccfg, rows=jnp.asarray([row]))
+        self.state = splice_state(self.state, sub, jnp.asarray([row]))
+        first = int(np.asarray(sub.last_tokens)[0])
+        req.generated.append(first)
+        req.first_token_step = self.step_idx
+        if self.scfg.collect_logits:
+            req.logits = [np.asarray(logits[0])]
+        req.state = RequestState.DECODING
+        self.active[row] = req
+        if self._done(req):
+            self._retire(req)
+        return row
+
+    def _done(self, req: Request) -> bool:
+        if req.n_generated >= req.max_new_tokens:
+            return True
+        return req.eos_id is not None and req.generated[-1] == req.eos_id
+
+    def _retire(self, req: Request) -> None:
+        row = req.row
+        self.state = reset_state_rows(self.state, jnp.asarray([row]))
+        del self.active[row]
+        self.freelist.release(row)
+        req.state = RequestState.FINISHED
+        req.finish_step = self.step_idx
+        req.finish_time = time.time()
+        req.row = None
+        self.finished.append(req)
+
+    # ---- replanning --------------------------------------------------------
+
+    def should_replan(self) -> bool:
+        """Trigger armed (full window above threshold + cooldown elapsed) and
+        enough live rows for the realized profile to be meaningful."""
+        return (self.scfg.enable_replan
+                and len(self.active) >= self.scfg.replan_min_rows
+                and self.trigger.ready(self.step_idx))
+
+    @staticmethod
+    def _imbalance_of(lengths: np.ndarray, n_shards: int,
+                      slots_per_shard: int) -> float:
+        per_slot = np.asarray(lengths).sum(axis=(0, 2))
+        load = per_slot.reshape(n_shards, slots_per_shard).sum(axis=1)
+        mean = load.mean()
+        return float(load.max() / mean) if mean > 0 else 1.0
+
+    def replan(self) -> dict:
+        """Rebuild the placement from the realized profile; migrate the live
+        cache + weights into the new slot layout if it actually helps.
+
+        The planner optimizes the *mean-over-rows* per-head profile, which at
+        small row counts can mispredict the row-granular replica split — so
+        the candidate layout is scored on the realized lengths post-migration
+        and rejected (no state change, cooldown still consumed) unless it
+        strictly reduces the per-shard imbalance.
+        """
+        before = self.imbalance()
+        profile = self.realized_profile()
+        new_plan = build_plan(profile, self.plan.n_shards, self.pcfg)
+        new_pa = PlanArrays.from_plan(new_plan)
+        cache = migrate_cache(self.state.cache, self.pa, new_pa)
+        after = self._imbalance_of(np.asarray(cache.lengths),
+                                   new_plan.n_shards,
+                                   new_plan.slots_per_shard)
+        event = {"step": self.step_idx, "imbalance_before": before,
+                 "imbalance_after": after, "accepted": after < before - 1e-9}
+        if not event["accepted"]:
+            event["imbalance_after"] = before
+            self.replan_log.append(event)
+            return event
+        self.state = ServeState(
+            cache=cache, ssm_state=self.state.ssm_state,
+            conv_state=self.state.conv_state, cross_k=self.state.cross_k,
+            cross_v=self.state.cross_v, last_tokens=self.state.last_tokens,
+            decode_steps=self.state.decode_steps)
+        self.plan, self.pa = new_plan, new_pa
+        self.sp = slotify_params(self.params, new_plan, self.cfg)
+        self._decode = self._make_decode()
+        self.n_replans += 1
+        self.replan_log.append(event)
+        return event
+
+    # ---- main loop ---------------------------------------------------------
+
+    def active_mask(self) -> jnp.ndarray:
+        m = np.zeros(self.scfg.max_rows, dtype=bool)
+        for row in self.active:
+            m[row] = True
+        return jnp.asarray(m)
+
+    def step(self) -> dict:
+        """One scheduler tick: admit → decode → retire → (maybe) replan."""
+        events: dict = {"step": self.step_idx, "admitted": [], "finished": [],
+                        "replanned": False}
+        # admission: fill free rows from the queue head (FCFS)
+        while self.queue and self.admissible(self.queue[0]):
+            req = self.queue.popleft()
+            row = self._admit(req)
+            events["admitted"].append((req.req_id, row))
+            if req.is_finished:  # max_new_tokens == 1 or instant EOS
+                events["finished"].append(req.req_id)
+        # one interleaved decode tick for every live row
+        if self.active:
+            self.state, logits = self._decode(self.state, self.active_mask())
+            toks = np.asarray(self.state.last_tokens)
+            logits_np = (np.asarray(logits) if self.scfg.collect_logits
+                         else None)
+            for row in sorted(self.active):
+                req = self.active[row]
+                req.generated.append(int(toks[row]))
+                if logits_np is not None:
+                    req.logits.append(logits_np[row])
+            for row in sorted(self.active):
+                req = self.active[row]
+                if self._done(req):
+                    self._retire(req)
+                    events["finished"].append(req.req_id)
+        # load accounting + replan trigger (hysteresis inside the trigger)
+        self.trigger.observe(self.imbalance())
+        if self.should_replan():
+            self.trigger.fire(self.step_idx)
+            events["replan"] = self.replan()
+            events["replanned"] = True
+        self.step_idx += 1
+        return events
+
+    def run(self, requests: Sequence[Request],
+            max_steps: int = 10_000) -> dict:
+        """Drive a full trace: submit by ``arrival_step``, tick until every
+        request is FINISHED (or ``max_steps``).  Returns summary telemetry."""
+        pending = sorted(requests, key=lambda r: (r.arrival_step, r.req_id))
+        n_total = len(pending)
+        i = 0
+        first_decode_step: Optional[int] = None
+        mid_stream_admissions = 0
+        t0 = time.time()
+        while len(self.finished) < n_total and self.step_idx < max_steps:
+            while i < len(pending) and pending[i].arrival_step <= self.step_idx:
+                self.submit(pending[i])
+                i += 1
+            ev = self.step()
+            if ev["admitted"] and first_decode_step is not None:
+                mid_stream_admissions += len(ev["admitted"])
+            if self.active or ev["finished"]:
+                if first_decode_step is None:
+                    first_decode_step = ev["step"]
+        wall = time.time() - t0
+        total_tokens = sum(r.n_generated for r in self.finished)
+        return {
+            "steps": self.step_idx,
+            "wall_s": wall,
+            "finished": len(self.finished),
+            "total": n_total,
+            "generated_tokens": total_tokens,
+            "tokens_per_s": total_tokens / wall if wall > 0 else float("inf"),
+            "mid_stream_admissions": mid_stream_admissions,
+            "replans": self.n_replans,
+            "replan_log": list(self.replan_log),
+        }

@@ -1,0 +1,87 @@
+"""``hypothesis`` shim: real library when installed, fixed-seed fallback
+otherwise.
+
+The tier-1 suite must collect and run in environments without hypothesis
+(the paper-repro container doesn't ship it).  The fallback degrades each
+``@given`` property test into a deterministic parametrized sweep: strategies
+become seeded draw functions, and ``given`` runs the test body
+``max_examples`` times with draws from a per-test ``numpy`` Generator seeded
+by the test name — reproducible across runs, interpreter-hash independent.
+
+Only the strategy surface this repo uses is implemented: ``integers``,
+``floats``, ``sampled_from``, ``booleans``, ``lists``.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elems = list(elements)
+            return _Strategy(lambda rng: elems[int(rng.integers(len(elems)))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            return _Strategy(lambda rng: [
+                elem.draw(rng)
+                for _ in range(int(rng.integers(min_size, max_size + 1)))])
+
+    st = _Strategies()
+
+    def settings(max_examples=20, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            # zero-arg wrapper (no functools.wraps: pytest would follow
+            # __wrapped__ and misread the strategy params as fixtures)
+            def runner():
+                n = getattr(runner, "_max_examples",
+                            getattr(fn, "_max_examples", 20))
+                rng = np.random.default_rng(
+                    zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(n):
+                    drawn_args = tuple(s.draw(rng) for s in arg_strategies)
+                    drawn_kw = {k: s.draw(rng)
+                                for k, s in kw_strategies.items()}
+                    fn(*drawn_args, **drawn_kw)
+            runner.__name__ = fn.__name__
+            runner.__qualname__ = fn.__qualname__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            return runner
+        return deco

@@ -14,11 +14,11 @@ from jax.sharding import PartitionSpec as P
 from repro.distributed.hlo_stats import collective_stats, while_body_stats
 from repro.distributed.param_specs import guarded, tree_pspecs
 from repro.distributed.sharding import ShardingRules, serve_rules, train_rules
+from repro.launch.mesh import make_host_mesh
 
 
 def _mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_host_mesh(model=1, data=1)
 
 
 def test_guarded_divisibility():
@@ -82,10 +82,10 @@ import json
 import jax, jax.numpy as jnp
 from repro.configs import get_smoke_config, SHAPES
 from repro.configs.base import InputShape
+from repro.launch.mesh import _axis_type_kwargs
 from repro.launch.specs import build_cell
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = jax.make_mesh((2, 4), ("data", "model"), **_axis_type_kwargs(2))
 cfg = get_smoke_config({arch!r})
 shape = InputShape("mini_{kind}", 64, 4, {kind!r})
 cell = build_cell(cfg, shape, mesh, quantize=False)
@@ -107,7 +107,8 @@ def test_multidevice_lowering_subprocess(arch, kind):
     """Lower + compile a reduced cell on an 8-device CPU mesh in a clean
     subprocess (device count must be set before jax import)."""
     import repro
-    src = repro.__file__.rsplit("/repro/", 1)[0]
+    # repro is a namespace package: __file__ is None, use __path__
+    src = list(repro.__path__)[0].rsplit("/repro", 1)[0]
     code = SUBPROC.format(src=src, arch=arch, kind=kind)
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, timeout=600)

@@ -1,7 +1,7 @@
 """FairKV planner: unit + hypothesis property tests on the plan invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     PlannerConfig,

@@ -1,0 +1,233 @@
+"""Row-level slot-cache ops: reset_rows / insert_rows / migrate_cache and
+their interaction with the strided owner mask and ring-buffer appends."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache.slot_cache import (
+    PlanArrays,
+    SlotCache,
+    append_token,
+    gather_head_layout,
+    init_cache,
+    insert_rows,
+    migrate_cache,
+    reset_rows,
+    rows_to_mask,
+)
+from repro.core import PlannerConfig, build_plan, synthetic_profile
+
+L, B, CAP, DH = 2, 4, 6, 4
+
+
+def _plan(mode="sha", n_heads=2, n_shards=4, slots=1, ch=0, seed=1):
+    prof = synthetic_profile(L, n_heads, budget=8, skew=1.0, seed=seed)
+    return build_plan(prof, n_shards,
+                      PlannerConfig(mode=mode, slots_per_shard=slots,
+                                    extra_copies=ch, batch_cap=B))
+
+
+def _filled_cache(pa, rng_seed=0):
+    """A cache with ownership-respecting random contents and lengths."""
+    rng = np.random.default_rng(rng_seed)
+    S = int(pa.slot_head.shape[1])
+    cache = init_cache(L, S, B, CAP, DH, dtype=jnp.float32)
+    own = np.asarray(pa.owner_mask_all(B))  # (L, S, B)
+    lens = rng.integers(1, CAP, size=(L, S, B)).astype(np.int32) * own
+    ent = np.arange(CAP)[None, None, None, :]
+    valid = ent < lens[..., None]
+    k = rng.normal(size=(L, S, B, CAP, DH)).astype(np.float32) * valid[..., None]
+    v = rng.normal(size=(L, S, B, CAP, DH)).astype(np.float32) * valid[..., None]
+    pos = np.where(valid, ent, -1).astype(np.int32)
+    return SlotCache(k=jnp.asarray(k), v=jnp.asarray(v),
+                     lengths=jnp.asarray(lens), pos=jnp.asarray(pos),
+                     positions=jnp.asarray(lens.max(axis=(0, 1)), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# owner_mask_rows
+# ---------------------------------------------------------------------------
+
+
+def test_owner_mask_rows_matches_global_rows():
+    pa = PlanArrays.from_plan(_plan())  # 2 heads on 4 shards -> rc == 2
+    full = np.asarray(pa.owner_mask(0, B))  # (S, B)
+    sub = np.asarray(pa.owner_mask_rows(0, jnp.asarray([1, 3])))
+    np.testing.assert_array_equal(sub, full[:, [1, 3]])
+    # a replicated plan must disagree between row 0 and row 1 somewhere
+    assert (full[:, 0] != full[:, 1]).any()
+
+
+def test_owner_mask_all_matches_per_layer():
+    pa = PlanArrays.from_plan(_plan(mode="fairkv_dp", n_heads=3, ch=4, slots=2))
+    allm = np.asarray(pa.owner_mask_all(B))
+    for l in range(L):
+        np.testing.assert_array_equal(allm[l], np.asarray(pa.owner_mask(l, B)))
+
+
+# ---------------------------------------------------------------------------
+# reset_rows
+# ---------------------------------------------------------------------------
+
+
+def test_reset_rows_clears_only_target_rows():
+    pa = PlanArrays.from_plan(_plan())
+    cache = _filled_cache(pa)
+    before = np.asarray(cache.lengths)
+    out = reset_rows(cache, jnp.asarray([1]))
+    # row 1 fully cleared
+    assert np.asarray(out.lengths)[:, :, 1].sum() == 0
+    assert np.abs(np.asarray(out.k)[:, :, 1]).sum() == 0
+    assert (np.asarray(out.pos)[:, :, 1] == -1).all()
+    assert int(np.asarray(out.positions)[1]) == 0
+    # other rows untouched
+    keep = [0, 2, 3]
+    np.testing.assert_array_equal(np.asarray(out.lengths)[:, :, keep],
+                                  before[:, :, keep])
+    np.testing.assert_array_equal(np.asarray(out.k)[:, :, keep],
+                                  np.asarray(cache.k)[:, :, keep])
+
+
+def test_reset_rows_accepts_bool_mask():
+    pa = PlanArrays.from_plan(_plan())
+    cache = _filled_cache(pa)
+    m = jnp.asarray([True, False, True, False])
+    out = reset_rows(cache, m)
+    lens = np.asarray(out.lengths)
+    assert lens[:, :, [0, 2]].sum() == 0
+    assert lens[:, :, [1, 3]].sum() > 0
+
+
+def test_rows_to_mask_roundtrip():
+    m = np.asarray(rows_to_mask(jnp.asarray([0, 3]), B))
+    np.testing.assert_array_equal(m, [True, False, False, True])
+    passthrough = rows_to_mask(jnp.asarray(m), B)
+    np.testing.assert_array_equal(np.asarray(passthrough), m)
+
+
+# ---------------------------------------------------------------------------
+# insert_rows
+# ---------------------------------------------------------------------------
+
+
+def test_insert_rows_splices_with_target_row_ownership():
+    """A sub-cache built at global row 3 lands on the slots that own row 3."""
+    plan = _plan()  # 2 heads, 4 shards, rc == 2
+    pa = PlanArrays.from_plan(plan)
+    S = int(pa.slot_head.shape[1])
+    live = _filled_cache(pa)
+    live = reset_rows(live, jnp.asarray([3]))
+
+    # build a 1-row sub-cache with ownership evaluated at global row 3
+    sub = init_cache(L, S, 1, CAP, DH, dtype=jnp.float32)
+    own3 = np.asarray(pa.owner_mask_all(B))[:, :, 3]  # (L, S)
+    sub_len = (2 * own3).astype(np.int32)[:, :, None]
+    sub = SlotCache(
+        k=jnp.asarray(np.ones((L, S, 1, CAP, DH), np.float32)
+                      * own3[:, :, None, None, None]),
+        v=sub.v, lengths=jnp.asarray(sub_len), pos=sub.pos,
+        positions=jnp.asarray([7], jnp.int32))
+
+    out = insert_rows(live, sub, jnp.asarray([3]))
+    lens = np.asarray(out.lengths)
+    np.testing.assert_array_equal(lens[:, :, 3], 2 * own3)
+    assert int(np.asarray(out.positions)[3]) == 7
+    # rows 0-2 untouched
+    np.testing.assert_array_equal(lens[:, :, :3],
+                                  np.asarray(live.lengths)[:, :, :3])
+    # the spliced row only has nonzero lengths on slots owning row 3
+    assert (lens[:, :, 3][~own3.astype(bool)] == 0).all()
+
+
+def test_insert_rows_rejects_layout_mismatch():
+    pa = PlanArrays.from_plan(_plan())
+    S = int(pa.slot_head.shape[1])
+    live = init_cache(L, S, B, CAP, DH, dtype=jnp.float32)
+    bad = init_cache(L, S, 1, CAP + 1, DH, dtype=jnp.float32)
+    with pytest.raises(ValueError):
+        insert_rows(live, bad, jnp.asarray([0]))
+
+
+def test_insert_then_append_continues_at_correct_index():
+    """Ring-buffer appends pick up at the spliced row's lengths."""
+    plan = _plan()
+    pa = PlanArrays.from_plan(plan)
+    S = int(pa.slot_head.shape[1])
+    live = init_cache(L, S, B, CAP, DH, dtype=jnp.float32)
+    own3 = np.asarray(pa.owner_mask_all(B))[:, :, 3]
+    sub_len = (3 * own3).astype(np.int32)[:, :, None]
+    sub = init_cache(L, S, 1, CAP, DH, dtype=jnp.float32)
+    sub = SlotCache(k=sub.k, v=sub.v, lengths=jnp.asarray(sub_len),
+                    pos=sub.pos, positions=jnp.asarray([10], jnp.int32))
+    live = insert_rows(live, sub, jnp.asarray([3]))
+
+    own = pa.owner_mask(0, B)
+    k_new = jnp.full((S, B, DH), 5.0, jnp.float32)
+    out = append_token(live, 0, k_new, k_new, own, jnp.int32(0), ring=2)
+    lens = np.asarray(out.lengths[0])
+    # spliced row grew 3 -> 4 on owning slots; empty owned rows grew 0 -> 1
+    np.testing.assert_array_equal(lens[:, 3], (3 * own3[0] + 1)
+                                  * np.asarray(own)[:, 3])
+    np.testing.assert_array_equal(
+        lens[:, 0], np.asarray(own)[:, 0].astype(np.int32))
+    # the new entry landed at index == old length for the spliced row
+    k_np = np.asarray(out.k[0])
+    for s in range(S):
+        if own3[0, s] and np.asarray(own)[s, 3]:
+            assert k_np[s, 3, 3, 0] == 5.0  # written at position 3
+            assert k_np[s, 3, 4, 0] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# gather / migrate (online replanning)
+# ---------------------------------------------------------------------------
+
+
+def test_gather_head_layout_inverts_ownership():
+    pa = PlanArrays.from_plan(_plan(mode="fairkv_dp", n_heads=3, ch=4,
+                                    slots=2))
+    cache = _filled_cache(pa)
+    k_h, v_h, len_h, pos_h = gather_head_layout(cache, pa)
+    H = 3
+    assert k_h.shape == (L, H, B, CAP, DH)
+    # per (head, row): the owning slot's lengths match
+    sh = np.asarray(pa.slot_head)
+    own = np.asarray(pa.owner_mask_all(B))
+    lens = np.asarray(cache.lengths)
+    for l in range(L):
+        for h in range(H):
+            for b in range(B):
+                owners = [s for s in range(sh.shape[1])
+                          if sh[l, s] == h and own[l, s, b]]
+                assert len(owners) == 1
+                assert int(np.asarray(len_h)[l, h, b]) == lens[l, owners[0], b]
+
+
+def test_migrate_cache_roundtrip_preserves_head_layout():
+    """old plan -> new plan migration preserves the per-head contents."""
+    plan_a = _plan(mode="sha")
+    plan_b = _plan(mode="fairkv_dp", ch=4, seed=2)
+    pa, pb = PlanArrays.from_plan(plan_a), PlanArrays.from_plan(plan_b)
+    cache = _filled_cache(pa)
+    orig = gather_head_layout(cache, pa)
+    migrated = migrate_cache(cache, pa, pb)
+    back = gather_head_layout(migrated, pb)
+    for a, b in zip(orig, back):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    # positions carried through untouched
+    np.testing.assert_array_equal(np.asarray(migrated.positions),
+                                  np.asarray(cache.positions))
+    # ownership respected in the new layout: unowned (slot, row) empty
+    own_b = np.asarray(pb.owner_mask_all(B))
+    lens_b = np.asarray(migrated.lengths)
+    assert (lens_b[~own_b] == 0).all()
+
+
+def test_migrate_cache_rejects_grid_mismatch():
+    plan_a = _plan(n_shards=4)
+    plan_b = _plan(n_shards=2)
+    pa, pb = PlanArrays.from_plan(plan_a), PlanArrays.from_plan(plan_b)
+    cache = _filled_cache(pa)
+    with pytest.raises(ValueError):
+        migrate_cache(cache, pa, pb)
