@@ -22,14 +22,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.compression.base import CompressionConfig
-from repro.compression.policies import select
-from repro.core import (
+from repro.api import (
+    CompressionConfig,
     HeadPlacement,
-    LinearLatencyModel,
     PlannerConfig,
     build_plan,
     profile_from_lengths,
+    select_policy,
 )
 from repro.core.efficiency import owned_mask
 
@@ -64,7 +63,7 @@ def realized_lengths(n_layers: int, n_heads: int, budget: int, batch: int,
         scores = synthetic_scores(batch, n_heads, T, head_skew,
                                   head_seed=head_seed * 1000 + li,
                                   data_seed=(data_seed * 7919 + li) * 104729)
-        _, keep = select(policy, scores, ccfg, li, n_layers)
+        _, keep = select_policy(policy, scores, ccfg, li, n_layers)
         out[li] = np.asarray(keep).T
     return out
 

@@ -12,7 +12,7 @@ from benchmarks.common import (
     realized_lengths,
     v5e_overhead_tokens,
 )
-from repro.core import PlannerConfig, build_plan, profile_from_lengths
+from repro.api import PlannerConfig, build_plan, profile_from_lengths
 
 MODEL = "llama70b-like(qwen1.5-110b)"
 

@@ -1,9 +1,10 @@
 """Figure 6 (repo extension): continuous-batching throughput under load.
 
-Drives the real scheduler (`repro.serving.scheduler`) — admission, interleaved
-decode, retirement — over an identical Poisson request trace for the ``sha``
-and ``fairkv_dp`` planners on a smoke model, and reports end-to-end tokens/s
-plus p50/p99 request latency (in scheduler steps and wall seconds).
+Drives the real continuous-batching path through `repro.api.Engine`
+(`run_trace`: admission, interleaved decode, retirement) over an identical
+Poisson request trace for the ``sha`` and ``fairkv_dp`` planners on a smoke
+model, and reports end-to-end tokens/s plus p50/p99 request latency (in
+scheduler steps and wall seconds).
 
 This measures the *system* path the paper's 1.66× claim lives on: sustained
 multi-request load against the slot cache, not a single fixed batch.  On CPU
@@ -17,13 +18,13 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.compression.base import CompressionConfig
-from repro.configs import get_smoke_config
-from repro.core import PlannerConfig, build_plan, synthetic_profile
-from repro.models import init_params
-from repro.serving import (
-    Scheduler,
+from repro.api import (
+    CompressionConfig,
+    Engine,
+    EngineConfig,
+    PlannerConfig,
     SchedulerConfig,
+    init_params,
     latency_percentiles,
     synthesize_requests,
 )
@@ -37,43 +38,42 @@ SHARDS = 4
 BUDGET = 16
 
 
-def run_one(planner: str, cfg, params, ccfg) -> dict:
-    prof = synthetic_profile(cfg.n_layers, cfg.n_kv_heads, budget=BUDGET,
-                             skew=1.0, seed=1)
-    pcfg = PlannerConfig(mode=planner, extra_copies=4, batch_cap=ROWS)
-    plan = build_plan(prof, SHARDS, pcfg)
-    scfg = SchedulerConfig(max_rows=ROWS, enable_replan=False)
-    sched = Scheduler(cfg, params, plan, ccfg, scfg, planner_cfg=pcfg)
-    # compile this instance's decode step outside the timed region (each
-    # Scheduler wraps its own jax.jit; an all-inactive step has the same
-    # signature as live ones and is a no-op on state)
-    sched._decode(sched.state, sched.active_mask())
+def run_one(planner: str, base_cfg: EngineConfig, params: dict) -> dict:
+    cfg = base_cfg.replace(planner=PlannerConfig(
+        mode=planner, extra_copies=4, batch_cap=ROWS))
+    eng = Engine.build(cfg, params=params)
+    # compile the decode step outside the timed region (an all-inactive step
+    # has the same trace signature as live ones and is a no-op on state)
+    eng.warmup()
     # fresh Request objects per arm: the scheduler mutates them in place
-    reqs = synthesize_requests(N_REQUESTS, RATE, cfg.vocab_size,
+    reqs = synthesize_requests(N_REQUESTS, RATE, cfg.model.vocab_size,
                                min_prompt=12, max_prompt=24,
                                max_new_tokens=GEN, seed=0)
     t0 = time.time()
-    out = sched.run(reqs, max_steps=2000)
+    out = eng.run_trace(reqs, max_steps=2000)
     out["wall_s"] = time.time() - t0
-    out["pct"] = latency_percentiles(sched.finished)
-    out["imbalance"] = sched.imbalance()
+    out["pct"] = latency_percentiles(eng.finished_requests)
+    out["imbalance"] = eng.imbalance()
     assert out["finished"] == out["total"], out
     return out
 
 
 def main():
-    cfg = get_smoke_config(ARCH)
-    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32,
-                         max_seq_len=24 + GEN + 8)
-    ccfg = CompressionConfig(policy="ada_snapkv", budget=BUDGET,
-                             alpha_max=2.0, obs_window=8, sink=2,
-                             decode_margin=8)
+    base_cfg = EngineConfig.smoke(
+        ARCH, n_shards=SHARDS, max_seq_len=24 + GEN + 8,
+        compression=CompressionConfig(policy="ada_snapkv", budget=BUDGET,
+                                      alpha_max=2.0, obs_window=8, sink=2,
+                                      decode_margin=8),
+        scheduler=SchedulerConfig(max_rows=ROWS, enable_replan=False))
+    # one weight set for every arm (plan/slotify happen per-arm in build)
+    params = init_params(base_cfg.model, jax.random.PRNGKey(base_cfg.seed),
+                         dtype=jnp.float32, max_seq_len=base_cfg.max_seq_len)
     # warmup: populate the op-dispatch/compile caches so neither timed arm
     # pays the one-time tracing cost (CPU runs are otherwise compile-bound)
-    run_one("sha", cfg, params, ccfg)
+    run_one("sha", base_cfg, params)
     results = {}
     for planner in ("sha", "fairkv_dp"):
-        r = run_one(planner, cfg, params, ccfg)
+        r = run_one(planner, base_cfg, params)
         results[planner] = r
         pct = r["pct"]
         print(f"fig6/{ARCH}/{planner},{r['wall_s'] * 1e6:.0f},"

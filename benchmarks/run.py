@@ -1,45 +1,87 @@
-"""Benchmark driver: one function per paper table/figure.
+"""Benchmark driver: one suite per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV lines (one per measured entity).
+
+Suites live in a registry (name → module), so single-figure runs stop
+paying for the full sweep::
+
+    python benchmarks/run.py --list            # show suite names
+    python benchmarks/run.py --only fig6       # just fig6
+    python benchmarks/run.py --only fig1,fig3  # a comma-set
+    python benchmarks/run.py --skip table3     # everything else
+
+Skipped suites are never imported, so their (potentially heavy) JAX
+tracing cost is not paid either.
 """
 from __future__ import annotations
 
+import argparse
+import importlib
 import sys
 import time
 import traceback
 
+# name -> module path; each module exposes main().  Ordered as the paper
+# presents them (cheap simulation suites first, end-to-end system last).
+SUITES = {
+    "table1": "benchmarks.table1_cosine_similarity",
+    "table2": "benchmarks.table2_gpu_utilization",
+    "fig1": "benchmarks.fig1_latency_linearity",
+    "fig3": "benchmarks.fig3_throughput_gain",
+    "fig4": "benchmarks.fig4_ablation",
+    "fig5": "benchmarks.fig5_dp_size",
+    "fig6": "benchmarks.fig6_continuous_throughput",
+    "table3": "benchmarks.table3_quality_proxy",
+}
 
-def main() -> None:
-    from benchmarks import (
-        fig1_latency_linearity,
-        fig3_throughput_gain,
-        fig4_ablation,
-        fig5_dp_size,
-        fig6_continuous_throughput,
-        table1_cosine_similarity,
-        table2_gpu_utilization,
-        table3_quality_proxy,
-    )
+
+def _parse_names(value: str) -> list:
+    names = [n.strip() for n in value.split(",") if n.strip()]
+    unknown = [n for n in names if n not in SUITES]
+    if unknown:
+        raise SystemExit(
+            f"unknown suite(s) {unknown}; known: {list(SUITES)}")
+    return names
+
+
+def select_suites(only: str = "", skip: str = "") -> list:
+    """Resolve --only/--skip into an ordered suite-name list."""
+    names = _parse_names(only) if only else list(SUITES)
+    for n in (_parse_names(skip) if skip else []):
+        if n in names:
+            names.remove(n)
+    return names
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--list", action="store_true",
+                    help="print the registered suite names and exit")
+    ap.add_argument("--only", default="",
+                    help="comma-separated suites to run (default: all)")
+    ap.add_argument("--skip", default="",
+                    help="comma-separated suites to exclude")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name, module in SUITES.items():
+            print(f"{name}\t{module}")
+        return
+
+    names = select_suites(args.only, args.skip)
+    if not names:
+        raise SystemExit("no suites selected (--only/--skip removed all)")
     print("name,us_per_call,derived")
-    suites = [
-        ("table1", table1_cosine_similarity.main),
-        ("table2", table2_gpu_utilization.main),
-        ("fig1", fig1_latency_linearity.main),
-        ("fig3", fig3_throughput_gain.main),
-        ("fig4", fig4_ablation.main),
-        ("fig5", fig5_dp_size.main),
-        ("fig6", fig6_continuous_throughput.main),
-        ("table3", table3_quality_proxy.main),
-    ]
     failed = []
-    for name, fn in suites:
+    for name in names:
         t0 = time.time()
         try:
-            fn()
+            importlib.import_module(SUITES[name]).main()
         except Exception:
             traceback.print_exc()
             failed.append(name)
-        print(f"{name}/_suite,{(time.time() - t0) * 1e6:.0f},ok={name not in failed}")
+        print(f"{name}/_suite,{(time.time() - t0) * 1e6:.0f},"
+              f"ok={name not in failed}")
     if failed:
         print(f"# FAILED: {failed}", file=sys.stderr)
         raise SystemExit(1)

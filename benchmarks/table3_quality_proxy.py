@@ -3,49 +3,45 @@
 LongBench + trained weights are unavailable offline, so we measure the
 *attention-output fidelity* of each policy at matched budgets: cosine
 similarity between compressed-cache decode logits and full-cache logits on a
-smoke model with structured (repetition-heavy) synthetic prompts.  The
-paper's ordering claim under test: Ada-SnapKV ≥ SnapKV ≈ Pyramid >
-StreamingLLM at every budget.
+smoke model with structured (repetition-heavy) synthetic prompts, generated
+teacher-forced through `repro.api.Engine.generate`.  The paper's ordering
+claim under test: Ada-SnapKV ≥ SnapKV ≈ Pyramid > StreamingLLM at every
+budget.
 """
 from __future__ import annotations
-
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.cache.slot_cache import PlanArrays
-from repro.compression.base import CompressionConfig
-from repro.configs import get_smoke_config
-from repro.core import PlannerConfig, build_plan, synthetic_profile
-from repro.models import init_params
-from repro.serving import decode_step, prefill, slotify_params
+from repro.api import (
+    CompressionConfig,
+    Engine,
+    EngineConfig,
+    PlannerConfig,
+    init_params,
+    list_policies,
+)
 
-POLICIES = ("streaming_llm", "snapkv", "pyramidkv", "h2o", "ada_snapkv",
-            "headkv")
+POLICIES = tuple(list_policies())
 
 
-def _logits_for(cfg, params, batch, tokens, ccfg, steps=4):
-    prof = synthetic_profile(cfg.n_layers, cfg.n_kv_heads, budget=64,
-                             skew=1.0, seed=1)
-    plan = build_plan(prof, 4, PlannerConfig(mode="fairkv_dp", extra_copies=4))
-    pa = PlanArrays.from_plan(plan)
-    sp = slotify_params(params, plan, cfg)
-    state, lg, _ = prefill(sp, batch, cfg, pa, ccfg)
-    out = [lg]
-    T = batch["tokens"].shape[1]
-    for t in range(steps):
-        state, lg = decode_step(sp, state, cfg, pa, ccfg,
-                                tokens=tokens[:, T + t])
-        out.append(lg)
-    return jnp.stack(out, 1)
+def _logits_for(base_cfg, params, batch, teacher, ccfg, steps=4):
+    eng = Engine.build(base_cfg.replace(compression=ccfg), params=params)
+    res = eng.generate(batch, steps, teacher_tokens=teacher)
+    return jnp.asarray(res.logits)
 
 
 def run(budgets=(16, 32, 64), T: int = 96, B: int = 2, arch="minitron-8b"):
-    cfg = get_smoke_config(arch)
-    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32,
-                         max_seq_len=160)
+    base_cfg = EngineConfig.smoke(
+        arch, n_shards=4, max_seq_len=160,
+        planner=PlannerConfig(mode="fairkv_dp", extra_copies=4),
+        compression=CompressionConfig(policy="none", budget=T, capacity=T,
+                                      obs_window=8, sink=2, decode_margin=8))
+    cfg = base_cfg.model
+    # one weight set for every arm (plan/slotify happen per-arm in build)
+    params = init_params(cfg, jax.random.PRNGKey(base_cfg.seed),
+                         dtype=jnp.float32, max_seq_len=base_cfg.max_seq_len)
     rng = np.random.default_rng(0)
     # repetition-heavy prompt: induces peaked attention → compressible
     base = rng.integers(0, cfg.vocab_size, (B, 16))
@@ -53,16 +49,16 @@ def run(budgets=(16, 32, 64), T: int = 96, B: int = 2, arch="minitron-8b"):
                              for _ in range((T + 16) // 16 + 1)], axis=1)
     tokens = jnp.asarray(tokens[:, :T + 8], jnp.int32)
     batch = {"tokens": tokens[:, :T]}
-    full = _logits_for(cfg, params, batch, tokens, CompressionConfig(
-        policy="none", budget=T, capacity=T, obs_window=8, sink=2,
-        decode_margin=8))
+    teacher = np.asarray(tokens[:, T:T + 4])  # forced decode inputs
+    full = _logits_for(base_cfg, params, batch, teacher,
+                       base_cfg.compression)
     rows = []
     for budget in budgets:
         for policy in POLICIES:
             ccfg = CompressionConfig(policy=policy, budget=budget,
                                      alpha_max=2.0, obs_window=8, sink=2,
                                      decode_margin=8)
-            lg = _logits_for(cfg, params, batch, tokens, ccfg)
+            lg = _logits_for(base_cfg, params, batch, teacher, ccfg)
             cos = float((full * lg).sum()
                         / (jnp.linalg.norm(full) * jnp.linalg.norm(lg)))
             rows.append({"name": f"table3/{policy}/budget{budget}",

@@ -1,27 +1,23 @@
 """Quickstart: FairKV end to end on a reduced model (CPU, ~1 min).
 
-1. build a per-head workload profile (the compression statistic),
-2. plan head placement three ways (SHA / best-effort / fair-copying),
-3. serve a batch through prefill+compression+decode under each plan,
+Everything goes through the `repro.api` facade:
+
+1. build an `Engine` and measure the per-head workload profile (the
+   compression statistic) with a profiling prefill,
+2. rebuild the engine under three planners (SHA / best-effort /
+   fair-copying) against the measured profile,
+3. `Engine.generate` a batch under each plan,
 4. show that logits are identical (the plan is a layout, not math) while
    the simulated shard balance improves.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import time
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.cache.slot_cache import PlanArrays
-from repro.compression.base import CompressionConfig
-from repro.configs import get_smoke_config
-from repro.core import PlannerConfig, build_plan, profile_from_lengths, synthetic_profile
-from repro.models import init_params
-from repro.serving import decode_step, prefill, slotify_params
-from repro.training.data import SyntheticLM
+from repro.api import CompressionConfig, Engine, EngineConfig, PlannerConfig
 from repro.configs.base import InputShape
+from repro.training.data import SyntheticLM
 
 ARCH = "minitron-8b"
 SHARDS = 8
@@ -30,49 +26,39 @@ T, B, GEN = 96, 2, 8
 
 
 def main():
-    cfg = get_smoke_config(ARCH)
-    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32,
-                         max_seq_len=T + GEN + 8)
-    data = SyntheticLM(cfg, InputShape("qs", T, B, "prefill"))
+    base_cfg = EngineConfig.smoke(
+        ARCH, n_shards=SHARDS, max_seq_len=T + GEN + 8,
+        compression=CompressionConfig(policy="ada_snapkv", budget=BUDGET,
+                                      alpha_max=2.0, obs_window=8, sink=2,
+                                      decode_margin=8),
+        planner=PlannerConfig(mode="sha", batch_cap=B))
+    data = SyntheticLM(base_cfg.model, InputShape("qs", T, B, "prefill"))
     batch = data.get_batch(0)
-    ccfg = CompressionConfig(policy="ada_snapkv", budget=BUDGET,
-                             alpha_max=2.0, obs_window=8, sink=2,
-                             decode_margin=8)
 
     # --- profiling pass (paper §4.1): run the compression policy on a sample
     # batch and measure the per-head retained lengths; the planner consumes
     # the measured profile, exactly like the paper's offline statistics
-    trivial = build_plan(np.ones((cfg.n_layers, cfg.n_kv_heads)), SHARDS,
-                         PlannerConfig(mode="sha"))
-    sp0 = slotify_params(params, trivial, cfg)
-    _, _, lens0 = prefill(sp0, data.get_batch(123), cfg,
-                          PlanArrays.from_plan(trivial), ccfg)
-    profile = profile_from_lengths(np.asarray(lens0, np.float64))
+    probe = Engine.build(base_cfg)
+    profile = probe.measure_profile(data.get_batch(123))
     print(f"measured profile per-head mean budgets: "
           f"{profile.mean(0).round(1).tolist()}\n")
 
     results = {}
     for mode, ch in [("sha", 0), ("fairkv_nodp", 0), ("fairkv_dp", 4)]:
-        plan = build_plan(profile, SHARDS,
-                          PlannerConfig(mode=mode, extra_copies=ch,
-                                        batch_cap=B))
-        pa = PlanArrays.from_plan(plan)
-        sp = slotify_params(params, plan, cfg)
-        state, logits, lens = prefill(sp, batch, cfg, pa, ccfg)
-        outs = [logits]
-        for _ in range(GEN):
-            state, logits = decode_step(sp, state, cfg, pa, ccfg)
-            outs.append(logits)
-        realized = profile_from_lengths(np.asarray(lens, np.float64))
+        cfg = base_cfg.replace(planner=PlannerConfig(
+            mode=mode, extra_copies=ch, batch_cap=B))
+        # shared params: the plan is a layout over one set of weights
+        eng = Engine.build(cfg, params=probe.params, profile=profile)
+        res = eng.generate(batch, GEN)
         results[mode] = {
-            "logits": jnp.stack(outs, 1),
-            "E": plan.efficiency(realized),
-            "makespan": plan.makespan(realized),
-            "tokens": np.asarray(state.last_tokens),
+            "logits": jnp.asarray(res.logits),
+            "E": res.efficiency,
+            "makespan": res.makespan,
+            "tokens": res.tokens[:, -1],
         }
-        print(f"{mode:13s} E={results[mode]['E']:.3f} "
-              f"makespan={results[mode]['makespan']:8.1f} "
-              f"last tokens={results[mode]['tokens'].tolist()}")
+        print(f"{mode:13s} E={res.efficiency:.3f} "
+              f"makespan={res.makespan:8.1f} "
+              f"last tokens={res.tokens[:, -1].tolist()}")
 
     d = float(jnp.abs(results["sha"]["logits"]
                       - results["fairkv_dp"]["logits"]).max())

@@ -1,24 +1,22 @@
-"""Example: continuous batching with slot-aware admission + online replanning.
+"""Example: streaming continuous batching through the `repro.api` facade.
 
-A short Poisson trace of requests flows through the scheduler on a smoke
+A short Poisson trace of requests flows through `Engine.stream` on a smoke
 config: requests queue while the batch is full, get admitted into freed rows
 mid-stream, and — because Ada-SnapKV's per-head budgets are imbalanced — the
 realized per-shard KV load drifts.  The replan trigger is set aggressively so
 the trace demonstrates an online replan: the head placement is rebuilt from
 the *realized* profile, the live cache is migrated into the new slot layout,
-and decoding continues without interruption.
+and decoding continues without interruption.  `Engine.stream` yields one
+`StreamEvent` per generated token, so the example also shows request-level
+token streaming.
 
 Run:  PYTHONPATH=src JAX_PLATFORMS=cpu python examples/serve_continuous.py
 """
-import jax
-import jax.numpy as jnp
-
-from repro.compression.base import CompressionConfig
-from repro.configs import get_smoke_config
-from repro.core import PlannerConfig, build_plan, synthetic_profile
-from repro.models import init_params
-from repro.serving import (
-    Scheduler,
+from repro.api import (
+    CompressionConfig,
+    Engine,
+    EngineConfig,
+    PlannerConfig,
     SchedulerConfig,
     latency_percentiles,
     synthesize_requests,
@@ -31,38 +29,50 @@ GEN = 10
 
 
 def main():
-    cfg = get_smoke_config(ARCH)
-    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32,
-                         max_seq_len=64)
-    ccfg = CompressionConfig(policy="ada_snapkv", budget=16, alpha_max=2.0,
-                             obs_window=8, sink=2, decode_margin=8)
-    # plan against a synthetic profile; the replan will use the realized one
-    prof = synthetic_profile(cfg.n_layers, cfg.n_kv_heads, budget=16,
-                             skew=1.0, seed=1)
-    pcfg = PlannerConfig(mode="fairkv_dp", extra_copies=4, batch_cap=ROWS)
-    plan = build_plan(prof, SHARDS, pcfg)
-    scfg = SchedulerConfig(max_rows=ROWS, replan_window=4,
-                           replan_threshold=1.05, replan_cooldown=10)
-    sched = Scheduler(cfg, params, plan, ccfg, scfg, planner_cfg=pcfg)
+    cfg = EngineConfig.smoke(
+        ARCH, n_shards=SHARDS, max_seq_len=64,
+        compression=CompressionConfig(policy="ada_snapkv", budget=16,
+                                      alpha_max=2.0, obs_window=8, sink=2,
+                                      decode_margin=8),
+        # plan against a synthetic profile; the replan will use the realized
+        # one (EngineConfig.profile_seed/skew control the synthetic draw)
+        planner=PlannerConfig(mode="fairkv_dp", extra_copies=4,
+                              batch_cap=ROWS),
+        scheduler=SchedulerConfig(max_rows=ROWS, replan_window=4,
+                                  replan_threshold=1.05, replan_cooldown=10))
+    eng = Engine.build(cfg)
 
-    reqs = synthesize_requests(8, rate=0.4, vocab_size=cfg.vocab_size,
+    reqs = synthesize_requests(8, rate=0.4, vocab_size=cfg.model.vocab_size,
                                min_prompt=12, max_prompt=28,
                                max_new_tokens=GEN, seed=3)
     print(f"{len(reqs)} requests, arrivals at steps "
           f"{[r.arrival_step for r in reqs]}")
-    out = sched.run(reqs, max_steps=500)
+    n_tokens = 0
+    for ev in eng.stream(reqs, max_steps=500):
+        n_tokens += 1
+        if ev.finished:
+            print(f"  [stream] req {ev.req_id} finished at step {ev.step} "
+                  f"({ev.index + 1} tokens)")
+    assert len(eng.finished_requests) == len(reqs), (
+        f"only {len(eng.finished_requests)}/{len(reqs)} requests finished "
+        f"within max_steps")
 
     print("\nper-request latency:")
-    for r in sched.finished:
+    for r in eng.finished_requests:
         print(f"  req {r.req_id}: prompt {r.prompt_len:3d} | queued "
               f"{r.queueing_steps():2d} steps | total {r.latency_steps():3d} "
               f"steps | {r.n_generated} tokens")
-    pct = latency_percentiles(sched.finished)
+    pct = latency_percentiles(eng.finished_requests)
+    # decode starts the same tick the first request is admitted, so
+    # mid-stream == admitted after the earliest admission tick (matches the
+    # scheduler's run() accounting)
+    first_admit = min(r.admit_step for r in eng.finished_requests)
+    mid = sum(1 for r in eng.finished_requests
+              if r.admit_step > first_admit)
     print(f"\np50 {pct['p50_steps']:.0f} / p99 {pct['p99_steps']:.0f} steps | "
-          f"{out['generated_tokens']} tokens | "
-          f"mid-stream admissions {out['mid_stream_admissions']}")
-    if out["replan_log"]:
-        for ev in out["replan_log"]:
+          f"{n_tokens} tokens streamed | mid-stream admissions {mid}")
+    if eng.replan_log:
+        for ev in eng.replan_log:
             tag = "accepted" if ev["accepted"] else "rejected"
             print(f"replan @ step {ev['step']} ({tag}): realized imbalance "
                   f"{ev['imbalance_before']:.3f} -> "
@@ -70,7 +80,6 @@ def main():
     else:
         print("no replan fired (trace too balanced) — rerun with a different "
               "seed or lower SchedulerConfig.replan_threshold")
-    assert out["finished"] == out["total"]
 
 
 if __name__ == "__main__":

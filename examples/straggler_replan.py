@@ -5,11 +5,15 @@ planner rebuilds the head placement with per-shard speed factors (the
 heterogeneous generalization of Eq. 4), shrinking the straggler's share of
 the retained-KV load and recovering most of the lost throughput.
 
+This is a planner-level simulation (no model weights), so it uses the
+planning building blocks re-exported by `repro.api`; the same path runs
+live on a weight-carrying engine via ``Engine.replan(shard_speeds=...)``.
+
 Run:  PYTHONPATH=src python examples/straggler_replan.py
 """
 import numpy as np
 
-from repro.core import (
+from repro.api import (
     PlannerConfig,
     build_plan,
     replan_for_stragglers,

@@ -1,0 +1,103 @@
+"""`repro.api` — the unified front door for FairKV serving (DESIGN.md §8).
+
+Every entry point (launch drivers, examples, benchmarks) composes the stack
+through this package instead of hand-wiring
+``ModelConfig → init params → plan → slot weights → prefill → decode``:
+
+- `EngineConfig` — one validated config (model + compression + planner +
+  scheduler); unknown policy / planner-mode / engine names fail at
+  construction with the registered-name list.
+- `Engine` — facade owning params, plan, slot weights, and cache;
+  `generate` (one-shot batch), `submit`/`step`/`stream`/`run_trace`
+  (continuous), `replan` (online replanning), `measure_profile`.
+- `register_policy` / `register_assignment_engine` — decorator registries
+  so third-party compression policies and placement solvers plug in
+  without touching core modules; `list_policies` / `list_engines` feed
+  validation and ``--help`` text.
+
+The facade also re-exports the underlying building blocks (`build_plan`,
+`slotify_params`, `prefill`, `decode_step`, the sub-configs, request/trace
+helpers) for planner-level studies and sharded-launch harnesses that need
+pieces below the `Engine` surface — importing them from here keeps
+``repro.api`` the single dependency edge into the serving stack.
+
+Heavyweight modules load lazily (PEP 562): the registry decorators must be
+importable from ``compression``/``core`` provider modules without dragging
+in the full serving stack (which would cycle back into them mid-import).
+"""
+from __future__ import annotations
+
+from repro.api.registry import (  # noqa: F401
+    ASSIGNMENT_ENGINE_REGISTRY,
+    POLICY_REGISTRY,
+    Registry,
+    get_assignment_engine,
+    get_policy,
+    list_engines,
+    list_policies,
+    register_assignment_engine,
+    register_policy,
+)
+
+# name -> "module:attr" table for lazy (PEP 562) exports
+_LAZY = {
+    # facade
+    "EngineConfig": "repro.api.config:EngineConfig",
+    "Engine": "repro.api.engine:Engine",
+    "GenerationResult": "repro.api.engine:GenerationResult",
+    "StreamEvent": "repro.api.engine:StreamEvent",
+    # sub-configs
+    "ModelConfig": "repro.configs.base:ModelConfig",
+    "CompressionConfig": "repro.compression.base:CompressionConfig",
+    "PlannerConfig": "repro.core.planner:PlannerConfig",
+    "SchedulerConfig": "repro.serving.scheduler:SchedulerConfig",
+    "PLANNER_MODES": "repro.core.planner:PLANNER_MODES",
+    # arch registry
+    "get_config": "repro.configs.base:get_config",
+    "get_smoke_config": "repro.configs.base:get_smoke_config",
+    "list_archs": "repro.configs.base:list_archs",
+    # planning building blocks (planner-level studies, no model needed)
+    "build_plan": "repro.core.planner:build_plan",
+    "replan_for_stragglers": "repro.core.planner:replan_for_stragglers",
+    "assign_items": "repro.core.assignment:assign_items",
+    "HeadPlacement": "repro.core.placement:HeadPlacement",
+    "PlanArrays": "repro.cache.slot_cache:PlanArrays",
+    "synthetic_profile": "repro.core.profiles:synthetic_profile",
+    "profile_from_lengths": "repro.core.profiles:profile_from_lengths",
+    "select_policy": "repro.compression.policies:select",
+    # low-level serving ops (sharded launch harness, parity tests)
+    "init_params": "repro.models:init_params",
+    "slotify_params": "repro.serving.engine:slotify_params",
+    "prefill": "repro.serving.engine:prefill",
+    "decode_step": "repro.serving.engine:decode_step",
+    "ServeState": "repro.serving.engine:ServeState",
+    # continuous-batching surface
+    "Scheduler": "repro.serving.scheduler:Scheduler",
+    "Request": "repro.serving.request:Request",
+    "RequestState": "repro.serving.request:RequestState",
+    "synthesize_requests": "repro.serving.request:synthesize_requests",
+    "poisson_arrivals": "repro.serving.request:poisson_arrivals",
+    "latency_percentiles": "repro.serving.request:latency_percentiles",
+}
+
+__all__ = sorted(
+    ["ASSIGNMENT_ENGINE_REGISTRY", "POLICY_REGISTRY", "Registry",
+     "get_assignment_engine", "get_policy", "list_engines", "list_policies",
+     "register_assignment_engine", "register_policy", *_LAZY])
+
+
+def __getattr__(name: str):
+    try:
+        target = _LAZY[name]
+    except KeyError:
+        raise AttributeError(
+            f"module 'repro.api' has no attribute {name!r}") from None
+    import importlib
+    module, attr = target.split(":")
+    value = getattr(importlib.import_module(module), attr)
+    globals()[name] = value  # cache for subsequent lookups
+    return value
+
+
+def __dir__():
+    return __all__

@@ -1,0 +1,113 @@
+"""`EngineConfig`: one validated config for the whole serving stack.
+
+Composes the four sub-configs that every entry point used to wire by hand —
+``ModelConfig`` (architecture), ``CompressionConfig`` (per-head KV budgets),
+``PlannerConfig`` (FairKV placement), ``SchedulerConfig`` (continuous
+batching) — plus the engine-level knobs (shard count, dtype, sequence
+headroom, profile seeding) that previously lived as loose locals in each
+caller.
+
+``__post_init__`` validates every *name-typed* field against the live
+registries (``repro.api.registry``) and the planner-mode list, so a typo'd
+policy / planner mode / assignment engine fails at construction time with
+the registered-name list — instead of surfacing as a bare ``KeyError`` deep
+inside a jitted trace, or worse, silently selecting a fallback.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.api.registry import list_engines, list_policies
+from repro.compression.base import CompressionConfig
+from repro.configs import get_config, get_smoke_config
+from repro.configs.base import ModelConfig
+from repro.core.planner import PLANNER_MODES, PlannerConfig
+from repro.serving.scheduler import SchedulerConfig
+
+# the one dtype-name table: validation and Engine's resolution both read it
+DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+          "float16": jnp.float16}
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Everything `Engine.build` needs, validated at construction.
+
+    ``dtype`` is a string (``float32`` / ``bfloat16`` / ``float16``) so the
+    config stays hashable and printable; `Engine` resolves it to a jnp dtype.
+    ``profile_skew`` / ``profile_seed`` parameterize the synthetic per-head
+    workload profile used when the caller does not supply a measured one.
+    """
+
+    model: ModelConfig
+    compression: CompressionConfig = field(default_factory=CompressionConfig)
+    planner: PlannerConfig = field(default_factory=PlannerConfig)
+    scheduler: SchedulerConfig = field(default_factory=SchedulerConfig)
+    n_shards: int = 1
+    dtype: str = "float32"
+    max_seq_len: int = 512
+    seed: int = 0  # PRNG seed for default parameter init
+    profile_skew: float = 1.0
+    profile_seed: int = 1
+
+    def __post_init__(self):
+        if not isinstance(self.model, ModelConfig):
+            raise TypeError(
+                f"model must be a ModelConfig, got {type(self.model).__name__}")
+        policy = self.compression.policy
+        if policy != "none" and policy not in list_policies():
+            raise ValueError(
+                f"unknown compression policy {policy!r}; registered: "
+                f"{list_policies()} (plus 'none'); add policies with "
+                f"@repro.api.register_policy")
+        if self.planner.mode not in PLANNER_MODES:
+            raise ValueError(
+                f"unknown planner mode {self.planner.mode!r}; known: "
+                f"{list(PLANNER_MODES)}")
+        if self.planner.engine not in list_engines():
+            raise ValueError(
+                f"unknown assignment engine {self.planner.engine!r}; "
+                f"registered: {list_engines()}; add engines with "
+                f"@repro.api.register_assignment_engine")
+        if self.dtype not in DTYPES:
+            raise ValueError(
+                f"unknown dtype {self.dtype!r}; known: {list(DTYPES)}")
+        if self.n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
+        if self.max_seq_len < 1:
+            raise ValueError(
+                f"max_seq_len must be >= 1, got {self.max_seq_len}")
+        if self.compression.budget < 1:
+            raise ValueError(
+                f"compression.budget must be >= 1, got "
+                f"{self.compression.budget}")
+        if self.scheduler.max_rows < 1:
+            raise ValueError(
+                f"scheduler.max_rows must be >= 1, got "
+                f"{self.scheduler.max_rows}")
+
+    # ---- constructors ------------------------------------------------------
+
+    @classmethod
+    def for_arch(cls, arch: str, *, smoke: bool = False,
+                 **overrides) -> "EngineConfig":
+        """Config for a registered architecture id (``--arch`` names).
+
+        ``smoke=True`` uses the arch's reduced CPU-testable variant.
+        Remaining keyword arguments override `EngineConfig` fields.
+        """
+        model = get_smoke_config(arch) if smoke else get_config(arch)
+        return cls(model=model, **overrides)
+
+    @classmethod
+    def smoke(cls, arch: str, **overrides) -> "EngineConfig":
+        """Shorthand for ``for_arch(arch, smoke=True, ...)``."""
+        return cls.for_arch(arch, smoke=True, **overrides)
+
+    def replace(self, **changes) -> "EngineConfig":
+        """`dataclasses.replace` that re-runs validation."""
+        return dataclasses.replace(self, **changes)

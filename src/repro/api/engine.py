@@ -1,0 +1,412 @@
+"""The `Engine` facade: one front door for FairKV serving.
+
+Owns the full serving composition — parameter init, plan construction,
+slot-layout weight permutation, and cache state — behind a handful of
+methods, so no caller re-wires
+``ModelConfig → init params → plan → slot weights → prefill → decode``
+by hand (DESIGN.md §8):
+
+- **one-shot batch**: `Engine.generate(prompts, max_new_tokens)` runs
+  prefill + compression + a jitted decode loop and returns a
+  `GenerationResult` (tokens, logits, realized per-head lengths, plan
+  metrics, timings).
+- **continuous**: `submit` / `step` / `stream` / `run_trace` wrap the
+  request scheduler (`repro.serving.scheduler.Scheduler`, DESIGN.md §7);
+  `stream` yields per-token `StreamEvent`s as requests progress.
+- **replanning**: `replan()` rebuilds the head placement — from a measured
+  profile and/or per-shard speed factors in one-shot mode, or from the
+  realized live-cache profile (migrating the cache in place) in continuous
+  mode — the PR-1 online-replanning path as a first-class method.
+- **profiling**: `measure_profile(batch)` runs a profiling prefill and
+  returns the (L, H) realized per-head retained lengths (the paper's §4.1
+  offline statistic) for feeding back into `replan` or a fresh `build`.
+
+The facade holds the *original-layout* parameters (`.params`) so replans
+can re-slotify, and exposes the low-level pieces (`.plan`,
+`.plan_arrays`, `.serve_params`, `.scheduler`) for telemetry and tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.config import DTYPES as _DTYPES
+from repro.api.config import EngineConfig
+from repro.cache.slot_cache import PlanArrays, migrate_cache
+from repro.core.placement import HeadPlacement
+from repro.core.planner import PlannerConfig, build_plan
+from repro.core.profiles import profile_from_lengths, synthetic_profile
+from repro.models import init_params
+from repro.serving import engine as _serve
+from repro.serving.request import Request
+from repro.serving.scheduler import Scheduler
+
+# ---------------------------------------------------------------------------
+# Result / event types
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class GenerationResult:
+    """Output of `Engine.generate` (one-shot batch mode).
+
+    ``tokens[:, 0]`` is the prefill argmax (the first generated token);
+    ``tokens[:, 1:]`` come from the decode loop.  ``logits`` aligns with
+    ``tokens``: entry t is the distribution the t-th token was taken from.
+    ``lengths`` is the realized per-head retained-length tensor
+    (L, Hkv, B) — the paper's workload observable; ``realized_profile``,
+    ``efficiency`` and ``makespan`` are derived from it against the active
+    plan (None for attention-free models).
+    """
+
+    tokens: np.ndarray  # (B, 1 + steps)
+    logits: Optional[np.ndarray]  # (B, 1 + steps, V) when collected
+    lengths: np.ndarray  # (L, Hkv, B) realized retained lengths
+    realized_profile: Optional[np.ndarray]  # (L, Hkv)
+    efficiency: Optional[float]  # plan E (Eq. 5) on the realized profile
+    makespan: Optional[float]  # plan max-shard load on the realized profile
+    prefill_s: float
+    step_s: List[float] = field(default_factory=list)  # per-decode-step wall
+
+
+@dataclass(frozen=True)
+class StreamEvent:
+    """One generated token from the continuous-mode `Engine.stream`."""
+
+    req_id: int
+    token: int
+    index: int  # position within the request's generated sequence
+    step: int  # scheduler step that produced it
+    finished: bool  # True on the request's last token
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+class Engine:
+    """Facade over the FairKV serving stack.  Construct via `Engine.build`."""
+
+    def __init__(self, cfg: EngineConfig, params: dict, plan: HeadPlacement,
+                 profile: Optional[np.ndarray],
+                 head_importance: Optional[np.ndarray] = None,
+                 mesh=None):
+        self.cfg = cfg
+        self.params = params  # original layout — kept for re-slotify
+        self.plan = plan
+        self.profile = profile  # (L, H) planning profile (None: attn-free)
+        self.head_importance = head_importance  # headkv per-head weights
+        self.mesh = mesh  # reserved for the sharded launch path (launch/)
+        self.pa = PlanArrays.from_plan(plan)
+        self.sp = _serve.slotify_params(params, plan, cfg.model)
+        self.state: Optional[_serve.ServeState] = None
+        # persisted straggler speed factors (set by a speed-aware replan);
+        # later replans and a lazily-created scheduler inherit them so the
+        # mitigation is never silently reverted
+        self._shard_speeds: Optional[np.ndarray] = None
+        self._scheduler: Optional[Scheduler] = None
+        self._decode = None  # jitted decode fn, built lazily
+        self._next_req_id = 0
+
+    # ---- construction ------------------------------------------------------
+
+    @classmethod
+    def build(cls, cfg: EngineConfig, *, params: Optional[dict] = None,
+              profile: Optional[np.ndarray] = None, rng=None, mesh=None,
+              head_importance: Optional[np.ndarray] = None) -> "Engine":
+        """Assemble an engine: params (init'd if not given), plan, slot
+        weights.
+
+        ``profile`` is the (L, H) expected per-head workload the planner
+        optimizes; default is a synthetic profile seeded from
+        ``cfg.profile_seed`` / ``cfg.profile_skew`` (swap in a measured one
+        from `measure_profile` for paper-faithful planning).  ``mesh`` is
+        accepted for the multi-host launch path and stored on the engine;
+        single-process callers omit it.
+        """
+        model = cfg.model
+        dtype = _DTYPES[cfg.dtype]
+        if params is None:
+            rng = jax.random.PRNGKey(cfg.seed) if rng is None else rng
+            params = init_params(model, rng, dtype=dtype,
+                                 max_seq_len=cfg.max_seq_len)
+        if model.attention_free:
+            plan = build_plan(np.ones((model.n_layers, 1)), 1,
+                              PlannerConfig(mode="sha", slots_per_shard=1))
+            profile = None
+        else:
+            if profile is None:
+                profile = synthetic_profile(
+                    model.n_layers, model.n_kv_heads,
+                    budget=cfg.compression.budget, skew=cfg.profile_skew,
+                    seed=cfg.profile_seed)
+            plan = build_plan(profile, cfg.n_shards, cfg.planner)
+        return cls(cfg, params, plan, profile,
+                   head_importance=head_importance, mesh=mesh)
+
+    # ---- low-level views ---------------------------------------------------
+
+    @property
+    def plan_arrays(self) -> PlanArrays:
+        return self.pa
+
+    @property
+    def serve_params(self) -> dict:
+        return self.sp
+
+    @property
+    def dtype(self):
+        return _DTYPES[self.cfg.dtype]
+
+    def _decode_fn(self):
+        """Jitted decode step (tokens always explicit so one trace serves
+        both free-running and teacher-forced generation)."""
+        if self._decode is None:
+            sp, model = self.sp, self.cfg.model
+            pa, ccfg = self.pa, self.cfg.compression
+            self._decode = jax.jit(
+                lambda st, tok: _serve.decode_step(sp, st, model, pa, ccfg,
+                                                   tokens=tok))
+        return self._decode
+
+    def _invalidate(self) -> None:
+        """Plan changed: rebuild slot weights + retrace decode."""
+        self.pa = PlanArrays.from_plan(self.plan)
+        self.sp = _serve.slotify_params(self.params, self.plan, self.cfg.model)
+        self._decode = None
+
+    # ---- one-shot serving --------------------------------------------------
+
+    def prefill(self, batch: Union[Dict[str, jnp.ndarray], np.ndarray],
+                rows: Optional[jnp.ndarray] = None):
+        """Run the prompt through prefill+compression; holds the resulting
+        cache on ``self.state``.  Returns (logits (B, V), lengths
+        (L, Hkv, B))."""
+        batch = self._as_batch(batch)
+        state, logits, lengths = _serve.prefill(
+            self.sp, batch, self.cfg.model, self.pa, self.cfg.compression,
+            head_importance=self.head_importance, rows=rows)
+        self.state = state
+        return logits, lengths
+
+    def generate(self, prompts: Union[Dict[str, jnp.ndarray], np.ndarray],
+                 max_new_tokens: int,
+                 teacher_tokens: Optional[np.ndarray] = None,
+                 collect_logits: bool = True) -> GenerationResult:
+        """One-shot batch generation: prefill + ``max_new_tokens`` decode
+        steps.
+
+        ``prompts`` is a (B, T) int token array or a prepared batch dict.
+        ``teacher_tokens`` (B, max_new_tokens), when given, forces the token
+        *fed* at each decode step (teacher forcing for fidelity evals); the
+        returned ``tokens`` are still the model's argmax choices.
+        """
+        t0 = time.perf_counter()
+        logits, lengths = self.prefill(prompts)
+        jax.block_until_ready(logits)
+        prefill_s = time.perf_counter() - t0
+        state = self.state
+        tokens = [np.asarray(state.last_tokens)]
+        logits_all = [np.asarray(logits)] if collect_logits else None
+        step = self._decode_fn()
+        step_s: List[float] = []
+        for t in range(max_new_tokens):
+            tok = (state.last_tokens if teacher_tokens is None
+                   else jnp.asarray(teacher_tokens[:, t], jnp.int32))
+            t0 = time.perf_counter()
+            state, lg = step(state, tok)
+            jax.block_until_ready(lg)
+            step_s.append(time.perf_counter() - t0)
+            tokens.append(np.asarray(state.last_tokens))
+            if collect_logits:
+                logits_all.append(np.asarray(lg))
+        self.state = state
+        lengths_np = np.asarray(lengths)
+        realized = eff = mk = None
+        if lengths_np.size:
+            realized = profile_from_lengths(np.asarray(lengths_np, np.float64))
+            eff = float(self.plan.efficiency(realized))
+            mk = float(self.plan.makespan(realized))
+        return GenerationResult(
+            tokens=np.stack(tokens, axis=1),
+            logits=(np.stack(logits_all, axis=1) if collect_logits else None),
+            lengths=lengths_np, realized_profile=realized, efficiency=eff,
+            makespan=mk, prefill_s=prefill_s, step_s=step_s)
+
+    def measure_profile(self, batch: Union[Dict, np.ndarray]) -> np.ndarray:
+        """Profiling pass (paper §4.1): run prefill+compression on a sample
+        batch and return the (L, H) mean realized per-head lengths.
+
+        The compression selection is plan-independent, so the measurement is
+        valid for planning *any* layout.  Engine state is left untouched.
+        """
+        saved = self.state
+        try:
+            _, lengths = self.prefill(batch)
+            return profile_from_lengths(np.asarray(lengths, np.float64))
+        finally:
+            self.state = saved
+
+    def _as_batch(self, batch) -> Dict[str, jnp.ndarray]:
+        if isinstance(batch, dict):
+            return batch
+        return {"tokens": jnp.asarray(batch, jnp.int32)}
+
+    # ---- replanning --------------------------------------------------------
+
+    def replan(self, profile: Optional[np.ndarray] = None,
+               shard_speeds: Optional[Sequence[float]] = None) -> dict:
+        """Rebuild the head placement and swap it in.
+
+        Continuous mode (scheduler live): delegates to the scheduler's
+        online replan — live-cache migration with accept/reject scoring
+        (DESIGN.md §7) — planning from the realized profile unless
+        ``profile`` and/or ``shard_speeds`` (straggler mitigation,
+        DESIGN.md §6) override the inputs.  One-shot mode: the plan is
+        rebuilt from ``profile`` (default: the build-time profile) and
+        optional ``shard_speeds``; a live one-shot cache is migrated into
+        the new layout.
+        """
+        if self._scheduler is not None:
+            event = self._scheduler.replan(profile=profile,
+                                           shard_speeds=shard_speeds)
+            self._sync_from_scheduler()
+            return event
+        if self.cfg.model.attention_free:
+            raise ValueError("attention-free models have no head placement "
+                             "to replan")
+        prof = self.profile if profile is None else np.asarray(profile)
+        if shard_speeds is not None:
+            self._shard_speeds = np.asarray(shard_speeds, float)
+        old_pa = self.pa
+        self.plan = build_plan(prof, self.cfg.n_shards, self.cfg.planner,
+                               shard_speeds=self._shard_speeds)
+        self.profile = prof
+        self._invalidate()
+        migrated = False
+        if self.state is not None and self.state.cache is not None:
+            cache = migrate_cache(self.state.cache, old_pa, self.pa)
+            self.state = dataclasses.replace(self.state, cache=cache)
+            migrated = True
+        return {"plan": self.plan, "migrated_cache": migrated,
+                "shard_speeds": (None if self._shard_speeds is None
+                                 else list(self._shard_speeds))}
+
+    # ---- continuous serving ------------------------------------------------
+
+    @property
+    def scheduler(self) -> Optional[Scheduler]:
+        """The live continuous-batching scheduler (None until first
+        `submit` / `step` / `stream`)."""
+        return self._scheduler
+
+    def _ensure_scheduler(self) -> Scheduler:
+        if self._scheduler is None:
+            self._scheduler = Scheduler(
+                self.cfg.model, self.params, self.plan,
+                self.cfg.compression, self.cfg.scheduler,
+                planner_cfg=self.cfg.planner, dtype=self.dtype,
+                serve_params=self.sp)  # same plan -> reuse slot weights
+            # inherit any one-shot straggler mitigation
+            self._scheduler.shard_speeds = self._shard_speeds
+        return self._scheduler
+
+    def _sync_from_scheduler(self) -> None:
+        """Adopt the scheduler's plan/weights after an online replan (the
+        scheduler owns them in continuous mode)."""
+        sched = self._scheduler
+        if sched is not None and sched.plan is not self.plan:
+            self.plan, self.pa, self.sp = sched.plan, sched.pa, sched.sp
+            self._decode = None
+
+    def warmup(self) -> None:
+        """Compile the continuous decode step outside any timed region (an
+        all-inactive step has the same trace signature as live ones)."""
+        sched = self._ensure_scheduler()
+        sched._decode(sched.state, sched.active_mask())
+
+    def submit(self, request: Union[Request, np.ndarray, Sequence[int]],
+               max_new_tokens: int = 16, eos_id: Optional[int] = None,
+               arrival_step: int = 0) -> Request:
+        """Queue a request (continuous mode).  Accepts a prepared `Request`
+        or a raw prompt token sequence."""
+        if not isinstance(request, Request):
+            request = Request(req_id=self._next_req_id,
+                              prompt=np.asarray(request, np.int32),
+                              arrival_step=arrival_step,
+                              max_new_tokens=max_new_tokens, eos_id=eos_id)
+        self._next_req_id = max(self._next_req_id, request.req_id + 1)
+        self._ensure_scheduler().submit(request)
+        return request
+
+    def step(self) -> dict:
+        """One scheduler tick: admit → decode → retire → (maybe) replan."""
+        ev = self._ensure_scheduler().step()
+        self._sync_from_scheduler()
+        return ev
+
+    def stream(self, requests: Sequence[Request],
+               max_steps: int = 10_000) -> Iterator[StreamEvent]:
+        """Drive a request trace, yielding a `StreamEvent` per generated
+        token as scheduler steps complete (per-request token iteration).
+
+        Requests are submitted at their ``arrival_step``; iteration ends
+        when every request has finished or ``max_steps`` elapses.  Trace
+        telemetry stays available on `self.scheduler` afterwards.
+        """
+        sched = self._ensure_scheduler()
+        pending = sorted(requests, key=lambda r: (r.arrival_step, r.req_id))
+        emitted = {r.req_id: 0 for r in pending}
+        i = 0
+        # completion is judged on *these* requests, not the scheduler's
+        # global finish count — other in-flight requests finishing must not
+        # truncate this stream
+        while (any(not r.is_finished for r in pending)
+               and sched.step_idx < max_steps):
+            while (i < len(pending)
+                   and pending[i].arrival_step <= sched.step_idx):
+                self.submit(pending[i])
+                i += 1
+            ev = sched.step()
+            self._sync_from_scheduler()
+            for req in pending:
+                n = req.n_generated
+                while emitted[req.req_id] < n:
+                    k = emitted[req.req_id]
+                    emitted[req.req_id] = k + 1
+                    yield StreamEvent(
+                        req_id=req.req_id, token=req.generated[k], index=k,
+                        step=ev["step"],
+                        finished=req.is_finished and k == n - 1)
+
+    def run_trace(self, requests: Sequence[Request],
+                  max_steps: int = 10_000) -> dict:
+        """Drive a full trace to completion; returns the scheduler's summary
+        telemetry (steps, tokens/s, mid-stream admissions, replan log)."""
+        out = self._ensure_scheduler().run(requests, max_steps=max_steps)
+        self._sync_from_scheduler()
+        return out
+
+    # ---- continuous-mode telemetry ----------------------------------------
+
+    @property
+    def finished_requests(self) -> List[Request]:
+        return [] if self._scheduler is None else self._scheduler.finished
+
+    @property
+    def replan_log(self) -> List[dict]:
+        return [] if self._scheduler is None else self._scheduler.replan_log
+
+    def imbalance(self) -> float:
+        """max/mean realized per-shard KV load (continuous mode)."""
+        if self._scheduler is None:
+            raise RuntimeError("imbalance() requires the continuous "
+                               "scheduler; call submit/stream first")
+        return self._scheduler.imbalance()

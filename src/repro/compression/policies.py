@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.registry import POLICY_REGISTRY, register_policy
 from repro.compression.base import CompressionConfig, topk_select
 
 Selection = Tuple[jnp.ndarray, jnp.ndarray]  # (idx (B,Hkv,C), lengths (B,Hkv))
@@ -44,6 +45,7 @@ def _uniform_budget(scores: jnp.ndarray, budget: int, capacity: int) -> Selectio
     return topk_select(scores, keep, capacity)
 
 
+@register_policy("streaming_llm")
 def streaming_llm(scores: jnp.ndarray, cfg: CompressionConfig,
                   layer_idx: int, n_layers: int) -> Selection:
     """Sinks + recent window; scores are ignored (balanced, position-only)."""
@@ -58,12 +60,14 @@ def streaming_llm(scores: jnp.ndarray, cfg: CompressionConfig,
     return topk_select(synthetic + 1e-6 * pos / T, keep, cap)
 
 
+@register_policy("snapkv")
 def snapkv(scores: jnp.ndarray, cfg: CompressionConfig,
            layer_idx: int, n_layers: int) -> Selection:
     scores = _boost_guaranteed(scores, scores.shape[-1], cfg)
     return _uniform_budget(scores, cfg.budget, cfg.static_capacity())
 
 
+@register_policy("pyramidkv")
 def pyramidkv(scores: jnp.ndarray, cfg: CompressionConfig,
               layer_idx: int, n_layers: int) -> Selection:
     """Budget decays linearly with depth (early layers keep more)."""
@@ -74,6 +78,7 @@ def pyramidkv(scores: jnp.ndarray, cfg: CompressionConfig,
     return _uniform_budget(scores, budget, cfg.static_capacity())
 
 
+@register_policy("h2o")
 def h2o(scores: jnp.ndarray, cfg: CompressionConfig,
         layer_idx: int, n_layers: int) -> Selection:
     """Heavy hitters: half budget by accumulated score, half recent.
@@ -107,6 +112,7 @@ def _pooled_allocation(scores: jnp.ndarray, pool_size: jnp.ndarray,
     return keep.astype(jnp.int32)
 
 
+@register_policy("ada_snapkv")
 def ada_snapkv(scores: jnp.ndarray, cfg: CompressionConfig,
                layer_idx: int, n_layers: int) -> Selection:
     B, Hkv, T = scores.shape
@@ -117,6 +123,7 @@ def ada_snapkv(scores: jnp.ndarray, cfg: CompressionConfig,
     return topk_select(scores, keep, cap)
 
 
+@register_policy("headkv")
 def headkv(scores: jnp.ndarray, cfg: CompressionConfig,
            layer_idx: int, n_layers: int,
            head_importance: Optional[jnp.ndarray] = None) -> Selection:
@@ -142,14 +149,9 @@ def headkv(scores: jnp.ndarray, cfg: CompressionConfig,
     return topk_select(scores, keep, cap)
 
 
-POLICIES = {
-    "streaming_llm": streaming_llm,
-    "snapkv": snapkv,
-    "pyramidkv": pyramidkv,
-    "h2o": h2o,
-    "ada_snapkv": ada_snapkv,
-    "headkv": headkv,
-}
+# Live Mapping view over the registry: third-party ``@register_policy``
+# providers appear here automatically (the old hardcoded dict literal is gone).
+POLICIES = POLICY_REGISTRY
 
 BALANCED = {"streaming_llm", "snapkv", "pyramidkv", "h2o"}
 IMBALANCED = {"ada_snapkv", "headkv"}
@@ -157,10 +159,9 @@ IMBALANCED = {"ada_snapkv", "headkv"}
 
 def select(policy: str, scores: jnp.ndarray, cfg: CompressionConfig,
            layer_idx: int, n_layers: int, **kw) -> Selection:
+    """Dispatch to a registered policy; ``"none"`` retains every position."""
     if policy == "none":
         B, Hkv, T = scores.shape
         idx = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, Hkv, T))
         return idx, jnp.full((B, Hkv), T, jnp.int32)
-    if policy not in POLICIES:
-        raise KeyError(f"unknown policy {policy!r}; known: {sorted(POLICIES)}")
-    return POLICIES[policy](scores, cfg, layer_idx, n_layers, **kw)
+    return POLICY_REGISTRY[policy](scores, cfg, layer_idx, n_layers, **kw)

@@ -15,7 +15,13 @@ from repro.core.latency import (  # noqa: F401
     RooflineLatencyModel,
 )
 from repro.core.placement import HeadPlacement, LayerPlacement, layer_from_assignment  # noqa: F401
-from repro.core.planner import PlannerConfig, build_plan, plan_layer, replan_for_stragglers  # noqa: F401
+from repro.core.planner import (  # noqa: F401
+    PLANNER_MODES,
+    PlannerConfig,
+    build_plan,
+    plan_layer,
+    replan_for_stragglers,
+)
 from repro.core.profiles import (  # noqa: F401
     cosine_similarity,
     profile_from_lengths,

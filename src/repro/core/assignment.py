@@ -2,7 +2,7 @@
 
 The optimization target is Eq. 4: minimize the max per-shard load
 ``max_j Σ_i x_ij · w_i / r_i`` — weighted multiway number partitioning
-(makespan scheduling), NP-hard.  Three engines, composable:
+(makespan scheduling), NP-hard.  Three primitives, composable:
 
 - ``greedy_lpt``      — Longest-Processing-Time first; 4/3-approx, O(n log n).
 - ``local_search``    — move/swap refinement of any assignment.
@@ -11,15 +11,36 @@ The optimization target is Eq. 4: minimize the max per-shard load
                         incumbent, partial-max + remaining-lower-bound prunes,
                         and a node budget keeps worst-case time bounded.
 
-All engines accept ``shard_speeds`` (relative speed per shard; default 1.0) —
-the straggler-mitigation extension: load_j is divided by speed_j so slower
-shards receive proportionally less work (DESIGN.md §6).
+All primitives accept ``shard_speeds`` (relative speed per shard; default
+1.0) — the straggler-mitigation extension: load_j is divided by speed_j so
+slower shards receive proportionally less work (DESIGN.md §6).
+
+**Engines** (the ``engine=`` strings of ``assign_items`` /
+``PlannerConfig.engine``) are registered through
+``repro.api.register_assignment_engine`` — the old string if/elif is gone,
+so third-party solvers plug in without touching this file.  The engine
+contract::
+
+    @register_assignment_engine("my_solver")
+    def my_solver(weights, n_shards, slots_per_shard, *, shard_speeds=None,
+                  item_group=None, initial_load=None,
+                  node_budget=200_000) -> List[List[int]]: ...
+
+Built-ins: ``greedy`` (LPT + feasibility fallback + local search),
+``backtracking`` (greedy incumbent + branch-and-bound; **rejects**
+``item_group`` — the search does not implement replica distinct-shard
+exclusion), ``auto`` (backtracking when replica-free, greedy otherwise).
 """
 from __future__ import annotations
 
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from repro.api.registry import (
+    ASSIGNMENT_ENGINE_REGISTRY,
+    register_assignment_engine,
+)
 
 
 def _loads_ok(items_per_shard: Sequence[int], cap: int) -> bool:
@@ -238,17 +259,15 @@ def backtracking(
     return best_assign, best
 
 
-def assign_items(
+def _greedy_refined(
     weights: Sequence[float],
     n_shards: int,
     slots_per_shard: int,
-    engine: str = "auto",
     shard_speeds: Optional[Sequence[float]] = None,
     item_group: Optional[Sequence[int]] = None,
     initial_load: Optional[Sequence[float]] = None,
-    node_budget: int = 200_000,
 ) -> List[List[int]]:
-    """Front door: LPT → local search → (optionally) branch-and-bound."""
+    """LPT (with feasibility fallback for replica sets) + local search."""
     try:
         assign = greedy_lpt(weights, n_shards, slots_per_shard, shard_speeds,
                             item_group, initial_load)
@@ -278,13 +297,97 @@ def assign_items(
             assign[j].append(i)
             groups[j].add(g)
             load[j] += weights[i]
-    assign = local_search(assign, weights, n_shards, slots_per_shard,
-                          shard_speeds, item_group, initial_load)
-    if engine in ("auto", "backtracking") and item_group is None:
-        bt, _ = backtracking(weights, n_shards, slots_per_shard, shard_speeds,
-                             incumbent=assign, initial_load=initial_load,
-                             node_budget=node_budget)
-        assign = bt
-    elif engine not in ("auto", "backtracking", "greedy"):
-        raise ValueError(f"unknown engine {engine!r}")
-    return assign
+    return local_search(assign, weights, n_shards, slots_per_shard,
+                        shard_speeds, item_group, initial_load)
+
+
+@register_assignment_engine("greedy")
+def _engine_greedy(
+    weights: Sequence[float],
+    n_shards: int,
+    slots_per_shard: int,
+    *,
+    shard_speeds: Optional[Sequence[float]] = None,
+    item_group: Optional[Sequence[int]] = None,
+    initial_load: Optional[Sequence[float]] = None,
+    node_budget: int = 200_000,
+) -> List[List[int]]:
+    """LPT + local search; supports replica groups."""
+    return _greedy_refined(weights, n_shards, slots_per_shard, shard_speeds,
+                           item_group, initial_load)
+
+
+@register_assignment_engine("backtracking")
+def _engine_backtracking(
+    weights: Sequence[float],
+    n_shards: int,
+    slots_per_shard: int,
+    *,
+    shard_speeds: Optional[Sequence[float]] = None,
+    item_group: Optional[Sequence[int]] = None,
+    initial_load: Optional[Sequence[float]] = None,
+    node_budget: int = 200_000,
+) -> List[List[int]]:
+    """Branch-and-bound over a greedy incumbent; replica-free inputs only.
+
+    ``item_group`` is rejected rather than silently downgraded to greedy
+    (the historical behavior): the branch-and-bound search does not enforce
+    the replicas-on-distinct-shards constraint, so honoring the request
+    would return an invalid plan and ignoring it would lie about the engine
+    that actually ran.
+    """
+    if item_group is not None:
+        raise ValueError(
+            "engine='backtracking' does not support replica groups "
+            "(item_group): the branch-and-bound search cannot enforce the "
+            "distinct-shard-per-head constraint.  Use engine='greedy', or "
+            "engine='auto' to select the best supported engine "
+            "automatically.")
+    incumbent = _greedy_refined(weights, n_shards, slots_per_shard,
+                                shard_speeds, None, initial_load)
+    bt, _ = backtracking(weights, n_shards, slots_per_shard, shard_speeds,
+                         incumbent=incumbent, initial_load=initial_load,
+                         node_budget=node_budget)
+    return bt
+
+
+@register_assignment_engine("auto")
+def _engine_auto(
+    weights: Sequence[float],
+    n_shards: int,
+    slots_per_shard: int,
+    *,
+    shard_speeds: Optional[Sequence[float]] = None,
+    item_group: Optional[Sequence[int]] = None,
+    initial_load: Optional[Sequence[float]] = None,
+    node_budget: int = 200_000,
+) -> List[List[int]]:
+    """Strongest supported engine: branch-and-bound when replica-free,
+    greedy + local search otherwise."""
+    if item_group is None:
+        return _engine_backtracking(
+            weights, n_shards, slots_per_shard, shard_speeds=shard_speeds,
+            initial_load=initial_load, node_budget=node_budget)
+    return _greedy_refined(weights, n_shards, slots_per_shard, shard_speeds,
+                           item_group, initial_load)
+
+
+def assign_items(
+    weights: Sequence[float],
+    n_shards: int,
+    slots_per_shard: int,
+    engine: str = "auto",
+    shard_speeds: Optional[Sequence[float]] = None,
+    item_group: Optional[Sequence[int]] = None,
+    initial_load: Optional[Sequence[float]] = None,
+    node_budget: int = 200_000,
+) -> List[List[int]]:
+    """Front door: dispatch to a registered assignment engine by name.
+
+    Unknown names raise ``KeyError`` listing the registered engines (the
+    same list ``repro.api.list_engines`` feeds into config validation).
+    """
+    fn = ASSIGNMENT_ENGINE_REGISTRY[engine]
+    return fn(weights, n_shards, slots_per_shard, shard_speeds=shard_speeds,
+              item_group=item_group, initial_load=initial_load,
+              node_budget=node_budget)

@@ -27,9 +27,13 @@ from repro.core.assignment import assign_items, local_search
 from repro.core.placement import HeadPlacement, LayerPlacement, layer_from_assignment
 
 
+# planner modes (paper Fig. 2 arms) — the list EngineConfig validates against
+PLANNER_MODES = ("sha", "fairkv_nodp", "fairkv_dp")
+
+
 @dataclass(frozen=True)
 class PlannerConfig:
-    mode: str = "fairkv_dp"  # sha | fairkv_nodp | fairkv_dp
+    mode: str = "fairkv_dp"  # one of PLANNER_MODES
     extra_copies: int = 4  # CH, paper Fig. 5
     r_max: Optional[int] = None  # Eq. 3 cap; default = n_shards
     slots_per_shard: Optional[int] = None  # default: ceil-based minimum
@@ -96,8 +100,9 @@ def plan_layer(
                             fill=cfg.fill_empty_slots, r_cap=r_hard)
         return layer_from_assignment(assign, n_shards, slots_per_shard)
 
-    if cfg.mode not in ("fairkv_nodp", "fairkv_dp"):
-        raise ValueError(f"unknown mode {cfg.mode!r}")
+    if cfg.mode not in PLANNER_MODES:
+        raise ValueError(
+            f"unknown planner mode {cfg.mode!r}; known: {list(PLANNER_MODES)}")
 
     # ---- choose replica counts ----------------------------------------------
     # Base: uniform replication filling the slot grid (identical to SHA's

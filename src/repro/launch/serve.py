@@ -1,62 +1,63 @@
 """Serving driver: ``python -m repro.launch.serve --arch <id> [--smoke]``.
 
-Default (one-shot) mode: prefill + compression (Ada-SnapKV by default) →
-FairKV plan → slot-layout decode over a fixed batch.  Prints per-step
-latency, the realized per-head budget imbalance, the plan's efficiency E,
-and the generated tokens.
+Default (one-shot) mode: `repro.api.Engine.generate` — prefill + compression
+(Ada-SnapKV by default) → FairKV plan → slot-layout decode over a fixed
+batch.  Prints per-step latency, the realized per-head budget imbalance, the
+plan's efficiency E, and the generated tokens.
 
-``--continuous`` mode drives the continuous-batching scheduler instead
-(DESIGN.md §7): a Poisson trace of requests (``--rate`` arrivals per decode
-step, ``--requests`` total) flows through admission → interleaved decode →
-retirement, with online replanning when the realized per-shard KV imbalance
-drifts.  Prints per-request latency, p50/p99, and the replan log.
+``--continuous`` mode drives the continuous-batching scheduler through the
+same facade (`Engine.run_trace`, DESIGN.md §7): a Poisson trace of requests
+(``--rate`` arrivals per decode step, ``--requests`` total) flows through
+admission → interleaved decode → retirement, with online replanning when the
+realized per-shard KV imbalance drifts.  Prints per-request latency,
+p50/p99, and the replan log.
+
+Policy and planner names are validated by `EngineConfig` against the live
+registries — ``--help`` lists whatever is registered, including plugins.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.cache.slot_cache import PlanArrays
-from repro.compression.base import CompressionConfig
-from repro.configs import get_config, get_smoke_config
-from repro.configs.base import InputShape
-from repro.core import PlannerConfig, build_plan, profile_from_lengths, synthetic_profile
-from repro.models import init_params
-from repro.serving import (
-    Scheduler,
+from repro.api import (
+    PLANNER_MODES,
+    CompressionConfig,
+    Engine,
+    EngineConfig,
+    PlannerConfig,
     SchedulerConfig,
-    decode_step,
     latency_percentiles,
-    prefill,
-    slotify_params,
+    list_engines,
+    list_policies,
     synthesize_requests,
 )
+from repro.configs.base import InputShape
 from repro.training.data import SyntheticLM
 
 
+def _engine_config(args, max_seq_len: int, batch_cap: int,
+                   scheduler: SchedulerConfig = SchedulerConfig()
+                   ) -> EngineConfig:
+    # attention-free archs get a trivial single-shard plan inside
+    # Engine.build, so n_shards/planner pass through unconditionally
+    return EngineConfig.for_arch(
+        args.arch, smoke=args.smoke, n_shards=args.shards,
+        dtype="float32" if args.smoke else "bfloat16",
+        max_seq_len=max_seq_len,
+        compression=CompressionConfig(
+            policy=args.policy, budget=args.budget, alpha_max=2.0,
+            obs_window=8, sink=2,
+            decode_margin=max(8, getattr(args, "gen", 8))),
+        planner=PlannerConfig(mode=args.planner, engine=args.engine,
+                              extra_copies=args.copies, batch_cap=batch_cap),
+        scheduler=scheduler)
+
+
 def run_continuous(args) -> None:
-    """Poisson-trace continuous batching on the scheduler."""
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    dtype = jnp.float32 if args.smoke else jnp.bfloat16
+    """Poisson-trace continuous batching via the facade."""
     max_prompt = max(args.min_prompt, args.max_prompt)
-    params = init_params(cfg, jax.random.PRNGKey(0), dtype=dtype,
-                         max_seq_len=max_prompt + args.gen + 8)
-    ccfg = CompressionConfig(policy=args.policy, budget=args.budget,
-                             alpha_max=2.0, obs_window=8, sink=2,
-                             decode_margin=max(8, args.gen))
-    if cfg.attention_free:
-        pcfg = PlannerConfig(mode="sha", slots_per_shard=1)
-        plan = build_plan(np.ones((cfg.n_layers, 1)), 1, pcfg)
-    else:
-        prof = synthetic_profile(cfg.n_layers, cfg.n_kv_heads,
-                                 budget=args.budget, skew=1.0, seed=1)
-        pcfg = PlannerConfig(mode=args.planner, extra_copies=args.copies,
-                             batch_cap=args.rows)
-        plan = build_plan(prof, args.shards, pcfg)
     scfg = SchedulerConfig(
         max_rows=args.rows,
         max_live_tokens=args.max_live_tokens or None,
@@ -65,21 +66,22 @@ def run_continuous(args) -> None:
         replan_cooldown=args.replan_cooldown,
         enable_replan=not args.no_replan,
     )
-    sched = Scheduler(cfg, params, plan, ccfg, scfg, planner_cfg=pcfg,
-                      dtype=dtype)
-    reqs = synthesize_requests(args.requests, args.rate, cfg.vocab_size,
+    ecfg = _engine_config(args, max_prompt + args.gen + 8, args.rows, scfg)
+    eng = Engine.build(ecfg)
+    reqs = synthesize_requests(args.requests, args.rate,
+                               ecfg.model.vocab_size,
                                min_prompt=args.min_prompt,
                                max_prompt=max_prompt,
                                max_new_tokens=args.gen, seed=args.seed)
     print(f"continuous: {len(reqs)} requests, rate {args.rate}/step, "
           f"{args.rows} rows, planner {args.planner}")
-    out = sched.run(reqs, max_steps=args.max_steps)
-    for r in sched.finished:
+    out = eng.run_trace(reqs, max_steps=args.max_steps)
+    for r in eng.finished_requests:
         print(f"req {r.req_id}: prompt {r.prompt_len:3d} | arrive "
               f"{r.arrival_step:3d} admit {r.admit_step:3d} finish "
               f"{r.finish_step:3d} | queued {r.queueing_steps():2d} steps | "
               f"{r.n_generated} tokens")
-    pct = latency_percentiles(sched.finished)
+    pct = latency_percentiles(eng.finished_requests)
     print(f"steps {out['steps']} | {out['generated_tokens']} tokens in "
           f"{out['wall_s']:.1f}s = {out['tokens_per_s']:.1f} tok/s | "
           f"latency p50 {pct.get('p50_steps', float('nan')):.0f} / p99 "
@@ -98,6 +100,25 @@ def run_continuous(args) -> None:
                            "raise --requests or lower --rows")
 
 
+def run_oneshot(args) -> None:
+    """Fixed-batch serve: one prefill + ``--gen`` decode steps."""
+    ecfg = _engine_config(args, args.prompt_len + args.gen + 8, args.batch)
+    eng = Engine.build(ecfg)
+    data = SyntheticLM(ecfg.model, InputShape("cli", args.prompt_len,
+                                              args.batch, "prefill"))
+    res = eng.generate(data.get_batch(0), args.gen, collect_logits=False)
+    if res.lengths.size:
+        lens_np = np.asarray(res.lengths, np.float64)
+        print(f"prefill {res.prefill_s * 1e3:7.1f} ms | realized per-head "
+              f"budget min/mean/max = {lens_np.min():.0f}/{lens_np.mean():.0f}"
+              f"/{lens_np.max():.0f} | plan E = "
+              f"{res.efficiency:.3f} ({args.planner})")
+    print(f"decode  {np.median(res.step_s) * 1e3:7.1f} ms/step (median of "
+          f"{args.gen}; first {res.step_s[0] * 1e3:.0f} ms incl. compile)")
+    for b in range(min(args.batch, 2)):
+        print(f"row {b}: {res.tokens[b].tolist()}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -106,9 +127,13 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--budget", type=int, default=32)
-    ap.add_argument("--policy", default="ada_snapkv")
+    ap.add_argument("--policy", default="ada_snapkv",
+                    help=f"compression policy; registered: {list_policies()}")
     ap.add_argument("--planner", default="fairkv_dp",
-                    choices=["sha", "fairkv_nodp", "fairkv_dp"])
+                    choices=list(PLANNER_MODES))
+    ap.add_argument("--engine", default="auto",
+                    help="assignment engine; registered: "
+                         f"{list_engines()}")
     ap.add_argument("--shards", type=int, default=4,
                     help="logical model shards for the plan")
     ap.add_argument("--copies", type=int, default=4, help="CH")
@@ -135,57 +160,8 @@ def main() -> None:
 
     if args.continuous:
         run_continuous(args)
-        return
-
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    dtype = jnp.float32 if args.smoke else jnp.bfloat16
-    params = init_params(cfg, jax.random.PRNGKey(0), dtype=dtype,
-                         max_seq_len=args.prompt_len + args.gen + 8)
-    shape = InputShape("cli", args.prompt_len, args.batch, "prefill")
-    data = SyntheticLM(cfg, shape)
-    batch = data.get_batch(0)
-
-    ccfg = CompressionConfig(policy=args.policy, budget=args.budget,
-                             alpha_max=2.0, obs_window=8, sink=2,
-                             decode_margin=8)
-    if cfg.attention_free:
-        plan = build_plan(np.ones((cfg.n_layers, 1)), 1,
-                          PlannerConfig(mode="sha", slots_per_shard=1))
     else:
-        prof = synthetic_profile(cfg.n_layers, cfg.n_kv_heads,
-                                 budget=args.budget, skew=1.0, seed=1)
-        plan = build_plan(prof, args.shards,
-                          PlannerConfig(mode=args.planner,
-                                        extra_copies=args.copies,
-                                        batch_cap=args.batch))
-    pa = PlanArrays.from_plan(plan)
-    sp = slotify_params(params, plan, cfg)
-
-    t0 = time.time()
-    state, logits, lens = prefill(sp, batch, cfg, pa, ccfg)
-    jax.block_until_ready(logits)
-    t_prefill = time.time() - t0
-    if lens.size:
-        lens_np = np.asarray(lens, np.float64)
-        prof_real = profile_from_lengths(np.transpose(lens_np, (0, 1, 2)))
-        print(f"prefill {t_prefill * 1e3:7.1f} ms | realized per-head budget "
-              f"min/mean/max = {lens_np.min():.0f}/{lens_np.mean():.0f}/"
-              f"{lens_np.max():.0f} | plan E = "
-              f"{plan.efficiency(prof_real):.3f} ({args.planner})")
-    tokens = [np.asarray(state.last_tokens)]
-    step = jax.jit(lambda st: decode_step(sp, st, cfg, pa, ccfg))
-    times = []
-    for _ in range(args.gen):
-        t0 = time.time()
-        state, logits = step(state)
-        jax.block_until_ready(logits)
-        times.append(time.time() - t0)
-        tokens.append(np.asarray(state.last_tokens))
-    gen = np.stack(tokens, 1)
-    print(f"decode  {np.median(times) * 1e3:7.1f} ms/step (median of "
-          f"{args.gen}; first {times[0] * 1e3:.0f} ms incl. compile)")
-    for b in range(min(args.batch, 2)):
-        print(f"row {b}: {gen[b].tolist()}")
+        run_oneshot(args)
 
 
 if __name__ == "__main__":

@@ -1,9 +1,11 @@
 """Cell builders: (arch × shape × mesh) → jit-able step + ShapeDtypeStruct args.
 
-Every assigned cell lowers one of three steps:
-- train_4k     → ``train_step``   (params, opt_state, batch)
-- prefill_32k  → ``prefill``      (serve_params, batch, plan, ccfg)
-- decode_32k / long_500k → ``decode_step`` (serve_params, state, plan, ccfg)
+Every assigned cell lowers one of three steps (serving steps via the
+``repro.api`` facade's low-level passthroughs):
+- train_4k     → ``train_step``       (params, opt_state, batch)
+- prefill_32k  → ``api.prefill``      (serve_params, batch, plan, ccfg)
+- decode_32k / long_500k → ``api.decode_step`` (serve_params, state, plan,
+  ccfg)
 
 All array arguments are ShapeDtypeStructs (no allocation); plan arrays are
 tiny and concrete (the planner is real).  Compression settings per cell are
@@ -23,16 +25,16 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import api
 from repro.cache.slot_cache import PlanArrays, SlotCache
 from repro.compression.base import CompressionConfig
 from repro.configs.base import InputShape, ModelConfig
 from repro.core.placement import HeadPlacement
-from repro.core.planner import PlannerConfig, build_plan
+from repro.core.planner import PlannerConfig
 from repro.core.profiles import synthetic_profile
 from repro.distributed.param_specs import guarded, tree_shardings
 from repro.distributed.sharding import ShardingRules, serve_rules, train_rules, use_rules
 from repro.models import transformer as M
-from repro.serving import engine as E
 from repro.training.optimizer import AdamWState, OptimizerConfig
 from repro.training.train_loop import train_step
 
@@ -66,10 +68,10 @@ def cell_plan(cfg: ModelConfig, n_model_shards: int,
         return None
     profile = synthetic_profile(cfg.n_layers, cfg.n_kv_heads, budget=1024,
                                 skew=1.0, seed=seed)
-    return build_plan(profile, n_model_shards,
-                      PlannerConfig(mode=planner_mode,
-                                    extra_copies=extra_copies,
-                                    batch_cap=batch_cap))
+    return api.build_plan(profile, n_model_shards,
+                          PlannerConfig(mode=planner_mode,
+                                        extra_copies=extra_copies,
+                                        batch_cap=batch_cap))
 
 
 # ---------------------------------------------------------------------------
@@ -115,7 +117,7 @@ def serve_params_sds(cfg: ModelConfig, shape: InputShape,
     from repro.serving.quant import quantize_serve_params
     base = params_sds(cfg, shape, dtype)
     if plan is not None and not cfg.attention_free:
-        base = jax.eval_shape(partial(E.slotify_params, plan=plan, cfg=cfg), base)
+        base = jax.eval_shape(partial(api.slotify_params, plan=plan, cfg=cfg), base)
     if quantize:
         base = jax.eval_shape(quantize_serve_params, base)
     return base
@@ -134,7 +136,7 @@ def opt_sds(p_sds) -> AdamWState:
 
 def serve_state_sds(cfg: ModelConfig, shape: InputShape,
                     plan: Optional[HeadPlacement], ccfg: CompressionConfig,
-                    rules: ShardingRules, dtype=BF16) -> E.ServeState:
+                    rules: ShardingRules, dtype=BF16) -> api.ServeState:
     """Decode-time state, with explicit shardings."""
     B = shape.global_batch
     L = cfg.n_layers
@@ -176,7 +178,7 @@ def serve_state_sds(cfg: ModelConfig, shape: InputShape,
         ck = (L, B, cfg.encoder_seq_len, cfg.n_kv_heads, cfg.head_dim)
         cross_k = _sds(ck, dtype, ns(ck, (None, "batch", None, "kv_heads", None)))
         cross_v = _sds(ck, dtype, ns(ck, (None, "batch", None, "kv_heads", None)))
-    return E.ServeState(
+    return api.ServeState(
         cache=cache, ssm_state=ssm_state, conv_state=conv_state,
         cross_k=cross_k, cross_v=cross_v,
         last_tokens=_sds((B,), jnp.int32, ns((B,), ("batch",))),
@@ -258,7 +260,7 @@ def build_cell(cfg: ModelConfig, shape: InputShape, mesh,
 
         def fn(serve_params, batch, plan_arrays):
             with use_rules(rules):
-                return E.prefill(serve_params, batch, cfg, plan_arrays, ccfg)
+                return api.prefill(serve_params, batch, cfg, plan_arrays, ccfg)
 
         return CellArtifacts(fn=fn, args=(sp_sds, b_sds, pa),
                              donate_argnums=(),
@@ -272,7 +274,7 @@ def build_cell(cfg: ModelConfig, shape: InputShape, mesh,
 
     def fn(serve_params, state, plan_arrays):
         with use_rules(rules):
-            return E.decode_step(serve_params, state, cfg, plan_arrays, ccfg)
+            return api.decode_step(serve_params, state, cfg, plan_arrays, ccfg)
 
     return CellArtifacts(fn=fn, args=(sp_sds, st_sds, pa),
                          donate_argnums=(1,),

@@ -22,6 +22,7 @@ re-slotifies the weights, and migrates the live cache into the new layout
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -37,7 +38,6 @@ from repro.configs.base import ModelConfig
 from repro.core.placement import HeadPlacement
 from repro.core.planner import PlannerConfig, build_plan
 from repro.serving.engine import (
-    ServeState,
     decode_step,
     init_serve_state,
     prefill,
@@ -151,6 +151,7 @@ class Scheduler:
         scfg: SchedulerConfig,
         planner_cfg: Optional[PlannerConfig] = None,
         dtype=jnp.float32,
+        serve_params: Optional[dict] = None,
     ):
         if cfg.is_encoder_decoder or cfg.is_vlm:
             raise NotImplementedError(
@@ -165,10 +166,17 @@ class Scheduler:
             mode=plan.mode, slots_per_shard=plan.slots_per_shard,
             r_max=plan.r_max, batch_cap=scfg.max_rows)
         self.dtype = dtype
-        self.sp = slotify_params(params, plan, cfg)
+        # serve_params: pre-slotified weights for *this plan* (the Engine
+        # facade passes its own copy so the permutation isn't paid twice)
+        self.sp = (serve_params if serve_params is not None
+                   else slotify_params(params, plan, cfg))
         self.state = init_serve_state(cfg, self.pa, scfg.max_rows, ccfg,
                                       dtype=dtype)
 
+        # persisted straggler speed factors (set by a speed-aware replan):
+        # imbalance() and every later replan score/plan against them, so an
+        # auto-replan never silently reverts the mitigation
+        self.shard_speeds: Optional[np.ndarray] = None
         self.queue: deque = deque()
         self.active: Dict[int, Request] = {}  # row -> request
         self.freelist = RowFreelist(scfg.max_rows)
@@ -206,8 +214,11 @@ class Scheduler:
         return per_slot.reshape(self.plan.n_shards, S_per).sum(axis=1)
 
     def imbalance(self) -> float:
-        """max/mean per-shard realized load (1.0 = perfectly fair)."""
+        """max/mean per-shard realized load (1.0 = perfectly fair); under
+        persisted ``shard_speeds`` it is the *time* imbalance load/speed."""
         load = self.per_shard_load()
+        if self.shard_speeds is not None:
+            load = load / self.shard_speeds
         mean = load.mean()
         return float(load.max() / mean) if mean > 0 else 1.0
 
@@ -309,15 +320,29 @@ class Scheduler:
 
     @staticmethod
     def _imbalance_of(lengths: np.ndarray, n_shards: int,
-                      slots_per_shard: int) -> float:
+                      slots_per_shard: int,
+                      shard_speeds: Optional[Sequence[float]] = None) -> float:
+        """max/mean per-shard load; with ``shard_speeds`` the *time*
+        imbalance load_j / speed_j (what a straggler-aware plan optimizes)."""
         per_slot = np.asarray(lengths).sum(axis=(0, 2))
         load = per_slot.reshape(n_shards, slots_per_shard).sum(axis=1)
+        if shard_speeds is not None:
+            load = load / np.asarray(shard_speeds, float)
         mean = load.mean()
         return float(load.max() / mean) if mean > 0 else 1.0
 
-    def replan(self) -> dict:
-        """Rebuild the placement from the realized profile; migrate the live
-        cache + weights into the new slot layout if it actually helps.
+    def replan(self, profile: Optional[np.ndarray] = None,
+               shard_speeds: Optional[Sequence[float]] = None) -> dict:
+        """Rebuild the placement and migrate the live cache + weights into
+        the new slot layout if it actually helps.
+
+        Default: plan from the realized per-head profile of the active rows.
+        ``profile`` overrides the planning input; ``shard_speeds`` plans
+        against heterogeneous shard speeds (straggler mitigation,
+        DESIGN.md §6) — both reachable live via ``Engine.replan``.  Passed
+        speeds persist: subsequent trigger-fired replans keep planning and
+        scoring against them (pass ``shard_speeds=np.ones(n_shards)`` to
+        clear).
 
         The planner optimizes the *mean-over-rows* per-head profile, which at
         small row counts can mispredict the row-granular replica split — so
@@ -325,25 +350,30 @@ class Scheduler:
         and rejected (no state change, cooldown still consumed) unless it
         strictly reduces the per-shard imbalance.
         """
-        before = self.imbalance()
-        profile = self.realized_profile()
-        new_plan = build_plan(profile, self.plan.n_shards, self.pcfg)
+        if shard_speeds is not None:
+            self.shard_speeds = np.asarray(shard_speeds, float)
+        speeds = self.shard_speeds
+        # before/after under the same metric: speed-normalized when planning
+        # against heterogeneous shards, raw otherwise
+        before = self._imbalance_of(np.asarray(self.state.cache.lengths),
+                                    self.plan.n_shards,
+                                    self.plan.slots_per_shard, speeds)
+        profile = (self.realized_profile() if profile is None
+                   else np.asarray(profile, np.float64))
+        new_plan = build_plan(profile, self.plan.n_shards, self.pcfg,
+                              shard_speeds=speeds)
         new_pa = PlanArrays.from_plan(new_plan)
         cache = migrate_cache(self.state.cache, self.pa, new_pa)
         after = self._imbalance_of(np.asarray(cache.lengths),
                                    new_plan.n_shards,
-                                   new_plan.slots_per_shard)
+                                   new_plan.slots_per_shard, speeds)
         event = {"step": self.step_idx, "imbalance_before": before,
                  "imbalance_after": after, "accepted": after < before - 1e-9}
         if not event["accepted"]:
             event["imbalance_after"] = before
             self.replan_log.append(event)
             return event
-        self.state = ServeState(
-            cache=cache, ssm_state=self.state.ssm_state,
-            conv_state=self.state.conv_state, cross_k=self.state.cross_k,
-            cross_v=self.state.cross_v, last_tokens=self.state.last_tokens,
-            decode_steps=self.state.decode_steps)
+        self.state = dataclasses.replace(self.state, cache=cache)
         self.plan, self.pa = new_plan, new_pa
         self.sp = slotify_params(self.params, new_plan, self.cfg)
         self._decode = self._make_decode()
