@@ -87,6 +87,14 @@ def main():
             / results["fairkv_dp"]["wall_s"]) / (
         results["sha"]["generated_tokens"] / results["sha"]["wall_s"])
     print(f"fig6/gain_dp_over_sha,0,gain={gain:.3f}")
+    return {  # machine-readable summary for BENCH_pr3.json
+        planner: {
+            "tokens_per_s": r["generated_tokens"] / r["wall_s"],
+            "p50_steps": r["pct"]["p50_steps"],
+            "p99_steps": r["pct"]["p99_steps"],
+            "steps": r["steps"],
+        } for planner, r in results.items()
+    } | {"gain_dp_over_sha": gain}
 
 
 if __name__ == "__main__":

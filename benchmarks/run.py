@@ -1,6 +1,10 @@
 """Benchmark driver: one suite per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV lines (one per measured entity).
+Prints ``name,us_per_call,derived`` CSV lines (one per measured entity) and
+writes a machine-readable summary (``BENCH_pr3.json`` by default): per-suite
+wall time, ok flag, whatever metrics dict the suite's ``main()`` returned,
+plus the git sha — so the perf trajectory of this repo is diffable across
+PRs instead of living in scrollback.
 
 Suites live in a registry (name → module), so single-figure runs stop
 paying for the full sweep::
@@ -9,6 +13,7 @@ paying for the full sweep::
     python benchmarks/run.py --only fig6       # just fig6
     python benchmarks/run.py --only fig1,fig3  # a comma-set
     python benchmarks/run.py --skip table3     # everything else
+    python benchmarks/run.py --out ''          # disable the JSON artifact
 
 Skipped suites are never imported, so their (potentially heavy) JAX
 tracing cost is not paid either.
@@ -17,12 +22,23 @@ from __future__ import annotations
 
 import argparse
 import importlib
+import json
+import os
+import subprocess
 import sys
 import time
 import traceback
 
-# name -> module path; each module exposes main().  Ordered as the paper
-# presents them (cheap simulation suites first, end-to-end system last).
+# make ``import benchmarks.<suite>`` work however run.py is invoked
+# (``python benchmarks/run.py`` puts benchmarks/ itself on sys.path, not
+# the repo root that contains the package)
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+# name -> module path; each module exposes main() (optionally returning a
+# metrics dict for the JSON artifact).  Ordered as the paper presents them
+# (cheap simulation suites first, end-to-end system last).
 SUITES = {
     "table1": "benchmarks.table1_cosine_similarity",
     "table2": "benchmarks.table2_gpu_utilization",
@@ -31,6 +47,7 @@ SUITES = {
     "fig4": "benchmarks.fig4_ablation",
     "fig5": "benchmarks.fig5_dp_size",
     "fig6": "benchmarks.fig6_continuous_throughput",
+    "fig7": "benchmarks.fig7_paged_memory",
     "table3": "benchmarks.table3_quality_proxy",
 }
 
@@ -53,6 +70,15 @@ def select_suites(only: str = "", skip: str = "") -> list:
     return names
 
 
+def git_sha() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "HEAD"], text=True,
+            stderr=subprocess.DEVNULL).strip()
+    except Exception:
+        return "unknown"
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--list", action="store_true",
@@ -61,6 +87,8 @@ def main(argv=None) -> None:
                     help="comma-separated suites to run (default: all)")
     ap.add_argument("--skip", default="",
                     help="comma-separated suites to exclude")
+    ap.add_argument("--out", default="BENCH_pr3.json",
+                    help="machine-readable results path ('' disables)")
     args = ap.parse_args(argv)
 
     if args.list:
@@ -73,15 +101,27 @@ def main(argv=None) -> None:
         raise SystemExit("no suites selected (--only/--skip removed all)")
     print("name,us_per_call,derived")
     failed = []
+    report = {"git_sha": git_sha(),
+              "started_at": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+              "suites": {}}
     for name in names:
         t0 = time.time()
+        metrics = None
         try:
-            importlib.import_module(SUITES[name]).main()
+            metrics = importlib.import_module(SUITES[name]).main()
         except Exception:
             traceback.print_exc()
             failed.append(name)
-        print(f"{name}/_suite,{(time.time() - t0) * 1e6:.0f},"
-              f"ok={name not in failed}")
+        wall_us = (time.time() - t0) * 1e6
+        print(f"{name}/_suite,{wall_us:.0f},ok={name not in failed}")
+        entry = {"ok": name not in failed, "wall_us": wall_us}
+        if isinstance(metrics, dict):
+            entry["metrics"] = metrics
+        report["suites"][name] = entry
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.out}", file=sys.stderr)
     if failed:
         print(f"# FAILED: {failed}", file=sys.stderr)
         raise SystemExit(1)

@@ -10,15 +10,20 @@ and decoding continues without interruption.  `Engine.stream` yields one
 `StreamEvent` per generated token, so the example also shows request-level
 token streaming.
 
-Run:  PYTHONPATH=src JAX_PLATFORMS=cpu python examples/serve_continuous.py
+Run:  PYTHONPATH=src JAX_PLATFORMS=cpu python examples/serve_continuous.py \
+          [--cache-backend paged]
 """
+import argparse
+
 from repro.api import (
     CompressionConfig,
     Engine,
     EngineConfig,
+    PagingConfig,
     PlannerConfig,
     SchedulerConfig,
     latency_percentiles,
+    list_cache_backends,
     synthesize_requests,
 )
 
@@ -28,7 +33,13 @@ SHARDS = 4
 GEN = 10
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--cache-backend", default="slot",
+                    help=f"cache backend; registered: {list_cache_backends()}")
+    ap.add_argument("--block-size", type=int, default=8)
+    args = ap.parse_args(argv)
+
     cfg = EngineConfig.smoke(
         ARCH, n_shards=SHARDS, max_seq_len=64,
         compression=CompressionConfig(policy="ada_snapkv", budget=16,
@@ -39,7 +50,9 @@ def main():
         planner=PlannerConfig(mode="fairkv_dp", extra_copies=4,
                               batch_cap=ROWS),
         scheduler=SchedulerConfig(max_rows=ROWS, replan_window=4,
-                                  replan_threshold=1.05, replan_cooldown=10))
+                                  replan_threshold=1.05, replan_cooldown=10),
+        cache_backend=args.cache_backend,
+        paging=PagingConfig(block_size=args.block_size))
     eng = Engine.build(cfg)
 
     reqs = synthesize_requests(8, rate=0.4, vocab_size=cfg.model.vocab_size,
@@ -71,6 +84,11 @@ def main():
               if r.admit_step > first_admit)
     print(f"\np50 {pct['p50_steps']:.0f} / p99 {pct['p99_steps']:.0f} steps | "
           f"{n_tokens} tokens streamed | mid-stream admissions {mid}")
+    mem = eng.memory_stats()
+    if mem.get("backend") == "paged":
+        print(f"paged cache: {mem['blocks_in_use']} blocks in use "
+              f"(pool {mem['pool_bytes']} B) vs slot-equivalent "
+              f"{mem['slot_equivalent_bytes']} B")
     if eng.replan_log:
         for ev in eng.replan_log:
             tag = "accepted" if ev["accepted"] else "rejected"

@@ -29,13 +29,17 @@ from __future__ import annotations
 
 from repro.api.registry import (  # noqa: F401
     ASSIGNMENT_ENGINE_REGISTRY,
+    CACHE_BACKEND_REGISTRY,
     POLICY_REGISTRY,
     Registry,
     get_assignment_engine,
+    get_cache_backend,
     get_policy,
+    list_cache_backends,
     list_engines,
     list_policies,
     register_assignment_engine,
+    register_cache_backend,
     register_policy,
 )
 
@@ -78,12 +82,22 @@ _LAZY = {
     "synthesize_requests": "repro.serving.request:synthesize_requests",
     "poisson_arrivals": "repro.serving.request:poisson_arrivals",
     "latency_percentiles": "repro.serving.request:latency_percentiles",
+    # paged cache backend (DESIGN.md §9)
+    "PagingConfig": "repro.paging.block_pool:PagingConfig",
+    "PoolExhausted": "repro.paging.block_pool:PoolExhausted",
+    "BlockPool": "repro.paging.block_pool:BlockPool",
+    "PagedCache": "repro.paging.paged_cache:PagedCache",
+    "CacheBackend": "repro.serving.cache_backend:CacheBackend",
+    "make_cache_backend": "repro.serving.cache_backend:make_cache_backend",
 }
 
 __all__ = sorted(
-    ["ASSIGNMENT_ENGINE_REGISTRY", "POLICY_REGISTRY", "Registry",
-     "get_assignment_engine", "get_policy", "list_engines", "list_policies",
-     "register_assignment_engine", "register_policy", *_LAZY])
+    ["ASSIGNMENT_ENGINE_REGISTRY", "CACHE_BACKEND_REGISTRY",
+     "POLICY_REGISTRY", "Registry",
+     "get_assignment_engine", "get_cache_backend", "get_policy",
+     "list_cache_backends", "list_engines", "list_policies",
+     "register_assignment_engine", "register_cache_backend",
+     "register_policy", *_LAZY])
 
 
 def __getattr__(name: str):

@@ -21,11 +21,16 @@ from typing import Optional
 
 import jax.numpy as jnp
 
-from repro.api.registry import list_engines, list_policies
+from repro.api.registry import (
+    list_cache_backends,
+    list_engines,
+    list_policies,
+)
 from repro.compression.base import CompressionConfig
 from repro.configs import get_config, get_smoke_config
 from repro.configs.base import ModelConfig
 from repro.core.planner import PLANNER_MODES, PlannerConfig
+from repro.paging.block_pool import PagingConfig
 from repro.serving.scheduler import SchedulerConfig
 
 # the one dtype-name table: validation and Engine's resolution both read it
@@ -53,6 +58,11 @@ class EngineConfig:
     seed: int = 0  # PRNG seed for default parameter init
     profile_skew: float = 1.0
     profile_seed: int = 1
+    # cache storage backend: "slot" (dense static-capacity, DESIGN.md §2) or
+    # "paged" (block-pool allocation proportional to realized lengths, §9);
+    # third parties extend via @repro.api.register_cache_backend
+    cache_backend: str = "slot"
+    paging: PagingConfig = field(default_factory=PagingConfig)
 
     def __post_init__(self):
         if not isinstance(self.model, ModelConfig):
@@ -89,6 +99,15 @@ class EngineConfig:
             raise ValueError(
                 f"scheduler.max_rows must be >= 1, got "
                 f"{self.scheduler.max_rows}")
+        if self.cache_backend not in list_cache_backends():
+            raise ValueError(
+                f"unknown cache backend {self.cache_backend!r}; registered: "
+                f"{list_cache_backends()}; add backends with "
+                f"@repro.api.register_cache_backend")
+        if not isinstance(self.paging, PagingConfig):
+            raise TypeError(
+                f"paging must be a PagingConfig, got "
+                f"{type(self.paging).__name__}")
 
     # ---- constructors ------------------------------------------------------
 

@@ -38,12 +38,13 @@ import numpy as np
 
 from repro.api.config import DTYPES as _DTYPES
 from repro.api.config import EngineConfig
-from repro.cache.slot_cache import PlanArrays, migrate_cache
+from repro.cache.slot_cache import PlanArrays
 from repro.core.placement import HeadPlacement
 from repro.core.planner import PlannerConfig, build_plan
 from repro.core.profiles import profile_from_lengths, synthetic_profile
 from repro.models import init_params
 from repro.serving import engine as _serve
+from repro.serving.cache_backend import make_cache_backend
 from repro.serving.request import Request
 from repro.serving.scheduler import Scheduler
 
@@ -106,7 +107,12 @@ class Engine:
         self.mesh = mesh  # reserved for the sharded launch path (launch/)
         self.pa = PlanArrays.from_plan(plan)
         self.sp = _serve.slotify_params(params, plan, cfg.model)
+        # cache storage backend (DESIGN.md §9): "slot" | "paged" | plugin
+        self.backend = make_cache_backend(
+            cfg.cache_backend, cfg.model, cfg.compression,
+            max_live_tokens=cfg.scheduler.max_live_tokens, paging=cfg.paging)
         self.state: Optional[_serve.ServeState] = None
+        self._mode: Optional[str] = None  # "oneshot" | "continuous" (last used)
         # persisted straggler speed factors (set by a speed-aware replan);
         # later replans and a lazily-created scheduler inherit them so the
         # mitigation is never silently reverted
@@ -194,6 +200,7 @@ class Engine:
             self.sp, batch, self.cfg.model, self.pa, self.cfg.compression,
             head_importance=self.head_importance, rows=rows)
         self.state = state
+        self._mode = "oneshot"
         return logits, lengths
 
     def generate(self, prompts: Union[Dict[str, jnp.ndarray], np.ndarray],
@@ -212,6 +219,19 @@ class Engine:
         logits, lengths = self.prefill(prompts)
         jax.block_until_ready(logits)
         prefill_s = time.perf_counter() - t0
+        # re-house the prefilled cache in the configured backend's layout
+        # (identity for "slot"; "paged" allocates blocks proportional to the
+        # realized retained lengths).  One-shot mode has no request queue to
+        # preempt into, so an undersized pool is a config error, not a
+        # scheduling event — fail with the remedy instead of a raw signal.
+        from repro.paging.block_pool import PoolExhausted
+        try:
+            self.state = self.backend.from_prefill(self.state, self.pa)
+        except PoolExhausted as e:
+            raise ValueError(
+                f"cache pool too small for one-shot generation ({e}); "
+                f"raise PagingConfig.n_blocks or leave it 0 for "
+                f"worst-case sizing") from e
         state = self.state
         tokens = [np.asarray(state.last_tokens)]
         logits_all = [np.asarray(logits)] if collect_logits else None
@@ -220,6 +240,13 @@ class Engine:
         for t in range(max_new_tokens):
             tok = (state.last_tokens if teacher_tokens is None
                    else jnp.asarray(teacher_tokens[:, t], jnp.int32))
+            try:
+                state = self.backend.prepare_decode(state, None)
+            except PoolExhausted as e:
+                raise ValueError(
+                    f"cache pool ran dry at decode step {t} ({e}); one-shot "
+                    f"generation cannot preempt — raise "
+                    f"PagingConfig.n_blocks") from e
             t0 = time.perf_counter()
             state, lg = step(state, tok)
             jax.block_until_ready(lg)
@@ -292,7 +319,15 @@ class Engine:
         self._invalidate()
         migrated = False
         if self.state is not None and self.state.cache is not None:
-            cache = migrate_cache(self.state.cache, old_pa, self.pa)
+            from repro.cache.slot_cache import SlotCache, migrate_cache
+            if isinstance(self.state.cache, SlotCache):
+                # prefill leaves the cache in slot layout regardless of
+                # backend (generate() adopts it later); migrate it in place
+                cache = migrate_cache(self.state.cache, old_pa, self.pa)
+            else:
+                _, commit = self.backend.migrate_cache(self.state.cache,
+                                                       old_pa, self.pa)
+                cache = commit()
             self.state = dataclasses.replace(self.state, cache=cache)
             migrated = True
         return {"plan": self.plan, "migrated_cache": migrated,
@@ -308,12 +343,22 @@ class Engine:
         return self._scheduler
 
     def _ensure_scheduler(self) -> Scheduler:
+        self._mode = "continuous"
         if self._scheduler is None:
+            # the scheduler gets its OWN backend instance: backends carry
+            # allocator state (pool + table mirror), and a later one-shot
+            # generate() resets the engine's backend — sharing one instance
+            # would silently invalidate the scheduler's live block topology
             self._scheduler = Scheduler(
                 self.cfg.model, self.params, self.plan,
                 self.cfg.compression, self.cfg.scheduler,
                 planner_cfg=self.cfg.planner, dtype=self.dtype,
-                serve_params=self.sp)  # same plan -> reuse slot weights
+                serve_params=self.sp,  # same plan -> reuse slot weights
+                backend=make_cache_backend(
+                    self.cfg.cache_backend, self.cfg.model,
+                    self.cfg.compression,
+                    max_live_tokens=self.cfg.scheduler.max_live_tokens,
+                    paging=self.cfg.paging))
             # inherit any one-shot straggler mitigation
             self._scheduler.shard_speeds = self._shard_speeds
         return self._scheduler
@@ -410,3 +455,18 @@ class Engine:
             raise RuntimeError("imbalance() requires the continuous "
                                "scheduler; call submit/stream first")
         return self._scheduler.imbalance()
+
+    def memory_stats(self) -> dict:
+        """Realized cache-memory footprint from the active backend —
+        for "paged", blocks in use vs the dense slot-cache equivalent.
+        Reports whichever mode (one-shot / continuous) ran most recently,
+        so interleaved use never returns a stale idle cache."""
+        if self._mode == "continuous" and self._scheduler is not None:
+            return self._scheduler.backend.memory_stats(self._scheduler.state)
+        if self.state is None:
+            if self._scheduler is not None:
+                return self._scheduler.backend.memory_stats(
+                    self._scheduler.state)
+            raise RuntimeError("memory_stats() needs a live cache; call "
+                               "generate/prefill or submit/stream first")
+        return self.backend.memory_stats(self.state)

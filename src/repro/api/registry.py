@@ -1,6 +1,6 @@
 """Extensibility registries for the ``repro.api`` facade.
 
-Two decorator-based registries replace what used to be hardcoded tables:
+Decorator-based registries replace what used to be hardcoded tables:
 
 - **compression policies** — previously the ``POLICIES`` dict literal in
   ``compression/policies.py``; now any module can do::
@@ -17,6 +17,12 @@ Two decorator-based registries replace what used to be hardcoded tables:
   ``core/assignment.py``; ``@register_assignment_engine("name")`` adds a
   solver for the makespan problem (Eq. 4) that ``assign_items`` and
   ``PlannerConfig.engine`` can name.
+
+- **cache backends** — ``@register_cache_backend("name")`` adds a cache
+  storage strategy (a ``serving.cache_backend.CacheBackend`` subclass)
+  selectable via ``EngineConfig.cache_backend``; built-ins ``"slot"``
+  (dense static-capacity layout) and ``"paged"`` (block-pool allocation,
+  DESIGN.md §9).
 
 This module is a dependency *leaf*: it imports nothing from ``repro`` at
 module scope, so the registered-to modules (``compression.policies``,
@@ -101,9 +107,11 @@ class Registry(Mapping):
 
 POLICY_REGISTRY = Registry("compression policy")
 ASSIGNMENT_ENGINE_REGISTRY = Registry("assignment engine")
+CACHE_BACKEND_REGISTRY = Registry("cache backend")
 
 register_policy = POLICY_REGISTRY.register
 register_assignment_engine = ASSIGNMENT_ENGINE_REGISTRY.register
+register_cache_backend = CACHE_BACKEND_REGISTRY.register
 
 
 def _ensure_builtin() -> None:
@@ -115,6 +123,8 @@ def _ensure_builtin() -> None:
     """
     import repro.compression.policies  # noqa: F401
     import repro.core.assignment  # noqa: F401
+    import repro.paging.backend  # noqa: F401
+    import repro.serving.cache_backend  # noqa: F401
 
 
 def get_policy(name: str) -> Callable:
@@ -137,3 +147,14 @@ def list_engines() -> List[str]:
     """Registered assignment-engine names (built-ins + plugins)."""
     _ensure_builtin()
     return ASSIGNMENT_ENGINE_REGISTRY.names()
+
+
+def get_cache_backend(name: str) -> Callable:
+    _ensure_builtin()
+    return CACHE_BACKEND_REGISTRY[name]
+
+
+def list_cache_backends() -> List[str]:
+    """Registered cache-backend names (built-ins + plugins)."""
+    _ensure_builtin()
+    return CACHE_BACKEND_REGISTRY.names()

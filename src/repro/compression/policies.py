@@ -149,6 +149,64 @@ def headkv(scores: jnp.ndarray, cfg: CompressionConfig,
     return topk_select(scores, keep, cap)
 
 
+def layer_keep_bound(policy: str, cfg: CompressionConfig, T: int,
+                     n_heads: int, layer_idx: int, n_layers: int) -> int:
+    """Tight upper bound on Σ_h keep for one layer's prefill selection.
+
+    The scheduler's admission projection used to charge every head the full
+    static capacity ``C = α·budget + margin`` — maximally wrong for exactly
+    the imbalanced policies FairKV targets, whose whole point is that the
+    *pool* is conserved while individual heads vary:
+
+    - balanced policies keep ``min(budget_l, T, C)`` per head exactly;
+    - ``ada_snapkv`` counts the layer-wide top-``H·budget`` scores, then the
+      per-head safeguard floor (``min(sink+obs, budget)``) can only add
+      ``H·floor`` more, and when the guaranteed (sink+obs) positions exceed
+      the pool the count degenerates to ``H·(sink+obs)`` — all covered by
+      ``H·(budget + sink + obs_window)``;
+    - ``headkv`` splits a pool of exactly ``H·budget`` (base + dynamic
+      shares sum to it), with the same floor slack.
+
+    Unknown (third-party) policies fall back to the conservative
+    ``H·min(T, C)`` — correct, just not tight.  Bounds here are *proven*
+    upper bounds on the realized selection, so admission never overcommits
+    (asserted by the regression test in tests/test_scheduler.py).
+    """
+    H = int(n_heads)
+    cap = cfg.static_capacity()
+    per_head_max = max(0, min(cap, T))
+    if policy == "none":
+        return H * per_head_max
+    if policy in ("snapkv", "streaming_llm", "h2o"):
+        return H * min(cfg.budget, per_head_max)
+    if policy == "pyramidkv":
+        beta = cfg.pyramid_beta
+        frac = 1.0 + beta - 2.0 * beta * (layer_idx / max(n_layers - 1, 1))
+        budget_l = max(cfg.sink + cfg.obs_window, int(round(cfg.budget * frac)))
+        return H * min(budget_l, per_head_max)
+    if policy in ("ada_snapkv", "headkv"):
+        return H * min(cfg.budget + cfg.sink + cfg.obs_window, per_head_max)
+    return H * per_head_max
+
+
+def projected_request_tokens(policy: str, cfg: CompressionConfig,
+                             prompt_len: int, max_new_tokens: int,
+                             n_layers: int, n_heads: int) -> int:
+    """Upper bound on Σ lengths a request can ever pin across the cache.
+
+    Per layer: the prefill selection bound plus one decode append per head
+    per generated token, each head clipped at static capacity (appends stop
+    growing ``lengths`` there — the recency ring overwrites in place).
+    """
+    H, cap = int(n_heads), cfg.static_capacity()
+    total = 0
+    for l in range(n_layers):
+        prefill = layer_keep_bound(policy, cfg, prompt_len, H, l, n_layers)
+        total += min(prefill + H * max_new_tokens,
+                     H * min(prompt_len + max_new_tokens, cap))
+    return total
+
+
 # Live Mapping view over the registry: third-party ``@register_policy``
 # providers appear here automatically (the old hardcoded dict literal is gone).
 POLICIES = POLICY_REGISTRY

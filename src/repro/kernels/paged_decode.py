@@ -1,0 +1,69 @@
+"""Paged slot-layout decode attention: block gather + ``fairkv_decode``.
+
+The paged cache stores each (slot, row)'s KV in fixed-size blocks
+(``repro.paging``); decode attention reconstructs the exact contiguous
+``(S, B, C, Dh)`` views the FairKV decode kernel already consumes by
+gathering each row's blocks and reshaping — logical column ``c`` lives at
+offset ``c % bs`` of block ``table[c // bs]``, so the gathered view is
+*bit-identical* to the slot cache on every column inside the valid prefix,
+and the kernel's length masking guarantees nothing outside that prefix
+reaches the output.  Reusing the kernel this way keeps one set of masking /
+online-softmax semantics for both backends (validated by the parity property
+test in tests/test_paging.py); HBM traffic for the gather is proportional to
+the *allocated* blocks, i.e. to the realized retained lengths — the same
+quantity FairKV balances.
+
+The pure-jnp oracle is ``ref.paged_fairkv_decode_ref``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels import ops as K
+
+
+def paged_gather_views(
+    k_pool: jnp.ndarray,  # (N, bs, Dh) — one layer's key pool
+    v_pool: jnp.ndarray,  # (N, bs, Dh)
+    pos_pool: jnp.ndarray,  # (N, bs) int32
+    block_table: jnp.ndarray,  # (S, B, M) int32; 0 = null block
+    capacity: int,
+):
+    """(S, B, C, Dh) / (S, B, C) contiguous views of one layer's paged KV.
+
+    Null-backed columns hold garbage; callers must mask by lengths (the
+    decode kernel does).
+    """
+    ids = jnp.maximum(block_table, 0)
+    S, B, M = ids.shape
+    bs, Dh = k_pool.shape[1], k_pool.shape[2]
+    k = k_pool[ids].reshape(S, B, M * bs, Dh)[:, :, :capacity]
+    v = v_pool[ids].reshape(S, B, M * bs, Dh)[:, :, :capacity]
+    pos = pos_pool[ids].reshape(S, B, M * bs)[:, :, :capacity]
+    return k, v, pos
+
+
+def paged_fairkv_decode(
+    q: jnp.ndarray,  # (B, S, G, Dh)
+    k_pool: jnp.ndarray,  # (N, bs, Dh)
+    v_pool: jnp.ndarray,  # (N, bs, Dh)
+    pos_pool: jnp.ndarray,  # (N, bs) int32
+    block_table: jnp.ndarray,  # (S, B, M) int32
+    lengths: jnp.ndarray,  # (S, B) int32
+    capacity: int,
+    attn_cap: float = 0.0,
+    q_pos: Optional[jnp.ndarray] = None,  # (B,) int32
+    window: int = 0,
+    backend: str = "auto",
+    block_c: int = 128,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Decode attention over a paged layer — same contract as
+    ``ops.fairkv_decode`` with (k, v, k_pos) replaced by (pools, table)."""
+    k, v, k_pos = paged_gather_views(k_pool, v_pool, pos_pool, block_table,
+                                     capacity)
+    return K.fairkv_decode(q, k, v, lengths, attn_cap=attn_cap, k_pos=k_pos,
+                           q_pos=q_pos, window=window, backend=backend,
+                           block_c=block_c, interpret=interpret)

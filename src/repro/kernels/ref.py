@@ -51,6 +51,36 @@ def fairkv_decode_ref(
     return out.astype(q.dtype)
 
 
+def paged_fairkv_decode_ref(
+    q: jnp.ndarray,  # (B, S, G, Dh)
+    k_pool: jnp.ndarray,  # (N, bs, Dh) — one layer's pools
+    v_pool: jnp.ndarray,  # (N, bs, Dh)
+    pos_pool: jnp.ndarray,  # (N, bs) int32
+    block_table: jnp.ndarray,  # (S, B, M) int32; 0 = null block
+    lengths: jnp.ndarray,  # (S, B) int32
+    capacity: int,
+    attn_cap: float = 0.0,
+    q_pos: Optional[jnp.ndarray] = None,
+    window: int = 0,
+) -> jnp.ndarray:
+    """Oracle for the paged decode path (`kernels.paged_decode`).
+
+    Gathers each (slot, row)'s blocks into the contiguous view the slot
+    cache would hold — column ``c`` at offset ``c % bs`` of block
+    ``table[c // bs]`` — then applies `fairkv_decode_ref` unchanged, so the
+    paged path's semantics are *defined* as slot-path semantics over the
+    gathered view.
+    """
+    ids = jnp.maximum(block_table, 0)
+    S, B, M = ids.shape
+    bs, Dh = k_pool.shape[1], k_pool.shape[2]
+    k = k_pool[ids].reshape(S, B, M * bs, Dh)[:, :, :capacity]
+    v = v_pool[ids].reshape(S, B, M * bs, Dh)[:, :, :capacity]
+    pos = pos_pool[ids].reshape(S, B, M * bs)[:, :, :capacity]
+    return fairkv_decode_ref(q, k, v, lengths, attn_cap, k_pos=pos,
+                             q_pos=q_pos, window=window)
+
+
 def snapkv_scores_ref(
     q_obs: jnp.ndarray,  # (B, W, Hq, Dh) observation-window queries (RoPE'd)
     k: jnp.ndarray,  # (B, T, Hkv, Dh)

@@ -26,9 +26,11 @@ from repro.api import (
     CompressionConfig,
     Engine,
     EngineConfig,
+    PagingConfig,
     PlannerConfig,
     SchedulerConfig,
     latency_percentiles,
+    list_cache_backends,
     list_engines,
     list_policies,
     synthesize_requests,
@@ -52,7 +54,10 @@ def _engine_config(args, max_seq_len: int, batch_cap: int,
             decode_margin=max(8, getattr(args, "gen", 8))),
         planner=PlannerConfig(mode=args.planner, engine=args.engine,
                               extra_copies=args.copies, batch_cap=batch_cap),
-        scheduler=scheduler)
+        scheduler=scheduler,
+        cache_backend=args.cache_backend,
+        paging=PagingConfig(block_size=args.block_size,
+                            n_blocks=args.pool_blocks))
 
 
 def run_continuous(args) -> None:
@@ -87,7 +92,12 @@ def run_continuous(args) -> None:
           f"latency p50 {pct.get('p50_steps', float('nan')):.0f} / p99 "
           f"{pct.get('p99_steps', float('nan')):.0f} steps")
     print(f"mid-stream admissions: {out['mid_stream_admissions']} | "
-          f"replans: {out['replans']}")
+          f"replans: {out['replans']} | preemptions: {out['preemptions']}")
+    mem = out["memory"]
+    if mem.get("backend") == "paged":
+        print(f"paged cache: {mem['blocks_in_use']}/{mem['blocks_total']} "
+              f"blocks ({mem['cache_bytes']} B) vs slot-equivalent "
+              f"{mem['slot_equivalent_bytes']} B")
     for ev in out["replan_log"]:
         tag = "accepted" if ev["accepted"] else "rejected"
         print(f"  replan @ step {ev['step']} ({tag}): imbalance "
@@ -115,6 +125,11 @@ def run_oneshot(args) -> None:
               f"{res.efficiency:.3f} ({args.planner})")
     print(f"decode  {np.median(res.step_s) * 1e3:7.1f} ms/step (median of "
           f"{args.gen}; first {res.step_s[0] * 1e3:.0f} ms incl. compile)")
+    mem = eng.memory_stats()
+    if mem.get("backend") == "paged":
+        print(f"paged cache: {mem['cache_bytes']} B in "
+              f"{mem['blocks_in_use']} blocks vs slot-equivalent "
+              f"{mem['slot_equivalent_bytes']} B")
     for b in range(min(args.batch, 2)):
         print(f"row {b}: {res.tokens[b].tolist()}")
 
@@ -137,6 +152,15 @@ def main() -> None:
     ap.add_argument("--shards", type=int, default=4,
                     help="logical model shards for the plan")
     ap.add_argument("--copies", type=int, default=4, help="CH")
+    # --- cache backend (DESIGN.md §9) ----------------------------------------
+    ap.add_argument("--cache-backend", default="slot",
+                    help=f"cache storage backend; registered: "
+                         f"{list_cache_backends()}")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged backend: tokens per KV block")
+    ap.add_argument("--pool-blocks", type=int, default=0,
+                    help="paged backend: blocks per layer pool "
+                         "(0 = slot-equivalent worst case)")
     # --- continuous batching -------------------------------------------------
     ap.add_argument("--continuous", action="store_true",
                     help="run the continuous-batching scheduler on a "

@@ -1,0 +1,295 @@
+"""`PagedBackend`: the block-pool cache backend (DESIGN.md §9).
+
+Bridges the host-side allocator (`BlockPool`) and the device-side arrays
+(`PagedCache`) behind the `CacheBackend` interface.  The backend keeps a
+host ``numpy`` mirror of the block table as the single source of truth for
+*topology* (which blocks belong to which (layer, slot, row)); every
+topology change rebuilds the device table from the mirror, while *content*
+(K/V values, lengths) flows only through the pure array ops so the jitted
+decode step stays functional.
+
+Admission is a free-**block** budget: a request is admissible when every
+layer's free list covers its projected prefill blocks plus one growth block
+per owned head.  Growth beyond that is intentionally *not* reserved —
+decode-time exhaustion is handled by the scheduler preempting the youngest
+request (the recompute policy), which this backend signals via
+``PoolExhausted``.  A request whose worst-case need exceeds the whole pool
+fails fast at submit (`never_fits`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.registry import register_cache_backend
+from repro.cache.slot_cache import PlanArrays
+from repro.cache.slot_cache import migrate_cache as migrate_slot_cache
+from repro.compression.policies import layer_keep_bound
+from repro.paging.block_pool import (
+    BlockPool,
+    PoolExhausted,
+    blocks_for_tokens,
+)
+from repro.paging.paged_cache import (
+    PagedCache,
+    build_table,
+    init_paged_cache,
+    max_blocks_per_row,
+    paged_to_slot,
+    paginate_rows,
+    release_rows,
+)
+from repro.serving import engine as _serve
+from repro.serving.cache_backend import CacheBackend
+
+
+def _owner_mask_np(pa: PlanArrays, rows: np.ndarray) -> np.ndarray:
+    """(L, S, len(rows)) bool — the §2 strided owner rule, on the host."""
+    sh = np.asarray(pa.slot_head)
+    rc = np.asarray(pa.replica_count)[:, :, None]
+    ri = np.asarray(pa.replica_idx)[:, :, None]
+    rows = np.asarray(rows, np.int64)[None, None, :]
+    return (sh >= 0)[:, :, None] & ((rows % rc) == ri)
+
+
+@register_cache_backend("paged")
+class PagedBackend(CacheBackend):
+    name = "paged"
+
+    def __init__(self, model_cfg, ccfg, max_live_tokens=None, paging=None):
+        super().__init__(model_cfg, ccfg, max_live_tokens=max_live_tokens,
+                         paging=paging)
+        self.capacity = ccfg.static_capacity()
+        self.block_size = self.paging.block_size
+        self.max_blocks = max_blocks_per_row(self.capacity, self.block_size)
+        self.pool: Optional[BlockPool] = None
+        self.table: Optional[np.ndarray] = None  # host mirror (L, S, B, M)
+        self.pa: Optional[PlanArrays] = None
+
+    # ---- state lifecycle ---------------------------------------------------
+
+    def init_state(self, pa, batch, dtype):
+        self.pa = pa
+        if self.cfg.attention_free:
+            return _serve.init_serve_state(self.cfg, pa, batch, self.ccfg,
+                                           dtype=dtype)
+        cache, self.pool = init_paged_cache(
+            self.cfg.n_layers, int(pa.slot_head.shape[1]), batch,
+            self.capacity, self.cfg.head_dim, self.paging, dtype=dtype)
+        self.table = np.zeros(cache.block_table.shape, np.int32)
+        return _serve.init_serve_state(self.cfg, pa, batch, self.ccfg,
+                                       dtype=dtype, cache=cache)
+
+    def from_prefill(self, state, pa):
+        """One-shot adoption: re-house a full-batch slot prefill in blocks
+        sized to its realized retained lengths (all rows live)."""
+        if state.cache is None:
+            self.pa = pa
+            return state
+        slot = state.cache
+        L, S, B, C, Dh = slot.k.shape
+        if C != self.capacity:
+            raise ValueError(f"prefill capacity {C} != backend capacity "
+                             f"{self.capacity}")
+        empty = self.init_state(pa, B, slot.k.dtype)  # fresh pool + mirror
+        own = _owner_mask_np(pa, np.arange(B))
+        table = build_table(np.asarray(slot.lengths), self.pool,
+                            self.block_size, self.max_blocks, own=own)
+        self.table = table.copy()
+        cache = paginate_rows(empty.cache, slot, jnp.arange(B, dtype=jnp.int32),
+                              table)
+        return dataclasses.replace(state, cache=cache)
+
+    def splice(self, state, sub, rows):
+        """Admit: allocate blocks for the sub-state's realized lengths and
+        scatter its contents in.  Atomic on ``PoolExhausted``."""
+        if state.cache is None:
+            return _serve.splice_state(state, sub, rows)
+        rows_np = np.asarray(rows, np.int64)
+        leftovers = self.table[:, :, rows_np, :]
+        if (leftovers > 0).any():  # defensive: target rows must be retired
+            self.pool.free_table(leftovers.reshape(self.table.shape[0], -1))
+            self.table[:, :, rows_np, :] = 0
+        own = _owner_mask_np(self.pa, rows_np)
+        table_sub = build_table(np.asarray(sub.cache.lengths), self.pool,
+                                self.block_size, self.max_blocks, own=own)
+        self.table[:, :, rows_np, :] = table_sub
+        cache = paginate_rows(state.cache, sub.cache,
+                              jnp.asarray(rows_np, jnp.int32), table_sub)
+        return _serve.splice_state(state, sub, rows, cache=cache)
+
+    def release_rows(self, state, rows):
+        if state.cache is None:
+            return _serve.reset_state_rows(state, rows)
+        rows_np = np.asarray(rows, np.int64)
+        held = self.table[:, :, rows_np, :]
+        self.pool.free_table(held.reshape(self.table.shape[0], -1))
+        self.table[:, :, rows_np, :] = 0
+        cache = release_rows(state.cache, jnp.asarray(rows_np, jnp.int32))
+        return _serve.reset_state_rows(state, rows, cache=cache)
+
+    def prepare_decode(self, state, active):
+        """Allocate the block backing each active row's next append.
+
+        The next write index is ``lengths`` while a row is below capacity
+        (the recency ring past that only revisits already-allocated
+        blocks), so an owned (layer, slot, row) needs ``len // bs + 1``
+        blocks before the tick.  Raises ``PoolExhausted`` when a layer's
+        free list runs dry — the scheduler's preemption signal.
+        """
+        if state.cache is None:
+            return state
+        cache = state.cache
+        B = cache.positions.shape[0]
+        rows = np.arange(B) if active is None else np.asarray(list(active))
+        if rows.size == 0:
+            return state
+        lens = np.asarray(cache.lengths)[:, :, rows]  # (L, S, R)
+        own = _owner_mask_np(self.pa, rows)
+        have = (self.table[:, :, rows, :] > 0).sum(axis=-1)  # (L, S, R)
+        growing = own & (lens < self.capacity)
+        need = np.where(growing, lens // self.block_size + 1, have)
+        missing = need - have
+        if missing.max(initial=0) <= 0:
+            return state
+        L = self.table.shape[0]
+        for l in range(L):
+            n_l = int(np.maximum(missing[l], 0).sum())
+            if n_l == 0:
+                continue
+            ids = self.pool.alloc(l, n_l)  # raises PoolExhausted
+            at = 0
+            for s, r in zip(*np.nonzero(missing[l] > 0)):
+                m, h = int(missing[l, s, r]), int(have[l, s, r])
+                self.table[l, s, rows[r], h:h + m] = ids[at:at + m]
+                at += m
+        return dataclasses.replace(state, cache=dataclasses.replace(
+            cache, block_table=jnp.asarray(self.table)))
+
+    def migrate_cache(self, cache, old_pa, new_pa, active_rows=None):
+        """Trial re-layout for a replan: materialize → migrate → allocate
+        in a *fresh* trial allocator; the expensive device re-pagination is
+        deferred into ``commit()`` (rejection — the common case under
+        hysteresis — then never pays it).
+
+        Raising ``PoolExhausted`` (ownership moves can change block
+        rounding) happens during the allocation trial, before scoring, and
+        leaves the backend untouched — the scheduler records the replan as
+        rejected.
+        """
+        slot = paged_to_slot(cache, self.capacity)
+        slot2 = migrate_slot_cache(slot, old_pa, new_pa)
+        B = int(cache.positions.shape[0])
+        rows = np.arange(B) if active_rows is None else np.asarray(
+            list(active_rows))
+        own = np.zeros((self.table.shape[0], self.table.shape[1], B), bool)
+        if rows.size:
+            own[:, :, rows] = _owner_mask_np(new_pa, rows)
+        trial = BlockPool(self.pool.n_layers, self.pool.n_blocks)
+        table = build_table(np.asarray(slot2.lengths), trial,
+                            self.block_size, self.max_blocks, own=own)
+
+        def commit():
+            empty, _ = init_paged_cache(
+                self.cfg.n_layers, int(new_pa.slot_head.shape[1]), B,
+                self.capacity, self.cfg.head_dim,
+                dataclasses.replace(self.paging, n_blocks=cache.n_blocks),
+                dtype=cache.k_pool.dtype)
+            cand = paginate_rows(empty, slot2,
+                                 jnp.arange(B, dtype=jnp.int32), table)
+            self.pool, self.table, self.pa = trial, table, new_pa
+            return cand
+
+        return slot2.lengths, commit
+
+    # ---- admission accounting ----------------------------------------------
+
+    def _layer_blocks(self, prompt_len: int, max_new: int,
+                      worst_case: bool) -> np.ndarray:
+        """(L,) projected block need per layer.
+
+        ``worst_case=False``: prefill bound + one growth block per owned
+        head (the admission check; later growth is preemption's problem).
+        ``worst_case=True``: the full-generation bound (fail-fast check).
+        """
+        H, L = self.cfg.n_kv_heads, self.cfg.n_layers
+        bs = self.block_size
+        out = np.zeros(L, np.int64)
+        for l in range(L):
+            tokens = layer_keep_bound(self.ccfg.policy, self.ccfg,
+                                      prompt_len, H, l, L)
+            if worst_case:
+                tokens = min(tokens + H * max_new,
+                             H * min(prompt_len + max_new, self.capacity))
+                out[l] = tokens // bs + H
+            else:
+                out[l] = tokens // bs + 2 * H  # rounding + 1 growth block/head
+        return out
+
+    def request_cost(self, req):
+        if self.cfg.attention_free:
+            return 0
+        return int(self._layer_blocks(req.prompt_len, req.max_new_tokens,
+                                      worst_case=True).sum())
+
+    def admissible(self, state, req):
+        if self.cfg.attention_free or self.pool is None:
+            return True
+        need = self._layer_blocks(req.prompt_len, req.max_new_tokens,
+                                  worst_case=False)
+        return bool((self.pool.free_blocks() >= need).all())
+
+    def never_fits(self, req):
+        if self.cfg.attention_free:
+            return None
+        need = self._layer_blocks(req.prompt_len, req.max_new_tokens,
+                                  worst_case=True)
+        usable = (self.pool.usable_blocks if self.pool is not None
+                  else self.paging.n_blocks - 1 if self.paging.n_blocks
+                  else None)
+        if usable is not None and int(need.max()) > usable:
+            return (f"worst-case need of {int(need.max())} blocks/layer "
+                    f"exceeds the pool ({usable} usable blocks/layer)")
+        return None
+
+    # ---- telemetry ---------------------------------------------------------
+
+    def memory_stats(self, state) -> dict:
+        if (state.cache is not None
+                and not isinstance(state.cache, PagedCache)):
+            # prefill() leaves the cache in slot layout until generate()
+            # adopts it — report the dense footprint it actually occupies
+            c = state.cache
+            L, S, B, C, Dh = c.k.shape
+            return {"backend": self.name, "layout": "slot (pre-adoption)",
+                    "block_size": self.block_size,
+                    "blocks_in_use": 0, "blocks_total": 0,
+                    "cache_bytes": int(2 * L * S * B * C * Dh
+                                       * c.k.dtype.itemsize),
+                    "pool_bytes": 0, "slot_equivalent_bytes": 0,
+                    "live_tokens": int(np.asarray(c.lengths).sum())}
+        if state.cache is None or self.pool is None:
+            return {"backend": self.name, "block_size": self.block_size,
+                    "blocks_in_use": 0, "blocks_total": 0, "cache_bytes": 0,
+                    "pool_bytes": 0, "slot_equivalent_bytes": 0,
+                    "live_tokens": 0}
+        c = state.cache
+        L, N, bs, Dh = c.k_pool.shape
+        _, S, B, M = c.block_table.shape
+        item = c.k_pool.dtype.itemsize
+        block_bytes = 2 * bs * Dh * item  # K + V
+        in_use = self.pool.blocks_in_use()
+        return {
+            "backend": self.name,
+            "block_size": bs,
+            "blocks_in_use": in_use,
+            "blocks_total": L * (N - 1),
+            "cache_bytes": in_use * block_bytes,
+            "pool_bytes": L * (N - 1) * block_bytes,
+            "slot_equivalent_bytes": int(2 * L * S * B * self.capacity
+                                         * Dh * item),
+            "live_tokens": int(np.asarray(c.lengths).sum()),
+        }

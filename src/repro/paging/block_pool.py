@@ -1,0 +1,174 @@
+"""Host-side block allocator for the paged KV backend (DESIGN.md §9).
+
+The device-side cache is a per-layer pool of fixed-size K/V blocks
+(``paged_cache.PagedCache``); this module owns the *topology*: which blocks
+of each layer's pool are free, and how many references each allocated block
+holds.  Allocation decisions are host-side Python (the scheduler runs on the
+host anyway), while the arrays the decisions describe live on device — the
+same split vLLM uses between its block manager and its paged attention
+kernel.
+
+Block id 0 of every layer is the reserved **null block**: block-table entries
+that point nowhere hold 0, and masked writes (unowned rows, unallocated
+slots) are redirected into it, so a scatter never needs data-dependent shape
+logic.  The null block's contents are garbage by design; every read path
+masks by retained length before the garbage can surface.
+
+Refcounts exist so a future copy-on-write fork (shared-prefix requests) can
+reuse blocks; today every block has refcount 1 while allocated.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, List, Optional, Sequence
+
+import numpy as np
+
+
+class PoolExhausted(RuntimeError):
+    """Raised when an allocation cannot be satisfied.
+
+    The scheduler treats this as a *preemption signal*, not an error: it
+    frees the youngest active request back to QUEUED and retries — the pool
+    never hands out a block it does not have, so exhaustion can never
+    corrupt live cache contents.
+    """
+
+
+@dataclass(frozen=True)
+class PagingConfig:
+    """Knobs for the paged cache backend.
+
+    ``block_size``: tokens per K/V block (per slot-row, per layer).
+    ``n_blocks``: per-layer pool size *including* the reserved null block;
+    0 sizes the pool to the slot-cache worst case (every (slot, row) fully
+    allocated) so nothing can ever be preempted — useful as a drop-in
+    correctness mode.  Undersize it deliberately to trade preemptions for
+    HBM (the fig7 benchmark's equal-HBM comparison).
+    """
+
+    block_size: int = 16
+    n_blocks: int = 0
+
+    def __post_init__(self):
+        if self.block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {self.block_size}")
+        if self.n_blocks < 0:
+            raise ValueError(f"n_blocks must be >= 0, got {self.n_blocks}")
+
+
+def blocks_for_tokens(tokens: int, block_size: int) -> int:
+    """ceil(tokens / block_size) — blocks needed to hold ``tokens`` entries."""
+    return -(-int(tokens) // int(block_size))
+
+
+class BlockPool:
+    """Free-list + refcounts over each layer's block pool.
+
+    Deterministic: blocks are handed out lowest-id-first per layer, so
+    identical request traces produce identical block tables (mirrors the
+    scheduler's lowest-row-first freelist).
+    """
+
+    def __init__(self, n_layers: int, n_blocks: int):
+        if n_blocks < 2:
+            raise ValueError(
+                f"need >= 2 blocks per layer (1 null + 1 usable), "
+                f"got {n_blocks}")
+        self.n_layers = int(n_layers)
+        self.n_blocks = int(n_blocks)
+        self.refcount = np.zeros((n_layers, n_blocks), np.int32)
+        self.refcount[:, 0] = 1  # null block: pinned forever
+        # descending so list.pop() returns the lowest free id
+        self._free: List[List[int]] = [
+            list(range(n_blocks - 1, 0, -1)) for _ in range(n_layers)]
+
+    # ---- introspection -----------------------------------------------------
+
+    def free_blocks(self, layer: Optional[int] = None):
+        """Free count for one layer, or (L,) array for all layers."""
+        if layer is not None:
+            return len(self._free[layer])
+        return np.asarray([len(f) for f in self._free], np.int64)
+
+    def blocks_in_use(self) -> int:
+        """Total allocated blocks across layers (null blocks excluded)."""
+        return int(sum(self.n_blocks - 1 - len(f) for f in self._free))
+
+    @property
+    def usable_blocks(self) -> int:
+        """Allocatable blocks per layer (the null block is never handed out)."""
+        return self.n_blocks - 1
+
+    # ---- alloc / free ------------------------------------------------------
+
+    def alloc(self, layer: int, n: int) -> List[int]:
+        """Allocate ``n`` blocks in ``layer`` (refcount 1 each).
+
+        Atomic: raises ``PoolExhausted`` without handing out anything if the
+        layer has fewer than ``n`` free blocks.
+        """
+        free = self._free[layer]
+        if n > len(free):
+            raise PoolExhausted(
+                f"layer {layer}: requested {n} blocks, {len(free)} free "
+                f"(pool {self.usable_blocks}/layer)")
+        ids = [free.pop() for _ in range(n)]
+        self.refcount[layer, ids] = 1
+        return ids
+
+    def incref(self, layer: int, ids: Iterable[int]) -> None:
+        for b in ids:
+            if self.refcount[layer, b] < 1:
+                raise ValueError(f"incref of unallocated block {b} "
+                                 f"in layer {layer}")
+            self.refcount[layer, b] += 1
+
+    def decref(self, layer: int, ids: Iterable[int]) -> None:
+        """Drop one reference per id; blocks reaching 0 return to the
+        free list.  Refcounts can never go negative: over-freeing raises."""
+        freed = []
+        for b in ids:
+            b = int(b)
+            if b == 0:
+                raise ValueError("null block cannot be freed")
+            rc = int(self.refcount[layer, b])
+            if rc <= 0:
+                raise ValueError(
+                    f"double free: block {b} of layer {layer} has "
+                    f"refcount {rc}")
+            self.refcount[layer, b] = rc - 1
+            if rc == 1:
+                freed.append(b)
+        if freed:
+            self._free[layer].extend(freed)
+            self._free[layer].sort(reverse=True)  # lowest-id-first via pop()
+
+    def free_table(self, table: np.ndarray) -> None:
+        """Decref every nonzero entry of an (L, ..., M) id table slice."""
+        for layer in range(self.n_layers):
+            ids = table[layer].reshape(-1)
+            ids = ids[ids > 0]
+            if ids.size:
+                self.decref(layer, ids.tolist())
+
+    def clone(self) -> "BlockPool":
+        """Deep copy — used to *trial* a migration before committing."""
+        out = BlockPool.__new__(BlockPool)
+        out.n_layers, out.n_blocks = self.n_layers, self.n_blocks
+        out.refcount = self.refcount.copy()
+        out._free = [list(f) for f in self._free]
+        return out
+
+    def check_invariants(self) -> None:
+        """Debug/test hook: free lists and refcounts partition the pool."""
+        for layer in range(self.n_layers):
+            free = set(self._free[layer])
+            assert 0 not in free, "null block leaked into the free list"
+            assert len(free) == len(self._free[layer]), "duplicate free ids"
+            for b in range(1, self.n_blocks):
+                rc = int(self.refcount[layer, b])
+                assert rc >= 0, f"negative refcount {rc}"
+                assert (b in free) == (rc == 0), (
+                    f"layer {layer} block {b}: refcount {rc} but "
+                    f"{'free' if b in free else 'allocated'}")

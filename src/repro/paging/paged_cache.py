@@ -1,0 +1,285 @@
+"""Paged slot-layout KV cache: block pools + block tables (DESIGN.md §9).
+
+The slot cache (`cache/slot_cache.py`) pads every (slot, row) to the static
+capacity ``C``, so a head compressed to 12% of ``C`` still reserves 100% of
+it.  The paged layout stores the same logical cache in fixed-size blocks
+allocated proportional to each (slot, row)'s *realized* retained length:
+
+    k_pool, v_pool : (L, N, bs, Dh)   N blocks of bs tokens per layer
+    pos_pool       : (L, N, bs) int32 absolute entry positions (−1 = empty)
+    block_table    : (L, S, B, M) int32  block ids per (slot, row);
+                                         0 = the reserved null block
+    lengths        : (L, S, B) int32  same semantics as the slot cache
+    positions      : (B,) int32       next absolute position per row
+
+``M = ceil(C / bs)`` so a fully-retained row is still representable; the win
+is that *partially* retained rows (the common case under imbalanced
+compression) only pin ``ceil(len / bs)`` blocks.  Logical column ``c`` of a
+(slot, row) lives at offset ``c % bs`` of block ``table[c // bs]``, so a
+block gather followed by a reshape reconstructs the exact contiguous
+``(S, B, C, Dh)`` view the decode kernel already understands — decode
+masking, ring appends, and the ownership rule (§2) all carry over unchanged.
+
+Allocation topology (which table entries are nonzero) is owned by the
+host-side ``BlockPool``; every function here trusts the table it is given.
+All ops are pure on the array pytree, mirroring the slot-cache API.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cache.slot_cache import SlotCache, ring_write_index, rows_to_mask
+from repro.paging.block_pool import BlockPool, PagingConfig, blocks_for_tokens
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class PagedCache:
+    k_pool: jnp.ndarray  # (L, N, bs, Dh)
+    v_pool: jnp.ndarray  # (L, N, bs, Dh)
+    pos_pool: jnp.ndarray  # (L, N, bs) int32
+    block_table: jnp.ndarray  # (L, S, B, M) int32; 0 = null block
+    lengths: jnp.ndarray  # (L, S, B) int32
+    positions: jnp.ndarray  # (B,) int32
+
+    @property
+    def block_size(self) -> int:
+        return self.k_pool.shape[2]
+
+    @property
+    def n_blocks(self) -> int:
+        return self.k_pool.shape[1]
+
+    @property
+    def max_blocks(self) -> int:
+        return self.block_table.shape[3]
+
+    @property
+    def n_slots(self) -> int:
+        return self.block_table.shape[1]
+
+
+def max_blocks_per_row(capacity: int, block_size: int) -> int:
+    return blocks_for_tokens(capacity, block_size)
+
+
+def init_paged_cache(
+    n_layers: int, n_slots: int, batch: int, capacity: int, head_dim: int,
+    paging: PagingConfig, dtype=jnp.bfloat16,
+) -> Tuple[PagedCache, BlockPool]:
+    """Empty paged cache + its allocator.
+
+    ``paging.n_blocks == 0`` sizes the pool to the slot-cache worst case
+    (``S·B·M + 1`` per layer): every (slot, row) can be fully allocated, so
+    this mode can never preempt — it trades no memory but validates the
+    paged data path end to end.
+    """
+    bs = paging.block_size
+    M = max_blocks_per_row(capacity, bs)
+    n_blocks = paging.n_blocks or (n_slots * batch * M + 1)
+    cache = PagedCache(
+        k_pool=jnp.zeros((n_layers, n_blocks, bs, head_dim), dtype),
+        v_pool=jnp.zeros((n_layers, n_blocks, bs, head_dim), dtype),
+        pos_pool=jnp.full((n_layers, n_blocks, bs), -1, jnp.int32),
+        block_table=jnp.zeros((n_layers, n_slots, batch, M), jnp.int32),
+        lengths=jnp.zeros((n_layers, n_slots, batch), jnp.int32),
+        positions=jnp.zeros((batch,), jnp.int32),
+    )
+    return cache, BlockPool(n_layers, n_blocks)
+
+
+# ---------------------------------------------------------------------------
+# Views
+# ---------------------------------------------------------------------------
+# The single-layer block gather lives in kernels/paged_decode
+# .paged_gather_views, next to its consumer; ref.paged_fairkv_decode_ref
+# deliberately carries an independent copy (oracles stay self-contained so
+# the parity test cannot compare a bug against itself).
+
+
+def paged_to_slot(cache: PagedCache, capacity: int) -> SlotCache:
+    """Full materialization into a SlotCache (migration / debugging).
+
+    Entries outside each (slot, row)'s valid prefix are zeroed (pos −1) so
+    the result obeys the slot-cache masking contract exactly; the decode
+    output over the result is bit-identical to the paged path.
+    """
+    L, N, bs, Dh = cache.k_pool.shape
+    _, S, B, M = cache.block_table.shape
+    gids = (jnp.arange(L, dtype=jnp.int32)[:, None, None, None] * N
+            + jnp.maximum(cache.block_table, 0))  # (L, S, B, M)
+    k = cache.k_pool.reshape(L * N, bs, Dh)[gids].reshape(L, S, B, M * bs, Dh)
+    v = cache.v_pool.reshape(L * N, bs, Dh)[gids].reshape(L, S, B, M * bs, Dh)
+    pos = cache.pos_pool.reshape(L * N, bs)[gids].reshape(L, S, B, M * bs)
+    k, v, pos = k[..., :capacity, :], v[..., :capacity, :], pos[..., :capacity]
+    valid = (jnp.arange(capacity, dtype=jnp.int32)[None, None, None, :]
+             < cache.lengths[..., None])  # (L, S, B, C)
+    return SlotCache(
+        k=jnp.where(valid[..., None], k, 0),
+        v=jnp.where(valid[..., None], v, 0),
+        lengths=cache.lengths,
+        pos=jnp.where(valid, pos, -1),
+        positions=cache.positions,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Writes
+# ---------------------------------------------------------------------------
+
+
+def paged_append_token(
+    cache: PagedCache,
+    layer: int,
+    k_new: jnp.ndarray,  # (S, B, Dh) post-RoPE
+    v_new: jnp.ndarray,  # (S, B, Dh)
+    own: jnp.ndarray,  # (S, B) bool
+    decode_step: jnp.ndarray,  # scalar int32: appends since prefill
+    capacity: int,
+    ring: int = 128,
+) -> PagedCache:
+    """Append one token for owned (slot, row) pairs — `append_token` parity.
+
+    The write index (including the full-row recency ring) is identical to
+    the slot cache's `ring_write_index`; the backend must have allocated the
+    block covering it (`prepare_decode`) before the jitted step runs.
+    Unowned pairs — and, defensively, owned pairs whose block is missing —
+    are redirected into the null block, never corrupting live data.
+    Length accounting matches the slot cache exactly (`own` increments).
+    """
+    bs = cache.block_size
+    lengths = cache.lengths[layer]  # (S, B)
+    idx = ring_write_index(lengths, decode_step, capacity, ring)  # (S, B)
+    blk, off = idx // bs, idx % bs
+    bid = jnp.take_along_axis(cache.block_table[layer], blk[..., None],
+                              axis=2)[..., 0]  # (S, B)
+    valid = own & (bid > 0)
+    bid = jnp.where(valid, bid, 0)
+    kl, vl, pl = cache.k_pool[layer], cache.v_pool[layer], cache.pos_pool[layer]
+    p_new = jnp.broadcast_to(cache.positions[None, :], own.shape)
+    k_upd = jnp.where(valid[..., None], k_new.astype(kl.dtype), kl[bid, off])
+    v_upd = jnp.where(valid[..., None], v_new.astype(vl.dtype), vl[bid, off])
+    p_upd = jnp.where(valid, p_new, pl[bid, off]).astype(jnp.int32)
+    new_len = jnp.where(own, jnp.minimum(lengths + 1, capacity), lengths)
+    return PagedCache(
+        k_pool=cache.k_pool.at[layer].set(kl.at[bid, off].set(k_upd)),
+        v_pool=cache.v_pool.at[layer].set(vl.at[bid, off].set(v_upd)),
+        pos_pool=cache.pos_pool.at[layer].set(pl.at[bid, off].set(p_upd)),
+        block_table=cache.block_table,
+        lengths=cache.lengths.at[layer].set(new_len.astype(jnp.int32)),
+        positions=cache.positions,
+    )
+
+
+def paginate_rows(
+    cache: PagedCache,
+    sub: SlotCache,
+    rows: jnp.ndarray,  # (B_sub,) target global rows
+    table_sub: np.ndarray,  # (L, S, B_sub, M) int32 freshly allocated ids
+) -> PagedCache:
+    """Copy a prefilled slot sub-cache into freshly allocated blocks.
+
+    ``table_sub`` comes from the backend's allocator (`BlockPool.alloc`):
+    entry ``[l, s, b, j]`` is the block holding columns
+    ``[j·bs, (j+1)·bs)`` of that (slot, row), 0 past the allocated count.
+    One global scatter per tensor; unallocated tail blocks are redirected
+    into the null block.  The target rows' table/lengths/positions are fully
+    replaced (they must have been released first).
+    """
+    L, N, bs, Dh = cache.k_pool.shape
+    _, S, B_sub, C, _ = sub.k.shape
+    M = table_sub.shape[3]
+    pad = M * bs - C
+    if pad < 0:
+        raise ValueError(f"sub capacity {C} exceeds table span {M * bs}")
+    k_sub = jnp.pad(sub.k, ((0, 0),) * 3 + ((0, pad), (0, 0)))
+    v_sub = jnp.pad(sub.v, ((0, 0),) * 3 + ((0, pad), (0, 0)))
+    p_sub = jnp.pad(sub.pos, ((0, 0),) * 3 + ((0, pad),), constant_values=-1)
+    k_sub = k_sub.reshape(L, S, B_sub, M, bs, Dh)
+    v_sub = v_sub.reshape(L, S, B_sub, M, bs, Dh)
+    p_sub = p_sub.reshape(L, S, B_sub, M, bs)
+    tbl = np.asarray(table_sub, np.int64)
+    gids = np.where(tbl > 0,
+                    np.arange(L, dtype=np.int64)[:, None, None, None] * N + tbl,
+                    0)  # null-redirect: block 0 of layer 0
+    gids = jnp.asarray(gids.reshape(-1), jnp.int32)
+    k_pool = (cache.k_pool.reshape(L * N, bs, Dh)
+              .at[gids].set(k_sub.reshape(-1, bs, Dh).astype(cache.k_pool.dtype))
+              .reshape(L, N, bs, Dh))
+    v_pool = (cache.v_pool.reshape(L * N, bs, Dh)
+              .at[gids].set(v_sub.reshape(-1, bs, Dh).astype(cache.v_pool.dtype))
+              .reshape(L, N, bs, Dh))
+    pos_pool = (cache.pos_pool.reshape(L * N, bs)
+                .at[gids].set(p_sub.reshape(-1, bs))
+                .reshape(L, N, bs))
+    rows = jnp.asarray(rows, jnp.int32)
+    return PagedCache(
+        k_pool=k_pool, v_pool=v_pool, pos_pool=pos_pool,
+        block_table=cache.block_table.at[:, :, rows, :].set(
+            jnp.asarray(table_sub, jnp.int32)),
+        lengths=cache.lengths.at[:, :, rows].set(sub.lengths),
+        positions=cache.positions.at[rows].set(sub.positions),
+    )
+
+
+def release_rows(cache: PagedCache, rows) -> PagedCache:
+    """Device half of row retirement: clear table/lengths/positions.
+
+    ``rows`` is a (B,) bool mask or an int index array (like
+    `slot_cache.reset_rows`).  Pool contents are left in place —
+    unreferenced blocks are recycled by the host allocator
+    (`BlockPool.decref`), which the backend drives.
+    """
+    m = rows_to_mask(rows, cache.positions.shape[0])
+    return PagedCache(
+        k_pool=cache.k_pool, v_pool=cache.v_pool, pos_pool=cache.pos_pool,
+        block_table=jnp.where(m[None, None, :, None], 0, cache.block_table),
+        lengths=jnp.where(m[None, None, :], 0, cache.lengths),
+        positions=jnp.where(m, 0, cache.positions),
+    )
+
+
+def build_table(
+    lengths: np.ndarray,  # (L, S, B) realized retained lengths
+    pool: BlockPool,
+    block_size: int,
+    max_blocks: int,
+    own: Optional[np.ndarray] = None,  # (L, S, B) bool ownership
+) -> np.ndarray:
+    """Allocate blocks proportional to realized lengths → (L, S, B, M) table.
+
+    Owned (slot, row) pairs get at least one block even at length 0 so the
+    first decode append always has a home (matching the slot cache, where
+    every owned pair can append immediately).  Atomic: on ``PoolExhausted``
+    everything allocated so far is returned to the pool before re-raising.
+    """
+    L, S, B = lengths.shape
+    need = -(-np.asarray(lengths, np.int64) // block_size)  # ceil-div
+    if own is not None:
+        need = np.maximum(need, np.asarray(own, np.int64))
+    if need.max(initial=0) > max_blocks:
+        raise ValueError(
+            f"row needs {need.max()} blocks > max_blocks {max_blocks}")
+    table = np.zeros((L, S, B, max_blocks), np.int32)
+    fill = (np.arange(max_blocks, dtype=np.int64)[None, :]
+            < need.reshape(L, -1)[..., None])  # (L, S·B, M) slots to fill
+    done_layers = []
+    try:
+        for l in range(L):
+            ids = pool.alloc(l, int(need[l].sum()))
+            done_layers.append(l)
+            # row-major mask assignment == sequential per-(slot,row) fill
+            layer = np.zeros((S * B, max_blocks), np.int32)
+            layer[fill[l]] = ids
+            table[l] = layer.reshape(S, B, max_blocks)
+    except Exception:
+        for l in done_layers:
+            ids = table[l].reshape(-1)
+            pool.decref(l, ids[ids > 0].tolist())
+        raise
+    return table

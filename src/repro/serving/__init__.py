@@ -17,6 +17,12 @@ from repro.serving.request import (  # noqa: F401
     poisson_arrivals,
     synthesize_requests,
 )
+from repro.serving.cache_backend import (  # noqa: F401
+    CacheBackend,
+    PoolExhausted,
+    SlotBackend,
+    make_cache_backend,
+)
 from repro.serving.scheduler import (  # noqa: F401
     ReplanTrigger,
     RowFreelist,

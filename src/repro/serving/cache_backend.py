@@ -1,0 +1,192 @@
+"""Cache backends: the storage strategy behind the serving engine.
+
+A ``CacheBackend`` owns how per-(slot, row) KV is *stored* and *accounted* —
+not how it is computed: prefill, the decode math, ownership, and compression
+are backend-independent.  Two built-ins register here and in
+``repro.paging.backend``:
+
+- ``"slot"``  — the dense slot cache (DESIGN.md §2): every (slot, row)
+  padded to static capacity ``C``.  Simple, zero bookkeeping, memory cost
+  independent of realized compression.
+- ``"paged"`` — the block-pool cache (DESIGN.md §9): fixed-size blocks
+  allocated proportional to realized retained lengths; admission is a
+  free-*block* budget and running dry preempts instead of corrupting.
+
+Backends are registered with ``@repro.api.register_cache_backend`` and
+selected by ``EngineConfig.cache_backend``; the scheduler and the `Engine`
+facade call only this interface, so a third-party backend (e.g. quantized
+blocks, CPU offload) plugs in without touching either.
+
+Contract notes: state-transforming methods are *pure* on the ServeState
+pytree but may mutate backend-internal host bookkeeping (allocator state);
+``splice`` / ``prepare_decode`` may raise ``PoolExhausted``, which the
+scheduler treats as a preemption signal; ``migrate_cache`` returns a
+``(candidate_cache, commit)`` pair so a replan can be scored and *rejected*
+without leaking backend bookkeeping.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.api.registry import register_cache_backend
+from repro.cache.slot_cache import PlanArrays, migrate_cache
+from repro.compression.base import CompressionConfig
+from repro.compression.policies import projected_request_tokens
+from repro.configs.base import ModelConfig
+from repro.paging.block_pool import PagingConfig, PoolExhausted  # noqa: F401
+from repro.serving import engine as _serve
+from repro.serving.request import Request
+
+
+class CacheBackend:
+    """Interface; see module docstring for the contract."""
+
+    name: str = "?"
+
+    def __init__(self, model_cfg: ModelConfig, ccfg: CompressionConfig,
+                 max_live_tokens: Optional[int] = None,
+                 paging: Optional[PagingConfig] = None):
+        self.cfg = model_cfg
+        self.ccfg = ccfg
+        self.max_live_tokens = max_live_tokens
+        self.paging = paging or PagingConfig()
+
+    # ---- state lifecycle ---------------------------------------------------
+
+    def init_state(self, pa: PlanArrays, batch: int, dtype):
+        """Empty B-row ServeState in this backend's layout."""
+        raise NotImplementedError
+
+    def from_prefill(self, state, pa: PlanArrays):
+        """Adopt a full-batch prefill result (one-shot mode)."""
+        return state
+
+    def splice(self, state, sub, rows):
+        """Splice a prefilled slot-layout sub-state into ``rows``."""
+        raise NotImplementedError
+
+    def release_rows(self, state, rows):
+        """Retire rows: clear state, reclaim backing memory."""
+        raise NotImplementedError
+
+    def prepare_decode(self, state, active: Optional[Sequence[int]]):
+        """Host hook before a decode tick: guarantee the next append of
+        every active row has backing storage.  ``None`` = all rows."""
+        return state
+
+    def migrate_cache(self, cache, old_pa: PlanArrays, new_pa: PlanArrays,
+                      active_rows: Optional[Sequence[int]] = None
+                      ) -> Tuple[object, Callable[[], object]]:
+        """Trial a re-layout under ``new_pa``.
+
+        Returns ``(preview_lengths, commit)``: the candidate's (L, S, B)
+        realized lengths — enough to score accept/reject — and a commit
+        callback that materializes and returns the migrated cache (call it
+        only on accept; rejected trials then never pay the full device
+        re-layout).  Infeasibility (e.g. block rounding under the new
+        ownership split) raises before scoring, never inside commit."""
+        raise NotImplementedError
+
+    # ---- admission accounting ----------------------------------------------
+
+    def request_cost(self, req: Request) -> int:
+        """Projected cost in backend units (tokens / blocks) — telemetry
+        and fail-fast; an upper bound on what the request can ever pin."""
+        raise NotImplementedError
+
+    def admissible(self, state, req: Request) -> bool:
+        """Do free resources cover the request's projected prefill need?"""
+        raise NotImplementedError
+
+    def never_fits(self, req: Request) -> Optional[str]:
+        """Reason string when the request cannot fit even an empty cache
+        (fail fast at submit instead of head-of-line blocking), else None."""
+        return None
+
+    # ---- telemetry ---------------------------------------------------------
+
+    def memory_stats(self, state) -> dict:
+        raise NotImplementedError
+
+
+@register_cache_backend("slot")
+class SlotBackend(CacheBackend):
+    """Dense static-capacity slot cache (the PR-1/PR-2 baseline layout).
+
+    Admission budget is the projected live-token total.  The projection
+    uses the per-policy prefill keep bounds (`layer_keep_bound`) — pool
+    conservation makes imbalanced policies *much* cheaper than the old
+    ``L·H·min(prompt+gen, C)`` static-capacity charge (see the audit note
+    in DESIGN.md §7).
+    """
+
+    name = "slot"
+
+    def init_state(self, pa, batch, dtype):
+        return _serve.init_serve_state(self.cfg, pa, batch, self.ccfg,
+                                       dtype=dtype)
+
+    def splice(self, state, sub, rows):
+        return _serve.splice_state(state, sub, rows)
+
+    def release_rows(self, state, rows):
+        return _serve.reset_state_rows(state, rows)
+
+    def migrate_cache(self, cache, old_pa, new_pa, active_rows=None):
+        migrated = migrate_cache(cache, old_pa, new_pa)
+        return migrated.lengths, lambda: migrated
+
+    def live_tokens(self, state) -> int:
+        if state.cache is None:
+            return 0
+        return int(np.asarray(state.cache.lengths).sum())
+
+    def request_cost(self, req):
+        if self.cfg.attention_free:
+            return 0
+        return projected_request_tokens(
+            self.ccfg.policy, self.ccfg, req.prompt_len, req.max_new_tokens,
+            self.cfg.n_layers, self.cfg.n_kv_heads)
+
+    def admissible(self, state, req):
+        if self.max_live_tokens is None:
+            return True
+        return (self.live_tokens(state) + self.request_cost(req)
+                <= self.max_live_tokens)
+
+    def never_fits(self, req):
+        if self.max_live_tokens is None:
+            return None
+        cost = self.request_cost(req)
+        if cost > self.max_live_tokens:
+            return (f"projected cost {cost} tokens exceeds max_live_tokens="
+                    f"{self.max_live_tokens} even on an empty cache")
+        return None
+
+    def memory_stats(self, state) -> dict:
+        if state.cache is None:
+            return {"backend": self.name, "cache_bytes": 0, "live_tokens": 0}
+        c = state.cache
+        L, S, B, C, Dh = c.k.shape
+        item = c.k.dtype.itemsize
+        live = int(np.asarray(c.lengths).sum())
+        return {
+            "backend": self.name,
+            "cache_bytes": int(2 * L * S * B * C * Dh * item),
+            "live_tokens": live,
+            "capacity_tokens": int(L * S * B * C),
+            "utilization": live / max(1, L * S * B * C),
+        }
+
+
+def make_cache_backend(name: str, model_cfg: ModelConfig,
+                       ccfg: CompressionConfig,
+                       max_live_tokens: Optional[int] = None,
+                       paging: Optional[PagingConfig] = None) -> CacheBackend:
+    """Instantiate a registered backend by name."""
+    from repro.api.registry import get_cache_backend
+    return get_cache_backend(name)(model_cfg, ccfg,
+                                   max_live_tokens=max_live_tokens,
+                                   paging=paging)

@@ -19,10 +19,11 @@ The decode step is the paper's measured quantity; its attention inner loop is
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass
 from functools import partial
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -44,9 +45,12 @@ from repro.configs.base import ModelConfig
 from repro.core.placement import HeadPlacement
 from repro.distributed.sharding import constrain
 from repro.kernels import ops as K
+from repro.kernels.paged_decode import paged_fairkv_decode
 from repro.models import layers as L
 from repro.models import ssm as S
 from repro.models import transformer as M
+from repro.paging.paged_cache import PagedCache, paged_append_token
+from repro.paging.paged_cache import release_rows as paged_release_rows
 
 
 # ---------------------------------------------------------------------------
@@ -372,8 +376,7 @@ def decode_step(
         pos_next = (cache.positions + 1 if active is None
                     else jnp.where(active, cache.positions + 1,
                                    cache.positions))
-        cache = SlotCache(k=cache.k, v=cache.v, lengths=cache.lengths,
-                          pos=cache.pos, positions=pos_next)
+        cache = dataclasses.replace(cache, positions=pos_next)
     new_state = ServeState(
         cache=cache, ssm_state=ssm_state, conv_state=conv_state,
         cross_k=state.cross_k, cross_v=state.cross_v,
@@ -403,11 +406,26 @@ def _decode_attention(pl, hn, positions, cfg, layer_idx, cache, plan,
     own = plan.owner_mask(layer_idx, B)  # (S, B)
     if active is not None:
         own = own & active[None, :]
+    window = M.layer_window(cfg, layer_idx)
+    if isinstance(cache, PagedCache):
+        # paged backend (DESIGN.md §9): block-pool storage, same append
+        # index rule and decode masking via block-gathered views.  Appends
+        # are always scatters into the pool (the onehot trade-off does not
+        # arise: writes touch one block, not a full cache slice).
+        capacity = ccfg.static_capacity()
+        cache = paged_append_token(cache, layer_idx, k_new.swapaxes(0, 1),
+                                   v_new.swapaxes(0, 1), own, decode_steps,
+                                   capacity, ring=max(1, ccfg.decode_margin))
+        out = paged_fairkv_decode(
+            q, cache.k_pool[layer_idx], cache.v_pool[layer_idx],
+            cache.pos_pool[layer_idx], cache.block_table[layer_idx],
+            cache.lengths[layer_idx], capacity, attn_cap=cfg.attn_softcap,
+            q_pos=positions, window=window)
+        return out, cache
     cache = append_token(cache, layer_idx, k_new.swapaxes(0, 1),
                          v_new.swapaxes(0, 1), own, decode_steps,
                          ring=max(1, ccfg.decode_margin),
                          mode=ccfg.append_mode)
-    window = M.layer_window(cfg, layer_idx)
     out = K.fairkv_decode(q, cache.k[layer_idx], cache.v[layer_idx],
                           cache.lengths[layer_idx], attn_cap=cfg.attn_softcap,
                           k_pos=cache.pos[layer_idx], q_pos=positions,
@@ -469,21 +487,29 @@ def _decode_ssm(pl, hn, cfg, layer_idx, ssm_state, conv_state):
 # ---------------------------------------------------------------------------
 
 
+_KEEP = object()  # sentinel: "no cache override" (None is a real value)
+
+
 def init_serve_state(cfg: ModelConfig, plan: PlanArrays, batch: int,
-                     ccfg: CompressionConfig, dtype=jnp.float32) -> ServeState:
+                     ccfg: CompressionConfig, dtype=jnp.float32,
+                     cache=_KEEP) -> ServeState:
     """Empty B-row ServeState: every row retired (lengths 0, positions 0).
 
     The continuous-batching scheduler starts from this and splices prefilled
-    requests into rows as they are admitted.  Encoder-decoder models are not
+    requests into rows as they are admitted.  ``cache`` lets a cache backend
+    substitute its own layout (e.g. a `PagedCache`) while reusing the
+    SSM/conv/token initialization.  Encoder-decoder models are not
     supported (their cross-KV shape depends on per-request encoder inputs).
     """
     if cfg.is_encoder_decoder:
         raise NotImplementedError(
             "continuous batching does not support encoder-decoder models")
-    cache = None
-    if not cfg.attention_free:
-        cache = init_cache(cfg.n_layers, int(plan.slot_head.shape[1]), batch,
-                           ccfg.static_capacity(), cfg.head_dim, dtype=dtype)
+    if cache is _KEEP:
+        cache = None
+        if not cfg.attention_free:
+            cache = init_cache(cfg.n_layers, int(plan.slot_head.shape[1]),
+                               batch, ccfg.static_capacity(), cfg.head_dim,
+                               dtype=dtype)
     ssm_state = conv_state = None
     if cfg.family in ("ssm", "hybrid"):
         s = cfg.ssm
@@ -499,17 +525,20 @@ def init_serve_state(cfg: ModelConfig, plan: PlanArrays, batch: int,
 
 
 def splice_state(state: ServeState, sub: ServeState,
-                 rows: jnp.ndarray) -> ServeState:
+                 rows: jnp.ndarray, cache=_KEEP) -> ServeState:
     """Splice a prefilled sub-batch state into ``rows`` of the live state.
 
     ``sub`` must come from ``prefill(..., rows=rows)`` so its slot-cache
     ownership matches the target global rows.  ``decode_steps`` keeps the
     live value — the ring-write phase is global, not per-request.
+    ``cache`` overrides the cache splice (cache backends pass their
+    already-spliced layout; the SSM/conv/token rows still merge here).
     """
     rows = jnp.asarray(rows, jnp.int32)
-    cache = state.cache
-    if cache is not None:
-        cache = insert_rows(cache, sub.cache, rows)
+    if cache is _KEEP:
+        cache = state.cache
+        if cache is not None:
+            cache = insert_rows(cache, sub.cache, rows)
     ssm = state.ssm_state
     if ssm is not None:
         ssm = ssm.at[:, rows].set(sub.ssm_state)
@@ -523,13 +552,17 @@ def splice_state(state: ServeState, sub: ServeState,
         decode_steps=state.decode_steps)
 
 
-def reset_state_rows(state: ServeState, rows) -> ServeState:
+def reset_state_rows(state: ServeState, rows, cache=_KEEP) -> ServeState:
     """Retire rows: clear their cache/SSM state so their decode output is
-    exactly zero and the rows can be handed back to the freelist."""
+    exactly zero and the rows can be handed back to the freelist.
+    ``cache`` overrides the cache reset (backends pass their own layout)."""
     m = rows_to_mask(rows, state.last_tokens.shape[0])
-    cache = state.cache
-    if cache is not None:
-        cache = reset_rows(cache, rows)
+    if cache is _KEEP:
+        cache = state.cache
+        if cache is not None:
+            cache = (paged_release_rows(cache, rows)
+                     if isinstance(cache, PagedCache)
+                     else reset_rows(cache, rows))
     ssm = state.ssm_state
     if ssm is not None:
         ssm = jnp.where(m[None, :, None, None, None], 0, ssm)

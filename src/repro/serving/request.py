@@ -48,6 +48,7 @@ class Request:
     finish_step: Optional[int] = None
     arrival_time: Optional[float] = None
     finish_time: Optional[float] = None
+    n_preemptions: int = 0  # times evicted back to QUEUED (paged backend)
 
     @property
     def prompt_len(self) -> int:
@@ -60,6 +61,21 @@ class Request:
     @property
     def is_finished(self) -> bool:
         return self.state is RequestState.FINISHED
+
+    def reset_for_requeue(self) -> None:
+        """Preemption (recompute policy): drop all generated state so a
+        later re-admission replays the request from its prompt.  Decoding
+        is deterministic (argmax), so the replay produces the same tokens;
+        arrival/queueing telemetry is preserved, admission telemetry is
+        cleared (it will be re-stamped)."""
+        self.state = RequestState.QUEUED
+        self.row = None
+        self.generated = []
+        if self.logits is not None:
+            self.logits = []
+        self.admit_step = None
+        self.first_token_step = None
+        self.n_preemptions += 1
 
     def queueing_steps(self) -> Optional[int]:
         if self.admit_step is None:

@@ -32,18 +32,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.cache.slot_cache import PlanArrays, migrate_cache
+from repro.cache.slot_cache import PlanArrays
 from repro.compression.base import CompressionConfig
 from repro.configs.base import ModelConfig
 from repro.core.placement import HeadPlacement
 from repro.core.planner import PlannerConfig, build_plan
+from repro.paging.block_pool import PoolExhausted
+from repro.serving.cache_backend import CacheBackend, make_cache_backend
 from repro.serving.engine import (
     decode_step,
-    init_serve_state,
     prefill,
-    reset_state_rows,
     slotify_params,
-    splice_state,
 )
 from repro.serving.request import Request, RequestState
 
@@ -128,8 +127,9 @@ class ReplanTrigger:
 @dataclass(frozen=True)
 class SchedulerConfig:
     max_rows: int = 4  # fixed decode batch width (row slots)
-    # admission token budget: projected Σ lengths over (L, H) the live cache
-    # may hold; None admits on free rows alone
+    # admission token budget (slot backend): projected Σ lengths over (L, H)
+    # the live cache may hold; None admits on free rows alone.  The paged
+    # backend ignores this — its budget is the free-block pool itself.
     max_live_tokens: Optional[int] = None
     replan_window: int = 8
     replan_threshold: float = 1.25
@@ -152,6 +152,7 @@ class Scheduler:
         planner_cfg: Optional[PlannerConfig] = None,
         dtype=jnp.float32,
         serve_params: Optional[dict] = None,
+        backend: Optional[CacheBackend] = None,
     ):
         if cfg.is_encoder_decoder or cfg.is_vlm:
             raise NotImplementedError(
@@ -170,8 +171,10 @@ class Scheduler:
         # facade passes its own copy so the permutation isn't paid twice)
         self.sp = (serve_params if serve_params is not None
                    else slotify_params(params, plan, cfg))
-        self.state = init_serve_state(cfg, self.pa, scfg.max_rows, ccfg,
-                                      dtype=dtype)
+        # cache backend: storage layout + admission accounting (DESIGN.md §9)
+        self.backend = backend if backend is not None else make_cache_backend(
+            "slot", cfg, ccfg, max_live_tokens=scfg.max_live_tokens)
+        self.state = self.backend.init_state(self.pa, scfg.max_rows, dtype)
 
         # persisted straggler speed factors (set by a speed-aware replan):
         # imbalance() and every later replan score/plan against them, so an
@@ -185,6 +188,7 @@ class Scheduler:
                                      cooldown=scfg.replan_cooldown)
         self.step_idx = 0
         self.n_replans = 0
+        self.n_preemptions = 0
         self.replan_log: List[dict] = []  # {step, imbalance_before/after}
         self.finished: List[Request] = []
         self._decode = self._make_decode()
@@ -246,33 +250,28 @@ class Scheduler:
     def submit(self, req: Request) -> None:
         # fail fast on a request that could never be admitted: FCFS would
         # head-of-line block behind it until max_steps with no diagnostic
-        if (self.scfg.max_live_tokens is not None
-                and self._estimated_cost(req) > self.scfg.max_live_tokens):
+        reason = self.backend.never_fits(req)
+        if reason is not None:
             raise ValueError(
-                f"request {req.req_id} can never be admitted: projected cost "
-                f"{self._estimated_cost(req)} tokens exceeds max_live_tokens="
-                f"{self.scfg.max_live_tokens} even on an empty cache")
+                f"request {req.req_id} can never be admitted: {reason}")
         req.state = RequestState.QUEUED
         if req.arrival_time is None:
             req.arrival_time = time.time()
         self.queue.append(req)
 
     def _estimated_cost(self, req: Request) -> int:
-        """Projected Σ lengths the request can pin: every head of every layer
-        retains at most min(prompt+gen, static capacity) tokens."""
-        cap = self.ccfg.static_capacity()
-        per_head = min(req.prompt_len + req.max_new_tokens, cap)
-        return self.cfg.n_layers * self.cfg.n_kv_heads * per_head
+        """Projected cost in the backend's units (slot: Σ-lengths bound via
+        the per-policy keep bounds; paged: worst-case blocks)."""
+        return self.backend.request_cost(req)
 
     def admissible(self, req: Request) -> bool:
         if len(self.freelist) == 0:
             return False
-        if self.scfg.max_live_tokens is None:
-            return True
-        return (self.live_tokens() + self._estimated_cost(req)
-                <= self.scfg.max_live_tokens)
+        return self.backend.admissible(self.state, req)
 
-    def _admit(self, req: Request) -> int:
+    def _admit(self, req: Request) -> Optional[int]:
+        """Prefill + splice; returns the row, or None when the cache
+        backend ran out of memory even after preempting (caller requeues)."""
         row = self.freelist.acquire()
         assert row is not None
         req.state = RequestState.PREFILLING
@@ -281,7 +280,20 @@ class Scheduler:
         batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
         sub, logits, _lens = prefill(self.sp, batch, self.cfg, self.pa,
                                      self.ccfg, rows=jnp.asarray([row]))
-        self.state = splice_state(self.state, sub, jnp.asarray([row]))
+        try:
+            self.state = self.backend.splice(self.state, sub,
+                                             jnp.asarray([row]))
+        except PoolExhausted:
+            # admission never preempts (only decode growth does — evicting
+            # older in-flight work to admit newer would invert FCFS): undo
+            # and let the caller requeue.  Unreachable for the built-in
+            # backends, whose admissible() charge dominates the splice need;
+            # this guards plugin backends with looser admission estimates.
+            self.freelist.release(row)
+            req.state = RequestState.QUEUED
+            req.row = None
+            req.admit_step = None
+            return None
         first = int(np.asarray(sub.last_tokens)[0])
         req.generated.append(first)
         req.first_token_step = self.step_idx
@@ -300,7 +312,7 @@ class Scheduler:
 
     def _retire(self, req: Request) -> None:
         row = req.row
-        self.state = reset_state_rows(self.state, jnp.asarray([row]))
+        self.state = self.backend.release_rows(self.state, jnp.asarray([row]))
         del self.active[row]
         self.freelist.release(row)
         req.state = RequestState.FINISHED
@@ -308,6 +320,42 @@ class Scheduler:
         req.finish_time = time.time()
         req.row = None
         self.finished.append(req)
+
+    # ---- preemption (paged backend, DESIGN.md §9) --------------------------
+
+    def _preempt_one(self) -> bool:
+        """Evict the youngest active request back to QUEUED (recompute
+        policy), freeing its rows/blocks.  Victim choice protects invested
+        work: the most recently admitted request has the least progress to
+        replay.  Returns False when there is nothing (left) to evict."""
+        victims = list(self.active.values())
+        if not victims:
+            return False
+        victim = max(victims, key=lambda r: (r.admit_step, r.req_id))
+        row = victim.row
+        self.state = self.backend.release_rows(self.state, jnp.asarray([row]))
+        del self.active[row]
+        self.freelist.release(row)
+        victim.reset_for_requeue()
+        self.queue.appendleft(victim)  # re-admit first: it is oldest by FCFS
+        self.n_preemptions += 1
+        return True
+
+    def _prepare_decode(self) -> None:
+        """Backend pre-tick hook with preemption: guarantee every active
+        row's next append has backing storage, evicting the youngest
+        requests while the pool is dry."""
+        while True:
+            try:
+                self.state = self.backend.prepare_decode(
+                    self.state, sorted(self.active))
+                return
+            except PoolExhausted as e:
+                if not self._preempt_one():
+                    raise RuntimeError(
+                        "cache pool exhausted with nothing left to preempt "
+                        "— the pool is too small for a single request "
+                        f"({e}); raise PagingConfig.n_blocks") from e
 
     # ---- replanning --------------------------------------------------------
 
@@ -363,8 +411,19 @@ class Scheduler:
         new_plan = build_plan(profile, self.plan.n_shards, self.pcfg,
                               shard_speeds=speeds)
         new_pa = PlanArrays.from_plan(new_plan)
-        cache = migrate_cache(self.state.cache, self.pa, new_pa)
-        after = self._imbalance_of(np.asarray(cache.lengths),
+        try:
+            cand_lengths, commit = self.backend.migrate_cache(
+                self.state.cache, self.pa, new_pa,
+                active_rows=sorted(self.active))
+        except PoolExhausted as e:
+            # block rounding under the new ownership split doesn't fit the
+            # pool: reject without touching state (cooldown still consumed)
+            event = {"step": self.step_idx, "imbalance_before": before,
+                     "imbalance_after": before, "accepted": False,
+                     "rejected_reason": f"pool exhausted: {e}"}
+            self.replan_log.append(event)
+            return event
+        after = self._imbalance_of(np.asarray(cand_lengths),
                                    new_plan.n_shards,
                                    new_plan.slots_per_shard, speeds)
         event = {"step": self.step_idx, "imbalance_before": before,
@@ -373,7 +432,7 @@ class Scheduler:
             event["imbalance_after"] = before
             self.replan_log.append(event)
             return event
-        self.state = dataclasses.replace(self.state, cache=cache)
+        self.state = dataclasses.replace(self.state, cache=commit())
         self.plan, self.pa = new_plan, new_pa
         self.sp = slotify_params(self.params, new_plan, self.cfg)
         self._decode = self._make_decode()
@@ -392,15 +451,21 @@ class Scheduler:
     def step(self) -> dict:
         """One scheduler tick: admit → decode → retire → (maybe) replan."""
         events: dict = {"step": self.step_idx, "admitted": [], "finished": [],
-                        "replanned": False}
+                        "preempted": 0, "replanned": False}
+        preempted_before = self.n_preemptions
         # admission: fill free rows from the queue head (FCFS)
         while self.queue and self.admissible(self.queue[0]):
             req = self.queue.popleft()
             row = self._admit(req)
+            if row is None:  # backend memory dry even after preemption
+                self.queue.appendleft(req)
+                break
             events["admitted"].append((req.req_id, row))
             if req.is_finished:  # max_new_tokens == 1 or instant EOS
                 events["finished"].append(req.req_id)
         # one interleaved decode tick for every live row
+        if self.active:
+            self._prepare_decode()  # may preempt (paged pool dry)
         if self.active:
             self.state, logits = self._decode(self.state, self.active_mask())
             toks = np.asarray(self.state.last_tokens)
@@ -416,6 +481,7 @@ class Scheduler:
                 if self._done(req):
                     self._retire(req)
                     events["finished"].append(req.req_id)
+        events["preempted"] = self.n_preemptions - preempted_before
         # load accounting + replan trigger (hysteresis inside the trigger)
         self.trigger.observe(self.imbalance())
         if self.should_replan():
@@ -457,4 +523,6 @@ class Scheduler:
             "mid_stream_admissions": mid_stream_admissions,
             "replans": self.n_replans,
             "replan_log": list(self.replan_log),
+            "preemptions": self.n_preemptions,
+            "memory": self.backend.memory_stats(self.state),
         }

@@ -1,0 +1,210 @@
+"""Paged KV backend: BlockPool invariants, paged-vs-slot decode parity
+(bit-for-bit, property-tested over random placements/lengths), append
+parity including the recency ring, and slot↔paged round-trips."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.cache.slot_cache import SlotCache, append_token
+from repro.kernels.ref import fairkv_decode_ref, paged_fairkv_decode_ref
+from repro.paging.block_pool import BlockPool, PoolExhausted
+from repro.paging.paged_cache import (
+    PagedCache,
+    build_table,
+    init_paged_cache,
+    max_blocks_per_row,
+    paged_append_token,
+    paged_to_slot,
+    paginate_rows,
+)
+from repro.paging.block_pool import PagingConfig
+
+from tests._hypothesis_compat import given, settings, st
+
+
+# ---------------------------------------------------------------------------
+# BlockPool invariants
+# ---------------------------------------------------------------------------
+
+
+def test_pool_alloc_free_round_trip():
+    pool = BlockPool(n_layers=2, n_blocks=8)
+    assert pool.usable_blocks == 7
+    ids = pool.alloc(0, 5)
+    assert len(set(ids)) == 5 and 0 not in ids
+    assert pool.free_blocks(0) == 2 and pool.free_blocks(1) == 7
+    assert pool.blocks_in_use() == 5
+    pool.decref(0, ids)
+    assert pool.free_blocks(0) == 7 and pool.blocks_in_use() == 0
+    # deterministic reuse: lowest ids first, same sequence after round-trip
+    assert pool.alloc(0, 5) == ids
+    pool.check_invariants()
+
+
+def test_pool_refcount_never_negative():
+    pool = BlockPool(n_layers=1, n_blocks=4)
+    (b,) = pool.alloc(0, 1)
+    pool.incref(0, [b])
+    pool.decref(0, [b])  # refcount 2 -> 1: still allocated
+    assert pool.free_blocks(0) == 2
+    pool.decref(0, [b])  # 1 -> 0: freed
+    assert pool.free_blocks(0) == 3
+    with pytest.raises(ValueError, match="double free"):
+        pool.decref(0, [b])
+    with pytest.raises(ValueError, match="null block"):
+        pool.decref(0, [0])
+    with pytest.raises(ValueError):
+        pool.incref(0, [b])  # unallocated
+    pool.check_invariants()
+
+
+def test_pool_exhaustion_is_atomic():
+    pool = BlockPool(n_layers=1, n_blocks=4)
+    pool.alloc(0, 2)
+    free_before = pool.free_blocks(0)
+    with pytest.raises(PoolExhausted):
+        pool.alloc(0, 2)  # only 1 free
+    assert pool.free_blocks(0) == free_before  # nothing handed out
+    pool.check_invariants()
+
+
+def test_build_table_rolls_back_on_exhaustion():
+    # layer 1 cannot satisfy the request -> layer 0's allocations must be
+    # returned (atomicity), leaving the pool exactly as before
+    pool = BlockPool(n_layers=2, n_blocks=4)
+    lengths = np.full((2, 1, 1), 10)  # needs 3 blocks/layer at bs=4
+    pool.alloc(1, 2)  # leave layer 1 with 1 free
+    free0 = pool.free_blocks(0)
+    with pytest.raises(PoolExhausted):
+        build_table(lengths, pool, block_size=4, max_blocks=3)
+    assert pool.free_blocks(0) == free0
+    pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# slot -> paged construction + decode parity (property test)
+# ---------------------------------------------------------------------------
+
+
+def _random_slot_layer(rng, S, B, C, Dh, L=2):
+    """A SlotCache with random contents and random lengths; some (slot,
+    row) pairs unowned (length 0), some full (length C)."""
+    k = rng.normal(size=(L, S, B, C, Dh)).astype(np.float32)
+    v = rng.normal(size=(L, S, B, C, Dh)).astype(np.float32)
+    lengths = rng.integers(0, C + 1, size=(L, S, B)).astype(np.int32)
+    lengths[:, 0] = 0  # an entirely-unowned slot
+    if S > 1:
+        lengths[:, 1] = C  # a full slot (ring regime)
+    pos = np.broadcast_to(np.arange(C, dtype=np.int32), (L, S, B, C)).copy()
+    pos[lengths[..., None] <= np.arange(C)] = -1
+    return SlotCache(k=jnp.asarray(k), v=jnp.asarray(v),
+                     lengths=jnp.asarray(lengths), pos=jnp.asarray(pos),
+                     positions=jnp.full((B,), C, jnp.int32))
+
+
+def _paginate(slot, bs, extra_tokens=0):
+    """Slot cache -> (PagedCache, pool); blocks sized for lengths (+extra
+    per-entry tokens so appends have a home, mimicking prepare_decode)."""
+    L, S, B, C, Dh = slot.k.shape
+    M = max_blocks_per_row(C, bs)
+    paged, pool = init_paged_cache(L, S, B, C, Dh,
+                                   PagingConfig(block_size=bs),
+                                   dtype=slot.k.dtype)
+    lens = np.asarray(slot.lengths)
+    alloc_for = np.minimum(lens + extra_tokens, C)
+    table = build_table(alloc_for, pool, bs, M, own=lens > 0)
+    paged = paginate_rows(paged, slot, jnp.arange(B, dtype=jnp.int32), table)
+    return paged, pool
+
+
+@settings(max_examples=12)
+@given(S=st.integers(2, 5), B=st.integers(1, 4), G=st.integers(1, 4),
+       C=st.integers(5, 40), bs=st.integers(2, 16), seed=st.integers(0, 10))
+def test_paged_decode_parity_bitwise(S, B, G, C, bs, seed):
+    """Paged decode == slot decode, bit for bit, over random placements,
+    lengths (owned and unowned rows), capacities, and block sizes."""
+    Dh = 8
+    rng = np.random.default_rng(seed)
+    slot = _random_slot_layer(rng, S, B, C, Dh, L=1)
+    paged, _ = _paginate(slot, bs)
+    q = jnp.asarray(rng.normal(size=(B, S, G, Dh)), jnp.float32)
+    qpos = jnp.full((B,), C + 3, jnp.int32)
+    for window in (0, max(2, C // 2)):
+        ref = fairkv_decode_ref(q, slot.k[0], slot.v[0], slot.lengths[0],
+                                k_pos=slot.pos[0], q_pos=qpos, window=window)
+        out = paged_fairkv_decode_ref(
+            q, paged.k_pool[0], paged.v_pool[0], paged.pos_pool[0],
+            paged.block_table[0], paged.lengths[0], C,
+            q_pos=qpos, window=window)
+        assert np.array_equal(np.asarray(ref), np.asarray(out)), (
+            f"parity broke at window={window}")
+
+
+@settings(max_examples=8)
+@given(S=st.integers(2, 4), B=st.integers(1, 3), C=st.integers(6, 24),
+       bs=st.integers(2, 8), steps=st.integers(1, 6), seed=st.integers(0, 10))
+def test_paged_append_parity(S, B, C, bs, steps, seed):
+    """Decode appends (including ring overwrites on full rows) produce the
+    same lengths and the same valid-prefix contents as the slot cache."""
+    Dh = 4
+    ring = max(1, C // 3)
+    rng = np.random.default_rng(100 + seed)
+    slot = _random_slot_layer(rng, S, B, C, Dh, L=1)
+    paged, _ = _paginate(slot, bs, extra_tokens=steps)
+    own = np.asarray(slot.lengths[0]) > 0  # owned pairs only
+    own_j = jnp.asarray(own)
+    for t in range(steps):
+        k_new = jnp.asarray(rng.normal(size=(S, B, Dh)), jnp.float32)
+        v_new = jnp.asarray(rng.normal(size=(S, B, Dh)), jnp.float32)
+        slot = append_token(slot, 0, k_new, v_new, own_j, jnp.int32(t),
+                            ring=ring)
+        paged = paged_append_token(paged, 0, k_new, v_new, own_j,
+                                   jnp.int32(t), C, ring=ring)
+    assert np.array_equal(np.asarray(slot.lengths), np.asarray(paged.lengths))
+    back = paged_to_slot(paged, C)
+    lens = np.asarray(slot.lengths[0])
+    for s in range(S):
+        for b in range(B):
+            n = int(lens[s, b])
+            np.testing.assert_array_equal(
+                np.asarray(slot.k[0, s, b, :n]), np.asarray(back.k[0, s, b, :n]))
+            np.testing.assert_array_equal(
+                np.asarray(slot.v[0, s, b, :n]), np.asarray(back.v[0, s, b, :n]))
+            np.testing.assert_array_equal(
+                np.asarray(slot.pos[0, s, b, :n]),
+                np.asarray(back.pos[0, s, b, :n]))
+
+
+def test_round_trip_slot_paged_slot_exact():
+    """slot → paged → slot preserves every valid entry, lengths, positions;
+    masked (invalid) entries come back zeroed per the §2 contract."""
+    rng = np.random.default_rng(7)
+    S, B, C, Dh, bs = 4, 3, 20, 8, 8
+    slot = _random_slot_layer(rng, S, B, C, Dh, L=2)
+    paged, pool = _paginate(slot, bs)
+    back = paged_to_slot(paged, C)
+    assert np.array_equal(np.asarray(slot.lengths), np.asarray(back.lengths))
+    assert np.array_equal(np.asarray(slot.positions),
+                          np.asarray(back.positions))
+    lens = np.asarray(slot.lengths)
+    valid = np.arange(C)[None, None, None, :] < lens[..., None]
+    np.testing.assert_array_equal(
+        np.where(valid[..., None], np.asarray(slot.k), 0), np.asarray(back.k))
+    # allocation is proportional to realized lengths (+1-block floor)
+    expected = sum(-(-max(int(l), 1) // bs) for l in lens.reshape(-1) if l > 0)
+    assert pool.blocks_in_use() == expected
+    pool.check_invariants()
+
+
+def test_unowned_rows_gather_zero_output():
+    """A fully-unowned (length 0) paged row decodes to exactly zero — the
+    §2 psum-reassembly contract carries over to the paged layout."""
+    rng = np.random.default_rng(3)
+    S, B, C, Dh, bs = 3, 2, 12, 8, 4
+    slot = _random_slot_layer(rng, S, B, C, Dh, L=1)
+    paged, _ = _paginate(slot, bs)
+    q = jnp.asarray(rng.normal(size=(B, S, 2, Dh)), jnp.float32)
+    out = paged_fairkv_decode_ref(
+        q, paged.k_pool[0], paged.v_pool[0], paged.pos_pool[0],
+        paged.block_table[0], paged.lengths[0], C)
+    assert float(np.abs(np.asarray(out)[:, 0]).max()) == 0.0  # slot 0 unowned

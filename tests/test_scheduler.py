@@ -169,6 +169,50 @@ def test_admission_respects_token_budget():
     assert b.admit_step >= a.finish_step  # admitted only after a freed tokens
 
 
+def test_admission_projection_uses_policy_pool_bound():
+    """Audit regression (PR-3): the projected live-token cost must come
+    from the per-policy keep bounds (pool conservation), not the static
+    capacity C — the old ``L·H·min(prompt+gen, C)`` charge blocked
+    admissions the cache could easily hold.  The tighter bound must remain
+    a true upper bound on the realized footprint."""
+    cfg, probe = _setup(max_rows=2, enable_replan=False)
+    prompt, gen = 30, 4
+    a = _req(0, prompt, gen=gen, vocab=cfg.vocab_size)
+    cap = probe.ccfg.static_capacity()
+    old_cost = cfg.n_layers * cfg.n_kv_heads * min(prompt + gen, cap)
+    new_cost = probe._estimated_cost(a)
+    assert new_cost < old_cost, (new_cost, old_cost)
+
+    # validity: the realized footprint of a full solo run never exceeds
+    # the projection (otherwise the tighter bound would overcommit)
+    probe.submit(a)
+    live_max = 0
+    while not a.is_finished:
+        probe.step()
+        live_max = max(live_max, probe.live_tokens())
+    live_a_prefill = None  # prefill-only footprint for the budget below
+    assert live_max <= new_cost, (live_max, new_cost)
+
+    # behavior: a budget the old projection would refuse now admits two
+    # requests concurrently
+    _, m = _setup(max_rows=2, enable_replan=False)
+    a1 = _req(0, prompt, gen=gen, vocab=cfg.vocab_size)
+    m.submit(a1)
+    m.step()
+    live_a_prefill = m.live_tokens()
+    budget = live_a_prefill + new_cost
+    assert budget < live_a_prefill + old_cost  # old rule: b would wait
+    _, sched = _setup(max_rows=2, enable_replan=False,
+                      max_live_tokens=budget)
+    a2 = _req(0, prompt, gen=gen, vocab=cfg.vocab_size)
+    b2 = _req(1, prompt, gen=gen, vocab=cfg.vocab_size)
+    sched.submit(a2)
+    sched.submit(b2)
+    sched.step()
+    assert a2.state is RequestState.DECODING
+    assert b2.state is RequestState.DECODING  # co-admitted under the budget
+
+
 # ---------------------------------------------------------------------------
 # retirement
 # ---------------------------------------------------------------------------
