@@ -1,7 +1,7 @@
 """Benchmark driver: one suite per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV lines (one per measured entity) and
-writes a machine-readable summary (``BENCH_pr3.json`` by default): per-suite
+writes a machine-readable summary (``BENCH_pr4.json`` by default): per-suite
 wall time, ok flag, whatever metrics dict the suite's ``main()`` returned,
 plus the git sha — so the perf trajectory of this repo is diffable across
 PRs instead of living in scrollback.
@@ -48,6 +48,7 @@ SUITES = {
     "fig5": "benchmarks.fig5_dp_size",
     "fig6": "benchmarks.fig6_continuous_throughput",
     "fig7": "benchmarks.fig7_paged_memory",
+    "fig8": "benchmarks.fig8_fair_copying_tp",
     "table3": "benchmarks.table3_quality_proxy",
 }
 
@@ -87,7 +88,7 @@ def main(argv=None) -> None:
                     help="comma-separated suites to run (default: all)")
     ap.add_argument("--skip", default="",
                     help="comma-separated suites to exclude")
-    ap.add_argument("--out", default="BENCH_pr3.json",
+    ap.add_argument("--out", default="BENCH_pr4.json",
                     help="machine-readable results path ('' disables)")
     args = ap.parse_args(argv)
 

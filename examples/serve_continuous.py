@@ -10,8 +10,12 @@ and decoding continues without interruption.  `Engine.stream` yields one
 `StreamEvent` per generated token, so the example also shows request-level
 token streaming.
 
+``--executor mesh`` runs the same trace with the StepFns under
+``shard_map`` on a (data, model) host mesh (DESIGN.md §10) — fake the
+devices first with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
 Run:  PYTHONPATH=src JAX_PLATFORMS=cpu python examples/serve_continuous.py \
-          [--cache-backend paged]
+          [--cache-backend paged] [--executor mesh [--data 2]]
 """
 import argparse
 
@@ -24,6 +28,7 @@ from repro.api import (
     SchedulerConfig,
     latency_percentiles,
     list_cache_backends,
+    list_executors,
     synthesize_requests,
 )
 
@@ -38,7 +43,16 @@ def main(argv=None):
     ap.add_argument("--cache-backend", default="slot",
                     help=f"cache backend; registered: {list_cache_backends()}")
     ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--executor", default="local",
+                    help=f"execution strategy; registered: {list_executors()}")
+    ap.add_argument("--data", type=int, default=1,
+                    help="mesh executor: data-axis width")
     args = ap.parse_args(argv)
+
+    mesh = None
+    if args.executor == "mesh":
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(model=SHARDS, data=args.data)
 
     cfg = EngineConfig.smoke(
         ARCH, n_shards=SHARDS, max_seq_len=64,
@@ -52,8 +66,9 @@ def main(argv=None):
         scheduler=SchedulerConfig(max_rows=ROWS, replan_window=4,
                                   replan_threshold=1.05, replan_cooldown=10),
         cache_backend=args.cache_backend,
-        paging=PagingConfig(block_size=args.block_size))
-    eng = Engine.build(cfg)
+        paging=PagingConfig(block_size=args.block_size),
+        executor=args.executor)
+    eng = Engine.build(cfg, mesh=mesh)
 
     reqs = synthesize_requests(8, rate=0.4, vocab_size=cfg.model.vocab_size,
                                min_prompt=12, max_prompt=28,

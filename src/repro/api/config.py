@@ -24,12 +24,14 @@ import jax.numpy as jnp
 from repro.api.registry import (
     list_cache_backends,
     list_engines,
+    list_executors,
     list_policies,
 )
 from repro.compression.base import CompressionConfig
 from repro.configs import get_config, get_smoke_config
 from repro.configs.base import ModelConfig
 from repro.core.planner import PLANNER_MODES, PlannerConfig
+from repro.exec.base import ExecutorConfig
 from repro.paging.block_pool import PagingConfig
 from repro.serving.scheduler import SchedulerConfig
 
@@ -63,6 +65,11 @@ class EngineConfig:
     # third parties extend via @repro.api.register_cache_backend
     cache_backend: str = "slot"
     paging: PagingConfig = field(default_factory=PagingConfig)
+    # device-execution strategy (DESIGN.md §10): "local" (single-device jit)
+    # or "mesh" (shard_map over a (data, model) mesh, passed to Engine.build
+    # via mesh=); third parties extend via @repro.api.register_executor
+    executor: str = "local"
+    executor_cfg: ExecutorConfig = field(default_factory=ExecutorConfig)
 
     def __post_init__(self):
         if not isinstance(self.model, ModelConfig):
@@ -108,6 +115,15 @@ class EngineConfig:
             raise TypeError(
                 f"paging must be a PagingConfig, got "
                 f"{type(self.paging).__name__}")
+        if self.executor not in list_executors():
+            raise ValueError(
+                f"unknown executor {self.executor!r}; registered: "
+                f"{list_executors()}; add executors with "
+                f"@repro.api.register_executor")
+        if not isinstance(self.executor_cfg, ExecutorConfig):
+            raise TypeError(
+                f"executor_cfg must be an ExecutorConfig, got "
+                f"{type(self.executor_cfg).__name__}")
 
     # ---- constructors ------------------------------------------------------
 

@@ -42,6 +42,7 @@ from repro.cache.slot_cache import PlanArrays
 from repro.core.placement import HeadPlacement
 from repro.core.planner import PlannerConfig, build_plan
 from repro.core.profiles import profile_from_lengths, synthetic_profile
+from repro.exec.base import make_executor
 from repro.models import init_params
 from repro.serving import engine as _serve
 from repro.serving.cache_backend import make_cache_backend
@@ -99,18 +100,33 @@ class Engine:
                  profile: Optional[np.ndarray],
                  head_importance: Optional[np.ndarray] = None,
                  mesh=None):
+        if mesh is not None and cfg.executor == "local":
+            raise ValueError(
+                "mesh= was passed but executor='local' runs on a single "
+                "device and would silently ignore it; set "
+                "EngineConfig(executor='mesh') to run on the mesh")
         self.cfg = cfg
         self.params = params  # original layout — kept for re-slotify
         self.plan = plan
         self.profile = profile  # (L, H) planning profile (None: attn-free)
         self.head_importance = head_importance  # headkv per-head weights
-        self.mesh = mesh  # reserved for the sharded launch path (launch/)
+        self.mesh = mesh
         self.pa = PlanArrays.from_plan(plan)
         self.sp = _serve.slotify_params(params, plan, cfg.model)
+        # executor (DESIGN.md §10): owns the compiled prefill/decode StepFns;
+        # weights and plan arrays are StepFn *arguments*, so replans swap
+        # placements without recompiling
+        self.executor = make_executor(cfg.executor, cfg.model,
+                                      cfg.compression,
+                                      exec_cfg=cfg.executor_cfg, mesh=mesh)
         # cache storage backend (DESIGN.md §9): "slot" | "paged" | plugin
         self.backend = make_cache_backend(
             cfg.cache_backend, cfg.model, cfg.compression,
-            max_live_tokens=cfg.scheduler.max_live_tokens, paging=cfg.paging)
+            max_live_tokens=cfg.scheduler.max_live_tokens, paging=cfg.paging,
+            n_shards=cfg.n_shards,
+            max_live_tokens_per_shard=cfg.scheduler.max_live_tokens_per_shard,
+            pool_partitions=self.executor.pool_partitions,
+            row_partitions=self.executor.row_partitions)
         self.state: Optional[_serve.ServeState] = None
         self._mode: Optional[str] = None  # "oneshot" | "continuous" (last used)
         # persisted straggler speed factors (set by a speed-aware replan);
@@ -118,7 +134,6 @@ class Engine:
         # mitigation is never silently reverted
         self._shard_speeds: Optional[np.ndarray] = None
         self._scheduler: Optional[Scheduler] = None
-        self._decode = None  # jitted decode fn, built lazily
         self._next_req_id = 0
 
     # ---- construction ------------------------------------------------------
@@ -134,8 +149,9 @@ class Engine:
         optimizes; default is a synthetic profile seeded from
         ``cfg.profile_seed`` / ``cfg.profile_skew`` (swap in a measured one
         from `measure_profile` for paper-faithful planning).  ``mesh`` is
-        accepted for the multi-host launch path and stored on the engine;
-        single-process callers omit it.
+        the (data, model) device mesh the ``mesh`` executor runs on
+        (DESIGN.md §10) — required there, rejected with ``executor='local'``
+        (a silently ignored mesh is a misconfiguration, not a fallback).
         """
         model = cfg.model
         dtype = _DTYPES[cfg.dtype]
@@ -171,22 +187,12 @@ class Engine:
     def dtype(self):
         return _DTYPES[self.cfg.dtype]
 
-    def _decode_fn(self):
-        """Jitted decode step (tokens always explicit so one trace serves
-        both free-running and teacher-forced generation)."""
-        if self._decode is None:
-            sp, model = self.sp, self.cfg.model
-            pa, ccfg = self.pa, self.cfg.compression
-            self._decode = jax.jit(
-                lambda st, tok: _serve.decode_step(sp, st, model, pa, ccfg,
-                                                   tokens=tok))
-        return self._decode
-
     def _invalidate(self) -> None:
-        """Plan changed: rebuild slot weights + retrace decode."""
+        """Plan changed: rebuild slot weights + plan arrays.  The executor's
+        StepFn takes both as arguments, so nothing recompiles (the shapes
+        are replan-invariant — slot grid and capacity are fixed)."""
         self.pa = PlanArrays.from_plan(self.plan)
         self.sp = _serve.slotify_params(self.params, self.plan, self.cfg.model)
-        self._decode = None
 
     # ---- one-shot serving --------------------------------------------------
 
@@ -196,9 +202,9 @@ class Engine:
         cache on ``self.state``.  Returns (logits (B, V), lengths
         (L, Hkv, B))."""
         batch = self._as_batch(batch)
-        state, logits, lengths = _serve.prefill(
-            self.sp, batch, self.cfg.model, self.pa, self.cfg.compression,
-            head_importance=self.head_importance, rows=rows)
+        state, logits, lengths = self.executor.prefill(
+            self.sp, batch, self.pa, rows=rows,
+            head_importance=self.head_importance)
         self.state = state
         self._mode = "oneshot"
         return logits, lengths
@@ -235,7 +241,6 @@ class Engine:
         state = self.state
         tokens = [np.asarray(state.last_tokens)]
         logits_all = [np.asarray(logits)] if collect_logits else None
-        step = self._decode_fn()
         step_s: List[float] = []
         for t in range(max_new_tokens):
             tok = (state.last_tokens if teacher_tokens is None
@@ -248,13 +253,17 @@ class Engine:
                     f"generation cannot preempt — raise "
                     f"PagingConfig.n_blocks") from e
             t0 = time.perf_counter()
-            state, lg = step(state, tok)
+            state, lg = self.executor.decode(self.sp, state, self.pa, tok)
+            # rebind immediately: decode donated the previous state's
+            # buffers, so self.state must never outlive a step — a failure
+            # on a later iteration would otherwise leave the engine holding
+            # deleted arrays
+            self.state = state
             jax.block_until_ready(lg)
             step_s.append(time.perf_counter() - t0)
             tokens.append(np.asarray(state.last_tokens))
             if collect_logits:
                 logits_all.append(np.asarray(lg))
-        self.state = state
         lengths_np = np.asarray(lengths)
         realized = eff = mk = None
         if lengths_np.size:
@@ -358,7 +367,17 @@ class Engine:
                     self.cfg.cache_backend, self.cfg.model,
                     self.cfg.compression,
                     max_live_tokens=self.cfg.scheduler.max_live_tokens,
-                    paging=self.cfg.paging))
+                    paging=self.cfg.paging,
+                    n_shards=self.cfg.n_shards,
+                    max_live_tokens_per_shard=(
+                        self.cfg.scheduler.max_live_tokens_per_shard),
+                    pool_partitions=self.executor.pool_partitions,
+                    row_partitions=self.executor.row_partitions),
+                # the executor is shared: its StepFn caches are keyed by
+                # batch shape and cache layout, so one-shot and continuous
+                # traces coexist without evicting each other
+                executor=self.executor,
+                head_importance=self.head_importance)
             # inherit any one-shot straggler mitigation
             self._scheduler.shard_speeds = self._shard_speeds
         return self._scheduler
@@ -369,13 +388,26 @@ class Engine:
         sched = self._scheduler
         if sched is not None and sched.plan is not self.plan:
             self.plan, self.pa, self.sp = sched.plan, sched.pa, sched.sp
-            self._decode = None
 
     def warmup(self) -> None:
         """Compile the continuous decode step outside any timed region (an
-        all-inactive step has the same trace signature as live ones)."""
+        all-inactive step has the same trace signature as live ones).
+
+        The decode StepFn donates its state argument, so the warmup result
+        must be adopted — holding the old state would keep deleted buffers.
+        An all-inactive tick leaves cache contents/lengths/positions
+        untouched; only ``decode_steps`` (the ring-write phase) is restored
+        so a warmed scheduler stays step-for-step identical to a cold one.
+        With requests already live the tick would be a *real* decode
+        (appends included), so warmup is a no-op then — the step is
+        compiled by that point anyway.
+        """
         sched = self._ensure_scheduler()
-        sched._decode(sched.state, sched.active_mask())
+        if sched.active:
+            return
+        steps0 = sched.state.decode_steps + 0  # fresh buffer: survives donation
+        state, _ = sched._decode(sched.state, sched.active_mask())
+        sched.state = dataclasses.replace(state, decode_steps=steps0)
 
     def submit(self, request: Union[Request, np.ndarray, Sequence[int]],
                max_new_tokens: int = 16, eos_id: Optional[int] = None,

@@ -24,6 +24,12 @@ Decorator-based registries replace what used to be hardcoded tables:
   (dense static-capacity layout) and ``"paged"`` (block-pool allocation,
   DESIGN.md §9).
 
+- **executors** — ``@register_executor("name")`` adds a device-execution
+  strategy (a ``repro.exec.Executor`` subclass owning the compiled
+  prefill/decode StepFns, DESIGN.md §10) selectable via
+  ``EngineConfig.executor``; built-ins ``"local"`` (single-device jit)
+  and ``"mesh"`` (``shard_map`` over a ``(data, model)`` mesh).
+
 This module is a dependency *leaf*: it imports nothing from ``repro`` at
 module scope, so the registered-to modules (``compression.policies``,
 ``core.assignment``) can import it without cycling through the heavyweight
@@ -108,10 +114,12 @@ class Registry(Mapping):
 POLICY_REGISTRY = Registry("compression policy")
 ASSIGNMENT_ENGINE_REGISTRY = Registry("assignment engine")
 CACHE_BACKEND_REGISTRY = Registry("cache backend")
+EXECUTOR_REGISTRY = Registry("executor")
 
 register_policy = POLICY_REGISTRY.register
 register_assignment_engine = ASSIGNMENT_ENGINE_REGISTRY.register
 register_cache_backend = CACHE_BACKEND_REGISTRY.register
+register_executor = EXECUTOR_REGISTRY.register
 
 
 def _ensure_builtin() -> None:
@@ -123,6 +131,8 @@ def _ensure_builtin() -> None:
     """
     import repro.compression.policies  # noqa: F401
     import repro.core.assignment  # noqa: F401
+    import repro.exec.local  # noqa: F401
+    import repro.exec.mesh  # noqa: F401
     import repro.paging.backend  # noqa: F401
     import repro.serving.cache_backend  # noqa: F401
 
@@ -158,3 +168,14 @@ def list_cache_backends() -> List[str]:
     """Registered cache-backend names (built-ins + plugins)."""
     _ensure_builtin()
     return CACHE_BACKEND_REGISTRY.names()
+
+
+def get_executor(name: str) -> Callable:
+    _ensure_builtin()
+    return EXECUTOR_REGISTRY[name]
+
+
+def list_executors() -> List[str]:
+    """Registered executor names (built-ins + plugins)."""
+    _ensure_builtin()
+    return EXECUTOR_REGISTRY.names()

@@ -5,6 +5,13 @@ Layout (see DESIGN.md §2):  per layer, every model shard owns
 
     k, v     : (L, S, B, C, Dh)   S = total slots (sharded over "model"),
                                    C = static capacity per slot-row
+
+Under the ``mesh`` executor (DESIGN.md §10) this sharding is physical:
+S splits over the model mesh axis and B over the data axis inside the
+decode StepFn's ``shard_map``; every op below is written batch- and
+slot-local, so it runs unchanged on one device or per-shard slices
+(``migrate_cache``'s head-layout round-trip runs on global arrays between
+steps, where XLA repartitions freely).
     lengths  : (L, S, B) int32     retained tokens per (slot, row); 0 for
                                    unowned rows and empty slots
     positions: (B,) int32          next absolute position per row (for RoPE)

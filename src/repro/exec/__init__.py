@@ -1,0 +1,8 @@
+"""`repro.exec` — device-execution strategies (DESIGN.md §10).
+
+`Executor` owns the compiled prefill/decode StepFns; built-ins ``local``
+(single-device jit) and ``mesh`` (``shard_map`` over a (data, model) mesh)
+register via ``@repro.api.register_executor`` and are selected through
+``EngineConfig.executor``.
+"""
+from repro.exec.base import Executor, ExecutorConfig, make_executor  # noqa: F401

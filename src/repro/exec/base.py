@@ -1,0 +1,157 @@
+"""`Executor`: the device-execution strategy behind the serving stack.
+
+An executor owns the *compiled step functions* (StepFns) of the serving hot
+path — one prefill step and one decode step — and nothing else: what to
+compute (prefill/compression/decode math) lives in ``repro.serving.engine``;
+where and how it runs (which devices, which sharding, which donation) lives
+here (DESIGN.md §10).  Two built-ins register with
+``@repro.api.register_executor``:
+
+- ``"local"`` — single-device ``jax.jit`` (the PR-1..3 baseline path).
+- ``"mesh"``  — ``shard_map`` over a ``(data, model)`` mesh: slot-dim
+  weights and both cache backends shard over ``model``, batch rows over
+  ``data``; the o-projection contraction over slots is the step's one
+  collective (a psum that reassembles the full batch).
+
+StepFn contract (the no-retrace rule): the jitted callables close over the
+*static* configuration only (`ModelConfig`, `CompressionConfig`, mesh/axis
+names).  Everything a replan changes — slot-layout weights and plan arrays —
+is a **traced argument**, so swapping placements re-executes the same
+executable; as long as the slot grid and capacity are shape-stable the
+decode StepFn compiles exactly once per (batch shape, cache backend).
+``tokens``/``active``/``rows`` are always materialized arrays (never None
+inside the trace) so one decode trace serves one-shot generation, teacher
+forcing, and continuous batching alike.  The decode ``state`` argument is
+donated by default (``ExecutorConfig.donate_state``) so the cache updates
+in place across the hot loop.
+
+``decode_traces`` / ``prefill_traces`` count actual (re)traces — the
+regression observable for "replans must not recompile".
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.registry import get_executor
+from repro.compression.base import CompressionConfig
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class ExecutorConfig:
+    """Execution-level knobs (validated by `EngineConfig`).
+
+    ``donate_state``: donate the decode StepFn's state argument (the cache
+    buffers are rewritten in place; keep True unless debugging aliasing).
+    ``data_axis`` / ``model_axis``: mesh axis names the ``mesh`` executor
+    binds batch rows / the slot dim to.
+    """
+
+    donate_state: bool = True
+    data_axis: str = "data"
+    model_axis: str = "model"
+
+    def __post_init__(self):
+        if not self.data_axis or not self.model_axis:
+            raise ValueError("data_axis and model_axis must be non-empty")
+        if self.data_axis == self.model_axis:
+            raise ValueError(
+                f"data_axis and model_axis must differ, both are "
+                f"{self.data_axis!r}")
+
+
+class Executor:
+    """Interface; see the module docstring for the StepFn contract."""
+
+    name: str = "?"
+
+    def __init__(self, model_cfg: ModelConfig, ccfg: CompressionConfig,
+                 exec_cfg: Optional[ExecutorConfig] = None, mesh=None):
+        self.cfg = model_cfg
+        self.ccfg = ccfg
+        self.exec_cfg = exec_cfg or ExecutorConfig()
+        self.mesh = mesh
+        # actual (re)trace counts, incremented from inside the traced fns —
+        # the no-retrace regression observable (a replan must not bump them)
+        self.prefill_traces = 0
+        self.decode_traces = 0
+
+    # ---- geometry ----------------------------------------------------------
+
+    @property
+    def pool_partitions(self) -> int:
+        """Model-axis partitions the paged block pool must be split into
+        (1 = single flat pool; the mesh executor returns its model size)."""
+        return 1
+
+    @property
+    def row_partitions(self) -> int:
+        """Data-axis partitions of the paged pool / batch rows (1 = no
+        batch sharding; the mesh executor returns its data size)."""
+        return 1
+
+    def shard_state(self, state):
+        """Lay a freshly initialized ServeState out for this executor.
+
+        The continuous scheduler's empty state is created by the cache
+        backend with no layout information; the mesh executor places it
+        under its decode in_specs here so the cache is sharded before the
+        first step instead of living replicated on one device until the
+        first call reshards it.  Identity on single-device executors."""
+        return state
+
+    # ---- StepFns -----------------------------------------------------------
+
+    def prefill(self, sp: dict, batch: dict, pa,
+                rows: Optional[jnp.ndarray] = None,
+                head_importance: Optional[np.ndarray] = None) -> Tuple:
+        """Compiled prefill step → (ServeState, logits (B, V),
+        lengths (L, Hkv, B)).  ``rows`` are the global batch-row ids the
+        strided owner rule is evaluated at (default arange(B))."""
+        raise NotImplementedError
+
+    def decode(self, sp: dict, state, pa, tokens: jnp.ndarray,
+               active: Optional[jnp.ndarray] = None,
+               rows: Optional[jnp.ndarray] = None) -> Tuple:
+        """Compiled decode step → (ServeState, logits (B, V)).
+
+        ``active``/``rows`` default to all-active / arange(B); they are
+        materialized before the call so every mode shares one trace."""
+        raise NotImplementedError
+
+    # ---- shared normalization ---------------------------------------------
+
+    def _norm_decode_args(self, tokens, active, rows):
+        if isinstance(tokens, jax.ShapeDtypeStruct):
+            # abstract lowering (dry-run audit): no values to materialize
+            B = tokens.shape[0]
+            return (tokens, jax.ShapeDtypeStruct((B,), jnp.bool_),
+                    jax.ShapeDtypeStruct((B,), jnp.int32))
+        tokens = jnp.asarray(tokens, jnp.int32)
+        B = tokens.shape[0]
+        if active is None:
+            active = jnp.ones((B,), jnp.bool_)
+        if rows is None:
+            rows = jnp.arange(B, dtype=jnp.int32)
+        return tokens, jnp.asarray(active), jnp.asarray(rows, jnp.int32)
+
+    # ---- audit -------------------------------------------------------------
+
+    def decode_hlo(self, sp: dict, state, pa, tokens: jnp.ndarray) -> str:
+        """Compiled (post-SPMD) HLO of the decode StepFn for the given
+        arguments — feed to ``repro.distributed.hlo_stats`` for the
+        collective audit.  Lowering traces, so call it outside any
+        trace-count assertion window."""
+        raise NotImplementedError
+
+
+def make_executor(name: str, model_cfg: ModelConfig, ccfg: CompressionConfig,
+                  exec_cfg: Optional[ExecutorConfig] = None,
+                  mesh=None) -> Executor:
+    """Instantiate a registered executor by name."""
+    return get_executor(name)(model_cfg, ccfg, exec_cfg=exec_cfg, mesh=mesh)

@@ -1,0 +1,81 @@
+"""`LocalExecutor`: single-device jit StepFns (the default path).
+
+Owns exactly the two jitted callables the serving stack used to scatter
+across `api.engine.Engine._decode_fn` and `serving.scheduler._make_decode`.
+Weights (``sp``) and plan arrays (``pa``) are traced *arguments*, so a
+replan swaps placements by passing different values through the same
+executable — no retrace (DESIGN.md §10).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.registry import register_executor
+from repro.exec.base import Executor
+from repro.serving import engine as _serve
+
+
+@register_executor("local")
+class LocalExecutor(Executor):
+    name = "local"
+
+    def __init__(self, model_cfg, ccfg, exec_cfg=None, mesh=None):
+        if mesh is not None:
+            raise ValueError(
+                "the 'local' executor runs on a single device and ignores "
+                "meshes; pass executor='mesh' to run on one, or drop mesh=")
+        super().__init__(model_cfg, ccfg, exec_cfg=exec_cfg, mesh=None)
+        self._prefill_jit = None
+        self._decode_jit = None
+
+    # ---- StepFn construction ----------------------------------------------
+
+    def _build_prefill(self):
+        cfg, ccfg = self.cfg, self.ccfg
+
+        def fn(sp, batch, pa, rows, head_importance):
+            self.prefill_traces += 1  # runs at trace time only
+            return _serve.prefill(sp, batch, cfg, pa, ccfg,
+                                  head_importance=head_importance, rows=rows)
+
+        return jax.jit(fn)
+
+    def _build_decode(self):
+        cfg, ccfg = self.cfg, self.ccfg
+
+        def fn(sp, state, pa, tokens, active, rows):
+            self.decode_traces += 1  # runs at trace time only
+            return _serve.decode_step(sp, state, cfg, pa, ccfg,
+                                      tokens=tokens, active=active, rows=rows)
+
+        donate = (1,) if self.exec_cfg.donate_state else ()
+        return jax.jit(fn, donate_argnums=donate)
+
+    # ---- entry points ------------------------------------------------------
+
+    def prefill(self, sp, batch, pa, rows=None, head_importance=None):
+        if self._prefill_jit is None:
+            self._prefill_jit = self._build_prefill()
+        B = batch["tokens"].shape[0]
+        if rows is None:
+            rows = jnp.arange(B, dtype=jnp.int32)
+        hi = None if head_importance is None else jnp.asarray(head_importance)
+        return self._prefill_jit(sp, batch, pa,
+                                 jnp.asarray(rows, jnp.int32), hi)
+
+    def decode(self, sp, state, pa, tokens, active=None, rows=None):
+        if self._decode_jit is None:
+            self._decode_jit = self._build_decode()
+        tokens, active, rows = self._norm_decode_args(tokens, active, rows)
+        return self._decode_jit(sp, state, pa, tokens, active, rows)
+
+    def decode_hlo(self, sp, state, pa, tokens):
+        if self._decode_jit is None:
+            self._decode_jit = self._build_decode()
+        tokens, active, rows = self._norm_decode_args(tokens, None, None)
+        lowered = self._decode_jit.lower(sp, state, pa, tokens, active, rows)
+        return lowered.compile().as_text()

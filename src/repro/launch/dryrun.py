@@ -119,6 +119,68 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     return rec
 
 
+def run_executor_audit(arch: str, out_dir: str,
+                       planner_mode: str = "fairkv_dp") -> dict:
+    """Lower the `mesh` executor's decode StepFn (DESIGN.md §10) on the
+    production (data=16, model=16) mesh from abstract args and record its
+    per-device collective schedule.
+
+    This audits the *serving* execution path the Engine actually runs —
+    unlike the shape cells above, which lower the raw step functions under
+    GSPMD.  The §10 contract is visible in the numbers: exactly one psum
+    (all-reduce) per attention layer from the o-projection, and no
+    weight all-gathers in the decode hot loop.
+    """
+    import jax.numpy as jnp
+    from repro.cache.slot_cache import SlotCache
+    from repro.compression.base import CompressionConfig
+    from repro.exec.mesh import MeshExecutor
+    from repro.launch.specs import cell_plan, serve_params_sds
+    from repro.api import PlanArrays, ServeState
+
+    cfg = get_config(arch)
+    shape = SHAPES["decode_32k"]
+    mesh = make_production_mesh()  # (data=16, model=16)
+    n_model = mesh.shape["model"]
+    ccfg = CompressionConfig(policy="ada_snapkv", budget=1024,
+                             alpha_max=1.5, decode_margin=64)
+    plan = cell_plan(cfg, n_model, planner_mode,
+                     batch_cap=shape.global_batch)
+    pa = PlanArrays.from_plan(plan)
+    sp_sds = serve_params_sds(cfg, shape, plan, jnp.bfloat16, quantize=False)
+    B, L, S = shape.global_batch, cfg.n_layers, plan.n_slots
+    cap, Dh = ccfg.static_capacity(), cfg.head_dim
+    sds = jax.ShapeDtypeStruct
+    state_sds = ServeState(
+        cache=SlotCache(
+            k=sds((L, S, B, cap, Dh), jnp.bfloat16),
+            v=sds((L, S, B, cap, Dh), jnp.bfloat16),
+            lengths=sds((L, S, B), jnp.int32),
+            pos=sds((L, S, B, cap), jnp.int32),
+            positions=sds((B,), jnp.int32)),
+        ssm_state=None, conv_state=None, cross_k=None, cross_v=None,
+        last_tokens=sds((B,), jnp.int32), decode_steps=sds((), jnp.int32))
+    executor = MeshExecutor(cfg, ccfg, mesh=mesh)
+    t0 = time.time()
+    hlo = executor.decode_hlo(sp_sds, state_sds, pa,
+                              sds((B,), jnp.int32))
+    colls = collective_stats(hlo)
+    rec = {"arch": arch, "kind": "executor_decode", "planner": planner_mode,
+           "mesh": "single", "shape": "decode_32k", "status": "ok",
+           "compile_s": round(time.time() - t0, 2),
+           "collectives": colls,
+           "while_bodies": while_body_stats(hlo)}
+    total = sum(c["bytes"] for c in colls.values())
+    print("  executor decode StepFn collectives: " + ", ".join(
+        f"{k}×{v['count']} ({v['bytes'] / 1e6:.2f} MB)"
+        for k, v in sorted(colls.items())) + f" | total {total / 1e6:.2f} MB/dev")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir,
+                           f"{arch}__executor_decode.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None, help="default: all")
@@ -126,8 +188,18 @@ def main() -> None:
     ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
     ap.add_argument("--planner", default="fairkv_dp",
                     choices=["sha", "fairkv_nodp", "fairkv_dp"])
+    ap.add_argument("--executor-audit", action="store_true",
+                    help="audit the mesh executor's decode StepFn "
+                         "collectives instead of the shape-cell sweep "
+                         "(requires --arch; dense attention archs)")
     ap.add_argument("--out", default=OUT_DIR)
     args = ap.parse_args()
+
+    if args.executor_audit:
+        if not args.arch:
+            raise SystemExit("--executor-audit requires --arch")
+        run_executor_audit(args.arch, args.out, args.planner)
+        return
 
     archs = [args.arch] if args.arch else ALL_ARCHS
     # cheap compiles first so partial sweeps still cover every arch

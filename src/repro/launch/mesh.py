@@ -27,8 +27,19 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 
 
 def make_host_mesh(model: int = 1, data: int = 1) -> Mesh:
-    """Small mesh over however many (host) devices exist — tests/examples."""
+    """Small (data, model) mesh over however many (host) devices exist —
+    tests/examples/the ``mesh`` executor on a dev box.
+
+    Oversubscription is a real error, not an assert (asserts vanish under
+    ``python -O``): requesting more mesh slots than devices exist would
+    otherwise surface as an opaque failure deep inside ``make_mesh``.
+    """
     n = len(jax.devices())
-    assert model * data <= n, (model, data, n)
+    if model * data > n:
+        raise ValueError(
+            f"requested mesh (data={data}, model={model}) = {model * data} "
+            f"devices, but only {n} available; set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N before "
+            f"the first jax import to fake host devices")
     return jax.make_mesh((data, model), ("data", "model"),
                          **_axis_type_kwargs(2))

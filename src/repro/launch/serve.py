@@ -12,8 +12,15 @@ admission → interleaved decode → retirement, with online replanning when the
 realized per-shard KV imbalance drifts.  Prints per-request latency,
 p50/p99, and the replan log.
 
-Policy and planner names are validated by `EngineConfig` against the live
-registries — ``--help`` lists whatever is registered, including plugins.
+``--executor mesh`` runs both modes' StepFns under ``shard_map`` on a
+(data=``--data``, model=``--shards``) host mesh (DESIGN.md §10) and prints
+the decode StepFn's per-device collective audit (parsed from the compiled
+HLO via ``repro.distributed.hlo_stats``) — on CPU, fake the devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+
+Policy, planner, backend and executor names are validated by `EngineConfig`
+against the live registries — ``--help`` lists whatever is registered,
+including plugins.
 """
 from __future__ import annotations
 
@@ -32,6 +39,7 @@ from repro.api import (
     latency_percentiles,
     list_cache_backends,
     list_engines,
+    list_executors,
     list_policies,
     synthesize_requests,
 )
@@ -57,7 +65,39 @@ def _engine_config(args, max_seq_len: int, batch_cap: int,
         scheduler=scheduler,
         cache_backend=args.cache_backend,
         paging=PagingConfig(block_size=args.block_size,
-                            n_blocks=args.pool_blocks))
+                            n_blocks=args.pool_blocks),
+        executor=args.executor)
+
+
+def _build_engine(args, ecfg: EngineConfig) -> Engine:
+    """Engine on the configured executor (mesh: a (data, model) host mesh)."""
+    mesh = None
+    if ecfg.executor == "mesh":
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(model=args.shards, data=args.data)
+    return Engine.build(ecfg, mesh=mesh)
+
+
+def _collective_audit(eng: Engine) -> None:
+    """Print the decode StepFn's per-device collective traffic (mesh only).
+
+    The audit is the §10 contract check made visible: the decode hot loop
+    should psum exactly once per attention layer (the o-projection) and
+    all-gather nothing — weight gathers belong to prefill.
+    """
+    if eng.cfg.executor != "mesh":
+        return
+    from repro.distributed.hlo_stats import collective_stats
+    sched = eng.scheduler
+    sp, pa = (sched.sp, sched.pa) if sched is not None else (eng.sp, eng.pa)
+    state = sched.state if sched is not None else eng.state
+    hlo = eng.executor.decode_hlo(sp, state, pa, state.last_tokens)
+    stats = collective_stats(hlo)
+    total = sum(v["bytes"] for v in stats.values())
+    detail = ", ".join(f"{k}×{v['count']} ({v['bytes'] / 1e3:.1f} kB)"
+                       for k, v in sorted(stats.items())) or "none"
+    print(f"decode StepFn collectives/device: {detail} | "
+          f"total {total / 1e3:.1f} kB")
 
 
 def run_continuous(args) -> None:
@@ -72,7 +112,7 @@ def run_continuous(args) -> None:
         enable_replan=not args.no_replan,
     )
     ecfg = _engine_config(args, max_prompt + args.gen + 8, args.rows, scfg)
-    eng = Engine.build(ecfg)
+    eng = _build_engine(args, ecfg)
     reqs = synthesize_requests(args.requests, args.rate,
                                ecfg.model.vocab_size,
                                min_prompt=args.min_prompt,
@@ -102,6 +142,7 @@ def run_continuous(args) -> None:
         tag = "accepted" if ev["accepted"] else "rejected"
         print(f"  replan @ step {ev['step']} ({tag}): imbalance "
               f"{ev['imbalance_before']:.3f} -> {ev['imbalance_after']:.3f}")
+    _collective_audit(eng)
     if out["finished"] != out["total"]:
         raise RuntimeError(
             f"only {out['finished']}/{out['total']} requests finished")
@@ -113,7 +154,7 @@ def run_continuous(args) -> None:
 def run_oneshot(args) -> None:
     """Fixed-batch serve: one prefill + ``--gen`` decode steps."""
     ecfg = _engine_config(args, args.prompt_len + args.gen + 8, args.batch)
-    eng = Engine.build(ecfg)
+    eng = _build_engine(args, ecfg)
     data = SyntheticLM(ecfg.model, InputShape("cli", args.prompt_len,
                                               args.batch, "prefill"))
     res = eng.generate(data.get_batch(0), args.gen, collect_logits=False)
@@ -130,6 +171,7 @@ def run_oneshot(args) -> None:
         print(f"paged cache: {mem['cache_bytes']} B in "
               f"{mem['blocks_in_use']} blocks vs slot-equivalent "
               f"{mem['slot_equivalent_bytes']} B")
+    _collective_audit(eng)
     for b in range(min(args.batch, 2)):
         print(f"row {b}: {res.tokens[b].tolist()}")
 
@@ -161,6 +203,17 @@ def main() -> None:
     ap.add_argument("--pool-blocks", type=int, default=0,
                     help="paged backend: blocks per layer pool "
                          "(0 = slot-equivalent worst case)")
+    # --- executor (DESIGN.md §10) --------------------------------------------
+    ap.add_argument("--executor", default="local",
+                    help=f"device execution strategy; registered: "
+                         f"{list_executors()}.  'mesh' runs the StepFns "
+                         f"under shard_map on a (data, model) host mesh "
+                         f"(set XLA_FLAGS=--xla_force_host_platform_"
+                         f"device_count=N to fake devices on CPU) and "
+                         f"prints the decode collective audit")
+    ap.add_argument("--data", type=int, default=1,
+                    help="mesh executor: data-axis width (batch rows shard "
+                         "over it; model axis width is --shards)")
     # --- continuous batching -------------------------------------------------
     ap.add_argument("--continuous", action="store_true",
                     help="run the continuous-batching scheduler on a "

@@ -59,26 +59,39 @@ def _owner_mask_np(pa: PlanArrays, rows: np.ndarray) -> np.ndarray:
 class PagedBackend(CacheBackend):
     name = "paged"
 
-    def __init__(self, model_cfg, ccfg, max_live_tokens=None, paging=None):
+    def __init__(self, model_cfg, ccfg, max_live_tokens=None, paging=None,
+                 n_shards=1, max_live_tokens_per_shard=None,
+                 pool_partitions=1, row_partitions=1):
         super().__init__(model_cfg, ccfg, max_live_tokens=max_live_tokens,
-                         paging=paging)
+                         paging=paging, n_shards=n_shards,
+                         max_live_tokens_per_shard=max_live_tokens_per_shard,
+                         pool_partitions=pool_partitions,
+                         row_partitions=row_partitions)
         self.capacity = ccfg.static_capacity()
         self.block_size = self.paging.block_size
         self.max_blocks = max_blocks_per_row(self.capacity, self.block_size)
         self.pool: Optional[BlockPool] = None
         self.table: Optional[np.ndarray] = None  # host mirror (L, S, B, M)
         self.pa: Optional[PlanArrays] = None
+        self.n_rows: Optional[int] = None  # global batch width
+
+    @property
+    def partitions(self):
+        """(slot_parts, row_parts) — the mesh pool split (DESIGN.md §10)."""
+        return (self.pool_partitions, self.row_partitions)
 
     # ---- state lifecycle ---------------------------------------------------
 
     def init_state(self, pa, batch, dtype):
         self.pa = pa
+        self.n_rows = int(batch)
         if self.cfg.attention_free:
             return _serve.init_serve_state(self.cfg, pa, batch, self.ccfg,
                                            dtype=dtype)
         cache, self.pool = init_paged_cache(
             self.cfg.n_layers, int(pa.slot_head.shape[1]), batch,
-            self.capacity, self.cfg.head_dim, self.paging, dtype=dtype)
+            self.capacity, self.cfg.head_dim, self.paging, dtype=dtype,
+            partitions=self.partitions)
         self.table = np.zeros(cache.block_table.shape, np.int32)
         return _serve.init_serve_state(self.cfg, pa, batch, self.ccfg,
                                        dtype=dtype, cache=cache)
@@ -97,7 +110,8 @@ class PagedBackend(CacheBackend):
         empty = self.init_state(pa, B, slot.k.dtype)  # fresh pool + mirror
         own = _owner_mask_np(pa, np.arange(B))
         table = build_table(np.asarray(slot.lengths), self.pool,
-                            self.block_size, self.max_blocks, own=own)
+                            self.block_size, self.max_blocks, own=own,
+                            partitions=self.partitions, n_rows=B)
         self.table = table.copy()
         cache = paginate_rows(empty.cache, slot, jnp.arange(B, dtype=jnp.int32),
                               table)
@@ -115,7 +129,9 @@ class PagedBackend(CacheBackend):
             self.table[:, :, rows_np, :] = 0
         own = _owner_mask_np(self.pa, rows_np)
         table_sub = build_table(np.asarray(sub.cache.lengths), self.pool,
-                                self.block_size, self.max_blocks, own=own)
+                                self.block_size, self.max_blocks, own=own,
+                                partitions=self.partitions, rows=rows_np,
+                                n_rows=self.n_rows)
         self.table[:, :, rows_np, :] = table_sub
         cache = paginate_rows(state.cache, sub.cache,
                               jnp.asarray(rows_np, jnp.int32), table_sub)
@@ -155,17 +171,30 @@ class PagedBackend(CacheBackend):
         missing = need - have
         if missing.max(initial=0) <= 0:
             return state
-        L = self.table.shape[0]
+        L, S = self.table.shape[0], self.table.shape[1]
+        slot_parts, row_parts = self.partitions
+        s_per = S // slot_parts
+        b_per = -(-self.n_rows // row_parts)
         for l in range(L):
-            n_l = int(np.maximum(missing[l], 0).sum())
-            if n_l == 0:
-                continue
-            ids = self.pool.alloc(l, n_l)  # raises PoolExhausted
-            at = 0
-            for s, r in zip(*np.nonzero(missing[l] > 0)):
-                m, h = int(missing[l, s, r]), int(have[l, s, r])
-                self.table[l, s, rows[r], h:h + m] = ids[at:at + m]
-                at += m
+            for sp in range(slot_parts):
+                sl = slice(sp * s_per, (sp + 1) * s_per)
+                for rp in range(row_parts):
+                    cols = np.nonzero(rows // b_per == rp)[0]
+                    if cols.size == 0:
+                        continue
+                    miss = missing[l, sl][:, cols]
+                    n_lp = int(np.maximum(miss, 0).sum())
+                    if n_lp == 0:
+                        continue
+                    ids = self.pool.alloc(l, n_lp,
+                                          partition=sp * row_parts + rp)
+                    hv = have[l, sl][:, cols]
+                    at = 0
+                    for s, c in zip(*np.nonzero(miss > 0)):
+                        m, h = int(miss[s, c]), int(hv[s, c])
+                        self.table[l, sp * s_per + s, rows[cols[c]],
+                                   h:h + m] = ids[at:at + m]
+                        at += m
         return dataclasses.replace(state, cache=dataclasses.replace(
             cache, block_table=jnp.asarray(self.table)))
 
@@ -188,16 +217,19 @@ class PagedBackend(CacheBackend):
         own = np.zeros((self.table.shape[0], self.table.shape[1], B), bool)
         if rows.size:
             own[:, :, rows] = _owner_mask_np(new_pa, rows)
-        trial = BlockPool(self.pool.n_layers, self.pool.n_blocks)
+        trial = BlockPool(self.pool.n_layers, self.pool.n_blocks,
+                          n_partitions=self.pool.n_partitions)
         table = build_table(np.asarray(slot2.lengths), trial,
-                            self.block_size, self.max_blocks, own=own)
+                            self.block_size, self.max_blocks, own=own,
+                            partitions=self.partitions, n_rows=B)
 
         def commit():
             empty, _ = init_paged_cache(
                 self.cfg.n_layers, int(new_pa.slot_head.shape[1]), B,
                 self.capacity, self.cfg.head_dim,
                 dataclasses.replace(self.paging, n_blocks=cache.n_blocks),
-                dtype=cache.k_pool.dtype)
+                dtype=cache.k_pool.dtype,
+                partitions=self.partitions)
             cand = paginate_rows(empty, slot2,
                                  jnp.arange(B, dtype=jnp.int32), table)
             self.pool, self.table, self.pa = trial, table, new_pa
@@ -229,6 +261,38 @@ class PagedBackend(CacheBackend):
                 out[l] = tokens // bs + 2 * H  # rounding + 1 growth block/head
         return out
 
+    def _partition_need(self, prompt_len: int, max_new: int,
+                        worst_case: bool) -> np.ndarray:
+        """(L, P) projected block need per (layer, pool partition).
+
+        The per-layer token bound splits across partitions proportional to
+        the plan's occupied slots there (replicas split rows, so a
+        partition's expected share of a request's tokens tracks its share
+        of owned slots); the per-head growth/rounding slack charges where
+        the heads physically sit.  Budgets and admission are therefore
+        **per model shard** — one shard's full partition blocks admission
+        even when the pool has global headroom (DESIGN.md §10).
+        """
+        P = self.pool_partitions
+        sh = np.asarray(self.pa.slot_head)  # (L, S)
+        L, S = sh.shape
+        occ = (sh >= 0).reshape(L, P, S // P).sum(axis=2)  # (L, P)
+        frac = occ / np.maximum(occ.sum(axis=1, keepdims=True), 1)
+        H, bs = self.cfg.n_kv_heads, self.block_size
+        out = np.zeros((L, P), np.int64)
+        for l in range(L):
+            tokens = layer_keep_bound(self.ccfg.policy, self.ccfg,
+                                      prompt_len, H, l, L)
+            if worst_case:
+                tokens = min(tokens + H * max_new,
+                             H * min(prompt_len + max_new, self.capacity))
+                slack = occ[l]
+            else:
+                slack = 2 * occ[l]  # rounding + 1 growth block per slot
+            out[l] = (np.ceil(tokens * frac[l] / bs).astype(np.int64)
+                      + slack)
+        return out
+
     def request_cost(self, req):
         if self.cfg.attention_free:
             return 0
@@ -238,12 +302,31 @@ class PagedBackend(CacheBackend):
     def admissible(self, state, req):
         if self.cfg.attention_free or self.pool is None:
             return True
+        if self.pool.n_partitions > 1:
+            need = self._partition_need(req.prompt_len, req.max_new_tokens,
+                                        worst_case=False)  # (L, slot_parts)
+            free = self.pool.free_blocks_by_partition()
+            L = free.shape[0]
+            # the request lands in one (unknown) row partition — require the
+            # worst one to fit, so admission never over-commits a shard
+            free = free.reshape(L, self.pool_partitions,
+                                self.row_partitions).min(axis=2)
+            return bool((free >= need).all())
         need = self._layer_blocks(req.prompt_len, req.max_new_tokens,
                                   worst_case=False)
         return bool((self.pool.free_blocks() >= need).all())
 
     def never_fits(self, req):
         if self.cfg.attention_free:
+            return None
+        if self.pool is not None and self.pool.n_partitions > 1:
+            need = self._partition_need(req.prompt_len, req.max_new_tokens,
+                                        worst_case=True)
+            usable = self.pool.part_size - 1
+            if int(need.max()) > usable:
+                return (f"worst-case need of {int(need.max())} blocks in "
+                        f"one (layer, model-shard) partition exceeds the "
+                        f"partition ({usable} usable blocks)")
             return None
         need = self._layer_blocks(req.prompt_len, req.max_new_tokens,
                                   worst_case=True)
@@ -282,13 +365,14 @@ class PagedBackend(CacheBackend):
         item = c.k_pool.dtype.itemsize
         block_bytes = 2 * bs * Dh * item  # K + V
         in_use = self.pool.blocks_in_use()
+        usable = self.pool.usable_blocks
         return {
             "backend": self.name,
             "block_size": bs,
             "blocks_in_use": in_use,
-            "blocks_total": L * (N - 1),
+            "blocks_total": L * usable,
             "cache_bytes": in_use * block_bytes,
-            "pool_bytes": L * (N - 1) * block_bytes,
+            "pool_bytes": L * usable * block_bytes,
             "slot_equivalent_bytes": int(2 * L * S * B * self.capacity
                                          * Dh * item),
             "live_tokens": int(np.asarray(c.lengths).sum()),

@@ -68,50 +68,87 @@ class BlockPool:
     Deterministic: blocks are handed out lowest-id-first per layer, so
     identical request traces produce identical block tables (mirrors the
     scheduler's lowest-row-first freelist).
+
+    ``n_partitions > 1`` splits every layer's pool into equal contiguous
+    partitions with *independent* free lists — the mesh executor's layout
+    (DESIGN.md §10), where partition ``p`` is the slice of the pool that
+    physically lives on model shard ``p`` and only blocks of that partition
+    may back the shard's slots.  Every partition reserves its local block 0
+    (global id ``p · part_size``) as a null block, so a shard-local view of
+    the pool keeps the null-redirect convention.  Block ids remain *global*
+    everywhere on the host; the partition of an id is ``id // part_size``.
     """
 
-    def __init__(self, n_layers: int, n_blocks: int):
-        if n_blocks < 2:
+    def __init__(self, n_layers: int, n_blocks: int, n_partitions: int = 1):
+        if n_partitions < 1:
+            raise ValueError(f"n_partitions must be >= 1, got {n_partitions}")
+        if n_blocks % n_partitions:
             raise ValueError(
-                f"need >= 2 blocks per layer (1 null + 1 usable), "
-                f"got {n_blocks}")
+                f"{n_blocks} blocks/layer do not split into "
+                f"{n_partitions} equal partitions")
+        part = n_blocks // n_partitions
+        if part < 2:
+            raise ValueError(
+                f"need >= 2 blocks per partition (1 null + 1 usable), got "
+                f"{part} ({n_blocks} blocks / {n_partitions} partitions)")
         self.n_layers = int(n_layers)
         self.n_blocks = int(n_blocks)
+        self.n_partitions = int(n_partitions)
+        self.part_size = part
+        nulls = [p * part for p in range(n_partitions)]
         self.refcount = np.zeros((n_layers, n_blocks), np.int32)
-        self.refcount[:, 0] = 1  # null block: pinned forever
+        self.refcount[:, nulls] = 1  # null blocks: pinned forever
         # descending so list.pop() returns the lowest free id
-        self._free: List[List[int]] = [
-            list(range(n_blocks - 1, 0, -1)) for _ in range(n_layers)]
+        self._free: List[List[List[int]]] = [
+            [list(range((p + 1) * part - 1, p * part, -1))
+             for p in range(n_partitions)]
+            for _ in range(n_layers)]
 
     # ---- introspection -----------------------------------------------------
 
-    def free_blocks(self, layer: Optional[int] = None):
-        """Free count for one layer, or (L,) array for all layers."""
+    def free_blocks(self, layer: Optional[int] = None,
+                    partition: Optional[int] = None):
+        """Free count for one layer (summed over partitions unless one is
+        named), or (L,) array for all layers."""
         if layer is not None:
-            return len(self._free[layer])
-        return np.asarray([len(f) for f in self._free], np.int64)
+            if partition is not None:
+                return len(self._free[layer][partition])
+            return sum(len(f) for f in self._free[layer])
+        return np.asarray([sum(len(f) for f in fs) for fs in self._free],
+                          np.int64)
+
+    def free_blocks_by_partition(self) -> np.ndarray:
+        """(L, n_partitions) free counts."""
+        return np.asarray([[len(f) for f in fs] for fs in self._free],
+                          np.int64)
 
     def blocks_in_use(self) -> int:
         """Total allocated blocks across layers (null blocks excluded)."""
-        return int(sum(self.n_blocks - 1 - len(f) for f in self._free))
+        usable = self.n_layers * self.usable_blocks
+        return int(usable - int(self.free_blocks().sum()))
 
     @property
     def usable_blocks(self) -> int:
-        """Allocatable blocks per layer (the null block is never handed out)."""
-        return self.n_blocks - 1
+        """Allocatable blocks per layer (null blocks are never handed out)."""
+        return self.n_blocks - self.n_partitions
+
+    def partition_of(self, block_id: int) -> int:
+        return int(block_id) // self.part_size
 
     # ---- alloc / free ------------------------------------------------------
 
-    def alloc(self, layer: int, n: int) -> List[int]:
-        """Allocate ``n`` blocks in ``layer`` (refcount 1 each).
+    def alloc(self, layer: int, n: int, partition: int = 0) -> List[int]:
+        """Allocate ``n`` blocks in ``layer``'s ``partition`` (refcount 1
+        each); returned ids are global.
 
         Atomic: raises ``PoolExhausted`` without handing out anything if the
-        layer has fewer than ``n`` free blocks.
+        partition has fewer than ``n`` free blocks.
         """
-        free = self._free[layer]
+        free = self._free[layer][partition]
         if n > len(free):
             raise PoolExhausted(
-                f"layer {layer}: requested {n} blocks, {len(free)} free "
+                f"layer {layer} partition {partition}: requested {n} "
+                f"blocks, {len(free)} free "
                 f"(pool {self.usable_blocks}/layer)")
         ids = [free.pop() for _ in range(n)]
         self.refcount[layer, ids] = 1
@@ -125,13 +162,14 @@ class BlockPool:
             self.refcount[layer, b] += 1
 
     def decref(self, layer: int, ids: Iterable[int]) -> None:
-        """Drop one reference per id; blocks reaching 0 return to the
-        free list.  Refcounts can never go negative: over-freeing raises."""
-        freed = []
+        """Drop one reference per id; blocks reaching 0 return to their
+        partition's free list.  Refcounts can never go negative:
+        over-freeing raises."""
+        freed: List[int] = []
         for b in ids:
             b = int(b)
-            if b == 0:
-                raise ValueError("null block cannot be freed")
+            if b % self.part_size == 0:
+                raise ValueError(f"null block {b} cannot be freed")
             rc = int(self.refcount[layer, b])
             if rc <= 0:
                 raise ValueError(
@@ -141,8 +179,10 @@ class BlockPool:
             if rc == 1:
                 freed.append(b)
         if freed:
-            self._free[layer].extend(freed)
-            self._free[layer].sort(reverse=True)  # lowest-id-first via pop()
+            for p in {self.partition_of(b) for b in freed}:
+                fl = self._free[layer][p]
+                fl.extend(b for b in freed if self.partition_of(b) == p)
+                fl.sort(reverse=True)  # lowest-id-first via pop()
 
     def free_table(self, table: np.ndarray) -> None:
         """Decref every nonzero entry of an (L, ..., M) id table slice."""
@@ -156,17 +196,26 @@ class BlockPool:
         """Deep copy — used to *trial* a migration before committing."""
         out = BlockPool.__new__(BlockPool)
         out.n_layers, out.n_blocks = self.n_layers, self.n_blocks
+        out.n_partitions, out.part_size = self.n_partitions, self.part_size
         out.refcount = self.refcount.copy()
-        out._free = [list(f) for f in self._free]
+        out._free = [[list(f) for f in fs] for fs in self._free]
         return out
 
     def check_invariants(self) -> None:
         """Debug/test hook: free lists and refcounts partition the pool."""
+        nulls = {p * self.part_size for p in range(self.n_partitions)}
         for layer in range(self.n_layers):
-            free = set(self._free[layer])
-            assert 0 not in free, "null block leaked into the free list"
-            assert len(free) == len(self._free[layer]), "duplicate free ids"
-            for b in range(1, self.n_blocks):
+            free = set()
+            for p, fl in enumerate(self._free[layer]):
+                assert all(self.partition_of(b) == p for b in fl), (
+                    f"layer {layer}: foreign id in partition {p} free list")
+                free.update(fl)
+            n_free = sum(len(f) for f in self._free[layer])
+            assert not (free & nulls), "null block leaked into a free list"
+            assert len(free) == n_free, "duplicate free ids"
+            for b in range(self.n_blocks):
+                if b in nulls:
+                    continue
                 rc = int(self.refcount[layer, b])
                 assert rc >= 0, f"negative refcount {rc}"
                 assert (b in free) == (rc == 0), (

@@ -71,17 +71,38 @@ def max_blocks_per_row(capacity: int, block_size: int) -> int:
 def init_paged_cache(
     n_layers: int, n_slots: int, batch: int, capacity: int, head_dim: int,
     paging: PagingConfig, dtype=jnp.bfloat16,
+    partitions: Tuple[int, int] = (1, 1),
 ) -> Tuple[PagedCache, BlockPool]:
     """Empty paged cache + its allocator.
 
     ``paging.n_blocks == 0`` sizes the pool to the slot-cache worst case
-    (``S·B·M + 1`` per layer): every (slot, row) can be fully allocated, so
-    this mode can never preempt — it trades no memory but validates the
-    paged data path end to end.
+    (``S·B·M + 1`` per layer-partition): every (slot, row) can be fully
+    allocated, so this mode can never preempt — it trades no memory but
+    validates the paged data path end to end.
+
+    ``partitions = (slot_parts, row_parts)`` (the mesh executor,
+    DESIGN.md §10) splits each layer's pool into equal partitions indexed
+    ``p = slot_part · row_parts + row_part`` — blocks for (slot s, row r)
+    live in the partition of (s's model shard, r's data shard), so the
+    pool array shards cleanly over ``(model, data)`` and every append and
+    gather stays device-local.  A configured ``paging.n_blocks`` is
+    rounded up to a multiple of the partition count.
     """
     bs = paging.block_size
     M = max_blocks_per_row(capacity, bs)
-    n_blocks = paging.n_blocks or (n_slots * batch * M + 1)
+    slot_parts, row_parts = partitions
+    if slot_parts < 1 or n_slots % slot_parts:
+        raise ValueError(
+            f"{n_slots} slots do not split into {slot_parts} partitions")
+    if row_parts < 1 or batch % row_parts:
+        raise ValueError(
+            f"{batch} rows do not split into {row_parts} partitions")
+    n_partitions = slot_parts * row_parts
+    if paging.n_blocks:
+        part = -(-paging.n_blocks // n_partitions)  # ceil: round up
+    else:
+        part = (n_slots // slot_parts) * (batch // row_parts) * M + 1
+    n_blocks = part * n_partitions
     cache = PagedCache(
         k_pool=jnp.zeros((n_layers, n_blocks, bs, head_dim), dtype),
         v_pool=jnp.zeros((n_layers, n_blocks, bs, head_dim), dtype),
@@ -90,7 +111,7 @@ def init_paged_cache(
         lengths=jnp.zeros((n_layers, n_slots, batch), jnp.int32),
         positions=jnp.zeros((batch,), jnp.int32),
     )
-    return cache, BlockPool(n_layers, n_blocks)
+    return cache, BlockPool(n_layers, n_blocks, n_partitions=n_partitions)
 
 
 # ---------------------------------------------------------------------------
@@ -142,6 +163,7 @@ def paged_append_token(
     decode_step: jnp.ndarray,  # scalar int32: appends since prefill
     capacity: int,
     ring: int = 128,
+    table_layer: Optional[jnp.ndarray] = None,  # (S, B, M) addressing override
 ) -> PagedCache:
     """Append one token for owned (slot, row) pairs — `append_token` parity.
 
@@ -151,13 +173,18 @@ def paged_append_token(
     Unowned pairs — and, defensively, owned pairs whose block is missing —
     are redirected into the null block, never corrupting live data.
     Length accounting matches the slot cache exactly (`own` increments).
+
+    ``table_layer`` overrides the table used for *addressing* only (the
+    stored ``block_table`` is untouched): the mesh executor passes a
+    partition-localized view when pool ids in the stored table are global
+    but the pool array in scope is one shard's partition (DESIGN.md §10).
     """
     bs = cache.block_size
     lengths = cache.lengths[layer]  # (S, B)
     idx = ring_write_index(lengths, decode_step, capacity, ring)  # (S, B)
     blk, off = idx // bs, idx % bs
-    bid = jnp.take_along_axis(cache.block_table[layer], blk[..., None],
-                              axis=2)[..., 0]  # (S, B)
+    table = cache.block_table[layer] if table_layer is None else table_layer
+    bid = jnp.take_along_axis(table, blk[..., None], axis=2)[..., 0]  # (S, B)
     valid = own & (bid > 0)
     bid = jnp.where(valid, bid, 0)
     kl, vl, pl = cache.k_pool[layer], cache.v_pool[layer], cache.pos_pool[layer]
@@ -245,20 +272,42 @@ def release_rows(cache: PagedCache, rows) -> PagedCache:
 
 
 def build_table(
-    lengths: np.ndarray,  # (L, S, B) realized retained lengths
+    lengths: np.ndarray,  # (L, S, B_sub) realized retained lengths
     pool: BlockPool,
     block_size: int,
     max_blocks: int,
-    own: Optional[np.ndarray] = None,  # (L, S, B) bool ownership
+    own: Optional[np.ndarray] = None,  # (L, S, B_sub) bool ownership
+    partitions: Tuple[int, int] = (1, 1),  # (slot_parts, row_parts)
+    rows: Optional[np.ndarray] = None,  # (B_sub,) target *global* row ids
+    n_rows: Optional[int] = None,  # global batch width (row partitioning)
 ) -> np.ndarray:
-    """Allocate blocks proportional to realized lengths → (L, S, B, M) table.
+    """Allocate blocks proportional to realized lengths → (L, S, B_sub, M)
+    table.
 
     Owned (slot, row) pairs get at least one block even at length 0 so the
     first decode append always has a home (matching the slot cache, where
-    every owned pair can append immediately).  Atomic: on ``PoolExhausted``
-    everything allocated so far is returned to the pool before re-raising.
+    every owned pair can append immediately).  Under a partitioned pool
+    (mesh executor) a (slot s, global row r) pair draws from partition
+    ``(s // (S/slot_parts)) · row_parts + r // (n_rows/row_parts)`` — its
+    (model, data) shard's pool slice; ``rows`` are the target global row
+    ids of the (possibly sub-batch) ``lengths`` columns.  Atomic: on
+    ``PoolExhausted`` everything allocated so far is returned to the pool
+    before re-raising.
     """
     L, S, B = lengths.shape
+    slot_parts, row_parts = partitions
+    if pool.n_partitions != slot_parts * row_parts:
+        raise ValueError(
+            f"pool has {pool.n_partitions} partitions, expected "
+            f"{slot_parts}x{row_parts}")
+    if S % slot_parts:
+        raise ValueError(
+            f"{S} slots do not split into {slot_parts} partitions")
+    s_per = S // slot_parts
+    rows = np.arange(B) if rows is None else np.asarray(rows, np.int64)
+    n_rows = B if n_rows is None else int(n_rows)
+    b_per = -(-n_rows // row_parts)
+    row_part = rows // b_per  # (B_sub,) data partition of each column
     need = -(-np.asarray(lengths, np.int64) // block_size)  # ceil-div
     if own is not None:
         need = np.maximum(need, np.asarray(own, np.int64))
@@ -266,20 +315,30 @@ def build_table(
         raise ValueError(
             f"row needs {need.max()} blocks > max_blocks {max_blocks}")
     table = np.zeros((L, S, B, max_blocks), np.int32)
-    fill = (np.arange(max_blocks, dtype=np.int64)[None, :]
-            < need.reshape(L, -1)[..., None])  # (L, S·B, M) slots to fill
-    done_layers = []
+    fill = (np.arange(max_blocks, dtype=np.int64)[None, None, :]
+            < need[..., None])  # (L, S, B, M) slots to fill
+    done = []  # (layer, ids) already allocated, for rollback
     try:
         for l in range(L):
-            ids = pool.alloc(l, int(need[l].sum()))
-            done_layers.append(l)
-            # row-major mask assignment == sequential per-(slot,row) fill
-            layer = np.zeros((S * B, max_blocks), np.int32)
-            layer[fill[l]] = ids
-            table[l] = layer.reshape(S, B, max_blocks)
+            for sp in range(slot_parts):
+                sl = slice(sp * s_per, (sp + 1) * s_per)
+                for rp in range(row_parts):
+                    cols = np.nonzero(row_part == rp)[0]
+                    if cols.size == 0:
+                        continue
+                    sub_need = need[l, sl][:, cols]
+                    ids = pool.alloc(l, int(sub_need.sum()),
+                                     partition=sp * row_parts + rp)
+                    done.append((l, ids))
+                    # row-major mask == sequential per-(slot,row) fill
+                    part = np.zeros((s_per, cols.size, max_blocks), np.int32)
+                    part[fill[l, sl][:, cols]] = ids
+                    sub = table[l, sl]
+                    sub[:, cols] = part
+                    table[l, sl] = sub
     except Exception:
-        for l in done_layers:
-            ids = table[l].reshape(-1)
-            pool.decref(l, ids[ids > 0].tolist())
+        for l, ids in done:
+            if ids:
+                pool.decref(l, ids)
         raise
     return table

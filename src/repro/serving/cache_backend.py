@@ -33,7 +33,10 @@ import numpy as np
 from repro.api.registry import register_cache_backend
 from repro.cache.slot_cache import PlanArrays, migrate_cache
 from repro.compression.base import CompressionConfig
-from repro.compression.policies import projected_request_tokens
+from repro.compression.policies import (
+    layer_keep_bound,
+    projected_request_tokens,
+)
 from repro.configs.base import ModelConfig
 from repro.paging.block_pool import PagingConfig, PoolExhausted  # noqa: F401
 from repro.serving import engine as _serve
@@ -41,17 +44,36 @@ from repro.serving.request import Request
 
 
 class CacheBackend:
-    """Interface; see module docstring for the contract."""
+    """Interface; see module docstring for the contract.
+
+    Budget geometry (DESIGN.md §10): ``n_shards`` is the plan's model-shard
+    count, so admission can be enforced **per model shard** — the resource
+    that actually runs out on a sharded mesh is one shard's memory, not the
+    global sum.  ``max_live_tokens_per_shard`` is the slot backend's
+    per-shard admission budget (None disables the check);
+    ``pool_partitions`` / ``row_partitions`` split the paged backend's
+    block pool into per-(model shard, data shard) partitions (the mesh
+    executor's layout, where each partition lives on one device and its
+    free list is that shard's budget).
+    """
 
     name: str = "?"
 
     def __init__(self, model_cfg: ModelConfig, ccfg: CompressionConfig,
                  max_live_tokens: Optional[int] = None,
-                 paging: Optional[PagingConfig] = None):
+                 paging: Optional[PagingConfig] = None,
+                 n_shards: int = 1,
+                 max_live_tokens_per_shard: Optional[int] = None,
+                 pool_partitions: int = 1,
+                 row_partitions: int = 1):
         self.cfg = model_cfg
         self.ccfg = ccfg
         self.max_live_tokens = max_live_tokens
         self.paging = paging or PagingConfig()
+        self.n_shards = int(n_shards)
+        self.max_live_tokens_per_shard = max_live_tokens_per_shard
+        self.pool_partitions = int(pool_partitions)
+        self.row_partitions = int(row_partitions)
 
     # ---- state lifecycle ---------------------------------------------------
 
@@ -124,9 +146,18 @@ class SlotBackend(CacheBackend):
 
     name = "slot"
 
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        self.pa: Optional[PlanArrays] = None  # for per-shard projection
+
     def init_state(self, pa, batch, dtype):
+        self.pa = pa
         return _serve.init_serve_state(self.cfg, pa, batch, self.ccfg,
                                        dtype=dtype)
+
+    def from_prefill(self, state, pa):
+        self.pa = pa
+        return state
 
     def splice(self, state, sub, rows):
         return _serve.splice_state(state, sub, rows)
@@ -136,12 +167,49 @@ class SlotBackend(CacheBackend):
 
     def migrate_cache(self, cache, old_pa, new_pa, active_rows=None):
         migrated = migrate_cache(cache, old_pa, new_pa)
-        return migrated.lengths, lambda: migrated
+
+        def commit():
+            self.pa = new_pa
+            return migrated
+
+        return migrated.lengths, commit
 
     def live_tokens(self, state) -> int:
         if state.cache is None:
             return 0
         return int(np.asarray(state.cache.lengths).sum())
+
+    def per_shard_live(self, state) -> np.ndarray:
+        """(n_shards,) realized Σ lengths per model shard."""
+        if state.cache is None:
+            return np.zeros(self.n_shards, np.int64)
+        per_slot = np.asarray(state.cache.lengths).sum(axis=(0, 2))  # (S,)
+        return per_slot.reshape(self.n_shards, -1).sum(axis=1)
+
+    def per_shard_cost(self, req) -> np.ndarray:
+        """(n_shards,) expected Σ-lengths a request adds per model shard.
+
+        Each head's per-layer projected tokens (prefill keep bound / H plus
+        decode growth, clipped at capacity) land on the shards holding its
+        replicas, split ``1/r`` per replica — the expectation of the strided
+        row split the runtime actually performs.  Requires a live plan
+        (``init_state`` / ``from_prefill`` record it).
+        """
+        if self.cfg.attention_free or self.pa is None:
+            return np.zeros(self.n_shards)
+        sh = np.asarray(self.pa.slot_head)  # (L, S)
+        rc = np.asarray(self.pa.replica_count)
+        L, S = sh.shape
+        H, cap = self.cfg.n_kv_heads, self.ccfg.static_capacity()
+        row_cap = min(req.prompt_len + req.max_new_tokens, cap)
+        cost = np.zeros(self.n_shards)
+        for l in range(L):
+            bound = layer_keep_bound(self.ccfg.policy, self.ccfg,
+                                     req.prompt_len, H, l, L) / H
+            per_head = min(bound + req.max_new_tokens, row_cap)
+            w = np.where(sh[l] >= 0, per_head / rc[l], 0.0)  # (S,)
+            cost += w.reshape(self.n_shards, -1).sum(axis=1)
+        return cost
 
     def request_cost(self, req):
         if self.cfg.attention_free:
@@ -151,18 +219,35 @@ class SlotBackend(CacheBackend):
             self.cfg.n_layers, self.cfg.n_kv_heads)
 
     def admissible(self, state, req):
-        if self.max_live_tokens is None:
-            return True
-        return (self.live_tokens(state) + self.request_cost(req)
-                <= self.max_live_tokens)
+        if self.max_live_tokens is not None:
+            if (self.live_tokens(state) + self.request_cost(req)
+                    > self.max_live_tokens):
+                return False
+        if (self.max_live_tokens_per_shard is not None
+                and not self.cfg.attention_free and self.pa is not None):
+            # per-model-shard budget (DESIGN.md §10): the bottleneck shard
+            # gates admission, so an imbalanced plan saturates one shard's
+            # budget while balanced plans keep admitting — the fig8 signal
+            load = self.per_shard_live(state) + self.per_shard_cost(req)
+            if (load > self.max_live_tokens_per_shard).any():
+                return False
+        return True
 
     def never_fits(self, req):
-        if self.max_live_tokens is None:
-            return None
-        cost = self.request_cost(req)
-        if cost > self.max_live_tokens:
-            return (f"projected cost {cost} tokens exceeds max_live_tokens="
-                    f"{self.max_live_tokens} even on an empty cache")
+        if self.max_live_tokens is not None:
+            cost = self.request_cost(req)
+            if cost > self.max_live_tokens:
+                return (f"projected cost {cost} tokens exceeds "
+                        f"max_live_tokens={self.max_live_tokens} even on "
+                        f"an empty cache")
+        if (self.max_live_tokens_per_shard is not None
+                and not self.cfg.attention_free and self.pa is not None):
+            worst = self.per_shard_cost(req).max()
+            if worst > self.max_live_tokens_per_shard:
+                return (f"projected per-shard cost {worst:.0f} tokens "
+                        f"exceeds max_live_tokens_per_shard="
+                        f"{self.max_live_tokens_per_shard} even on an "
+                        f"empty cache")
         return None
 
     def memory_stats(self, state) -> dict:
@@ -184,9 +269,16 @@ class SlotBackend(CacheBackend):
 def make_cache_backend(name: str, model_cfg: ModelConfig,
                        ccfg: CompressionConfig,
                        max_live_tokens: Optional[int] = None,
-                       paging: Optional[PagingConfig] = None) -> CacheBackend:
-    """Instantiate a registered backend by name."""
+                       paging: Optional[PagingConfig] = None,
+                       n_shards: int = 1,
+                       max_live_tokens_per_shard: Optional[int] = None,
+                       pool_partitions: int = 1,
+                       row_partitions: int = 1) -> CacheBackend:
+    """Instantiate a registered backend by name (geometry kwargs: see the
+    `CacheBackend` docstring)."""
     from repro.api.registry import get_cache_backend
-    return get_cache_backend(name)(model_cfg, ccfg,
-                                   max_live_tokens=max_live_tokens,
-                                   paging=paging)
+    return get_cache_backend(name)(
+        model_cfg, ccfg, max_live_tokens=max_live_tokens, paging=paging,
+        n_shards=n_shards,
+        max_live_tokens_per_shard=max_live_tokens_per_shard,
+        pool_partitions=pool_partitions, row_partitions=row_partitions)

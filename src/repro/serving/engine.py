@@ -131,6 +131,7 @@ def prefill(
     ccfg: CompressionConfig,
     head_importance: Optional[np.ndarray] = None,
     rows: Optional[jnp.ndarray] = None,
+    model_axis: Optional[str] = None,
 ) -> Tuple[ServeState, jnp.ndarray, jnp.ndarray]:
     """Run the full prompt, compress each layer's KV into the slot cache.
 
@@ -142,6 +143,12 @@ def prefill(
     sub-batch will occupy in a larger live cache: the strided owner rule is
     evaluated at those ids so the resulting sub-cache can be spliced in with
     ``insert_rows`` (continuous-batching admission).  Default: arange(B).
+
+    ``model_axis`` names the mesh axis the slot dim is sharded over when the
+    call runs inside ``shard_map`` (DESIGN.md §10): the replica-0 weight
+    recovery all-gathers the slot-dim weights (prefill attention needs every
+    head), while the compression selection and the per-slot cache fill stay
+    local — each model shard fills exactly the slots it owns.
 
     Returns (state, last_logits (B, V), lengths (L, Hkv, B) — the realized
     per-head retained lengths, i.e. the paper's workload observable).
@@ -179,9 +186,9 @@ def prefill(
         if cfg.family == "hybrid":
             attn_flat, cache, lens = _prefill_attention(
                 pl, hn, positions, cfg, i, cache, plan, ccfg, W,
-                head_importance, rows)
+                head_importance, rows, model_axis)
             a = L.rms_norm(attn_flat, pl["attn_out_norm"], cfg.rms_eps)
-            attn_out = _slot_o_proj(pl, a, cfg, plan, i)
+            attn_out = _slot_o_proj(pl, a, cfg, plan, i, model_axis)
             ssm_out, (cs, ss) = M.ssm_block_full(pl, hn, cfg, return_state=True)
             conv_state = conv_state.at[i].set(cs)
             ssm_state = ssm_state.at[i].set(ss)
@@ -195,8 +202,8 @@ def prefill(
         else:
             attn_flat, cache, lens = _prefill_attention(
                 pl, hn, positions, cfg, i, cache, plan, ccfg, W,
-                head_importance, rows)
-            h = h + _slot_o_proj(pl, attn_flat, cfg, plan, i)
+                head_importance, rows, model_axis)
+            h = h + _slot_o_proj(pl, attn_flat, cfg, plan, i, model_axis)
             lengths_all.append(lens)
         if enc_kvs is not None:
             hc = L.rms_norm(h, pl["ln_cross"], cfg.rms_eps)
@@ -235,30 +242,41 @@ def _take0(w, idx):
     return jnp.take(w, idx, axis=0)
 
 
-def first_weights(pl: dict, plan: PlanArrays, layer_idx: int) -> dict:
+def _full_slots(w, model_axis: Optional[str]):
+    """Reassemble the global slot dim inside ``shard_map`` (identity
+    outside).  Prefill recovers original-layout weights through
+    ``first_slot``, whose indices are global — a shard's local slot slice
+    does not contain every head's replica-0 slot."""
+    if model_axis is None:
+        return w
+    return jax.lax.all_gather(w, model_axis, axis=0, tiled=True)
+
+
+def first_weights(pl: dict, plan: PlanArrays, layer_idx: int,
+                  model_axis: Optional[str] = None) -> dict:
     """Recover original-layout q/k/v/o weights from each head's replica-0
     slot (a cheap gather — no second weight copy is stored)."""
     from repro.serving.quant import deq
     fs = plan.first_slot[layer_idx]  # (Hkv,)
     out = {
-        "wq": deq(_take0(pl["wq_s"], fs)),  # (Hkv, D, G, Dh)
-        "wk": deq(_take0(pl["wk_s"], fs)),  # (Hkv, D, Dh)
-        "wv": deq(_take0(pl["wv_s"], fs)),
-        "wo": deq(_take0(pl["wo_s"], fs)),  # (Hkv, G, Dh, D)
+        "wq": deq(_take0(_full_slots(pl["wq_s"], model_axis), fs)),  # (Hkv, D, G, Dh)
+        "wk": deq(_take0(_full_slots(pl["wk_s"], model_axis), fs)),  # (Hkv, D, Dh)
+        "wv": deq(_take0(_full_slots(pl["wv_s"], model_axis), fs)),
+        "wo": deq(_take0(_full_slots(pl["wo_s"], model_axis), fs)),  # (Hkv, G, Dh, D)
     }
     if "bq_s" in pl:
-        out["bq"] = jnp.take(pl["bq_s"], fs, axis=0)
-        out["bk"] = jnp.take(pl["bk_s"], fs, axis=0)
-        out["bv"] = jnp.take(pl["bv_s"], fs, axis=0)
+        out["bq"] = jnp.take(_full_slots(pl["bq_s"], model_axis), fs, axis=0)
+        out["bk"] = jnp.take(_full_slots(pl["bk_s"], model_axis), fs, axis=0)
+        out["bv"] = jnp.take(_full_slots(pl["bv_s"], model_axis), fs, axis=0)
     return out
 
 
 def _prefill_attention(pl, hn, positions, cfg, layer_idx, cache, plan, ccfg,
-                       W, head_importance, rows=None):
+                       W, head_importance, rows=None, model_axis=None):
     """Full attention + compression + slot-cache fill for one layer."""
     B, T, D = hn.shape
     Hkv, G, Dh = cfg.n_kv_heads, cfg.q_per_kv, cfg.head_dim
-    fw = first_weights(pl, plan, layer_idx)
+    fw = first_weights(pl, plan, layer_idx, model_axis)
     q = jnp.einsum("btd,hdgx->bthgx", hn, fw["wq"])  # (B,T,Hkv,G,Dh)
     k = jnp.einsum("btd,hdx->bthx", hn, fw["wk"])
     v = jnp.einsum("btd,hdx->bthx", hn, fw["wv"])
@@ -295,12 +313,12 @@ def _prefill_attention(pl, hn, positions, cfg, layer_idx, cache, plan, ccfg,
     return out_flat, cache, keep.transpose(1, 0)  # lens (Hkv, B)
 
 
-def _slot_o_proj(pl, attn_flat, cfg, plan, layer_idx):
+def _slot_o_proj(pl, attn_flat, cfg, plan, layer_idx, model_axis=None):
     """(B, T, Hkv·G·Dh) → (B, T, D) via the first-replica o weights."""
     D = cfg.d_model
     from repro.serving.quant import deq
     fs = plan.first_slot[layer_idx]
-    wo = deq(_take0(pl["wo_s"], fs))
+    wo = deq(_take0(_full_slots(pl["wo_s"], model_axis), fs))
     wo = wo.reshape(cfg.n_kv_heads * cfg.q_per_kv * cfg.head_dim, D)
     return jnp.einsum("bte,ed->btd", attn_flat, wo)
 
@@ -318,6 +336,9 @@ def decode_step(
     ccfg: CompressionConfig,
     tokens: Optional[jnp.ndarray] = None,
     active: Optional[jnp.ndarray] = None,
+    rows: Optional[jnp.ndarray] = None,
+    model_axis: Optional[str] = None,
+    data_axis: Optional[str] = None,
 ) -> Tuple[ServeState, jnp.ndarray]:
     """One decode step for the whole batch.  Returns (state, logits (B, V)).
 
@@ -326,6 +347,21 @@ def decode_step(
     suppressed on inactive rows, so a retired row's ``lengths`` stay 0 (its
     decode-attention output stays exactly zero) until the scheduler splices a
     new request in.  ``None`` treats every row as active (one-shot serving).
+
+    ``rows`` ((B,) int32, optional) are the *global* batch-row ids of the
+    rows this call sees — the strided replica-owner rule keys on global ids,
+    so a mesh executor running this step inside ``shard_map`` (batch rows
+    sharded over the data axis) must pass each shard's global row slice.
+    Default: arange(B) (the full batch is visible, today's local path).
+
+    ``model_axis`` names the mesh axis the slot dim is sharded over inside
+    ``shard_map``: per-slot attention stays local, and the o-projection
+    contraction over S becomes a psum that reassembles the full activation
+    (DESIGN.md §10).  ``data_axis`` names the batch-row axis — the paged
+    pool partitions over *both* axes (blocks of (slot, row) live on the
+    (model shard of the slot, data shard of the row) device), so the
+    block-id localization needs both indices.  ``None`` (default) is the
+    single-device path.
     """
     tokens = state.last_tokens if tokens is None else tokens
     B = tokens.shape[0]
@@ -343,10 +379,12 @@ def decode_step(
         if cfg.family == "hybrid":
             attn_flat, cache = _decode_attention(pl, hn, positions, cfg, i,
                                                  cache, plan, state.decode_steps,
-                                                 ccfg, active)
+                                                 ccfg, active, rows, model_axis,
+                                                 data_axis)
             a = _slot_rms_norm(attn_flat, pl["attn_out_norm_s"],
-                               cfg.n_heads * cfg.head_dim, cfg.rms_eps)
-            attn_out = _decode_slot_o(pl, a, cfg)
+                               cfg.n_heads * cfg.head_dim, cfg.rms_eps,
+                               model_axis)
+            attn_out = _decode_slot_o(pl, a, cfg, model_axis)
             ssm_out, ssm_state, conv_state = _decode_ssm(
                 pl, hn, cfg, i, ssm_state, conv_state)
             h = h + 0.5 * (attn_out + ssm_out)
@@ -357,8 +395,9 @@ def decode_step(
         else:
             attn_flat, cache = _decode_attention(pl, hn, positions, cfg, i,
                                                  cache, plan, state.decode_steps,
-                                                 ccfg, active)
-            h = h + _decode_slot_o(pl, attn_flat, cfg)
+                                                 ccfg, active, rows, model_axis,
+                                                 data_axis)
+            h = h + _decode_slot_o(pl, attn_flat, cfg, model_axis)
         if cfg.is_encoder_decoder:
             hc = L.rms_norm(h, pl["ln_cross"], cfg.rms_eps)
             h = h + M.cross_attn_block(
@@ -387,7 +426,8 @@ def decode_step(
 
 
 def _decode_attention(pl, hn, positions, cfg, layer_idx, cache, plan,
-                      decode_steps, ccfg, active=None):
+                      decode_steps, ccfg, active=None, rows=None,
+                      model_axis=None, data_axis=None):
     """Slot-layout attention for one new token; appends to the cache."""
     B = hn.shape[0]
     G, Dh = cfg.q_per_kv, cfg.head_dim
@@ -403,7 +443,8 @@ def _decode_attention(pl, hn, positions, cfg, layer_idx, cache, plan,
     # RoPE at each row's absolute position
     q = _rope_slots(q, positions, cfg)
     k_new = _rope_slots(k_new[:, :, None, :], positions, cfg)[:, :, 0, :]
-    own = plan.owner_mask(layer_idx, B)  # (S, B)
+    own = (plan.owner_mask(layer_idx, B) if rows is None
+           else plan.owner_mask_rows(layer_idx, rows))  # (S, B)
     if active is not None:
         own = own & active[None, :]
     window = M.layer_window(cfg, layer_idx)
@@ -413,12 +454,32 @@ def _decode_attention(pl, hn, positions, cfg, layer_idx, cache, plan,
         # are always scatters into the pool (the onehot trade-off does not
         # arise: writes touch one block, not a full cache slice).
         capacity = ccfg.static_capacity()
+        table_l = cache.block_table[layer_idx]  # (S, B, M)
+        if model_axis is not None:
+            # mesh (DESIGN.md §10): the pool shards over (model, data) —
+            # blocks of (slot, row) live on the (slot's model shard, row's
+            # data shard) device — so each device holds an N_part-block
+            # partition while the table stores *global* block ids.  The
+            # partition-aware allocator guarantees locality, so subtracting
+            # the partition offset localizes the ids; anything that falls
+            # outside (the global null block 0 on later partitions,
+            # defensively a foreign id) redirects to local block 0 — every
+            # partition reserves its local block 0 as a null block.
+            n_part = cache.k_pool.shape[1]
+            part_idx = jax.lax.axis_index(model_axis)
+            if data_axis is not None:
+                row_parts = jax.lax.psum(1, data_axis)
+                part_idx = (part_idx * row_parts
+                            + jax.lax.axis_index(data_axis))
+            loc = table_l - part_idx * n_part
+            table_l = jnp.where((loc > 0) & (loc < n_part), loc, 0)
         cache = paged_append_token(cache, layer_idx, k_new.swapaxes(0, 1),
                                    v_new.swapaxes(0, 1), own, decode_steps,
-                                   capacity, ring=max(1, ccfg.decode_margin))
+                                   capacity, ring=max(1, ccfg.decode_margin),
+                                   table_layer=table_l)
         out = paged_fairkv_decode(
             q, cache.k_pool[layer_idx], cache.v_pool[layer_idx],
-            cache.pos_pool[layer_idx], cache.block_table[layer_idx],
+            cache.pos_pool[layer_idx], table_l,
             cache.lengths[layer_idx], capacity, attn_cap=cfg.attn_softcap,
             q_pos=positions, window=window)
         return out, cache
@@ -441,25 +502,34 @@ def _rope_slots(q, positions, cfg):
     return q2.reshape(B, S_, G, Dh)
 
 
-def _slot_rms_norm(x, scale_slot, n_channels, eps):
+def _slot_rms_norm(x, scale_slot, n_channels, eps, model_axis=None):
     """RMS norm over the slot layout (B, S, G, Dh).
 
     Unowned-slot entries are exactly zero (fairkv_decode guarantees it), and
     every head contributes through exactly one owned slot per row, so
     Σx² over (S, G, Dh) equals the original-channel Σx²; the mean divides by
     the *true* channel count (Hq·Dh), not the padded slot width.  Under
-    sharding the Σ over S is a (tiny) cross-shard psum.
+    ``shard_map`` the Σ over S is a (tiny) cross-shard psum.
     """
     xf = x.astype(jnp.float32)
-    ss = (xf * xf).sum(axis=(1, 2, 3), keepdims=True) / n_channels
+    ss = (xf * xf).sum(axis=(1, 2, 3), keepdims=True)
+    if model_axis is not None:
+        ss = jax.lax.psum(ss, model_axis)
+    ss = ss / n_channels
     return (xf * jax.lax.rsqrt(ss + eps)
             * (1.0 + scale_slot.astype(jnp.float32))[None]).astype(x.dtype)
 
 
-def _decode_slot_o(pl, attn, cfg):
-    """(B, S, G, Dh) → (B, 1, D); contraction over S psums across shards."""
+def _decode_slot_o(pl, attn, cfg, model_axis=None):
+    """(B, S, G, Dh) → (B, 1, D); contraction over S psums across shards.
+
+    This is the one collective of the mesh decode StepFn: every (head, row)
+    pair has exactly one owning slot, so the per-shard partial contractions
+    sum to the full batch's activation (DESIGN.md §10)."""
     from repro.serving.quant import deq
     out = jnp.einsum("bsgx,sgxd->bd", attn, deq(pl["wo_s"]))
+    if model_axis is not None:
+        out = jax.lax.psum(out, model_axis)
     return out[:, None]
 
 

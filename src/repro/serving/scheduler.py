@@ -28,7 +28,6 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -37,13 +36,10 @@ from repro.compression.base import CompressionConfig
 from repro.configs.base import ModelConfig
 from repro.core.placement import HeadPlacement
 from repro.core.planner import PlannerConfig, build_plan
+from repro.exec.base import Executor, make_executor
 from repro.paging.block_pool import PoolExhausted
 from repro.serving.cache_backend import CacheBackend, make_cache_backend
-from repro.serving.engine import (
-    decode_step,
-    prefill,
-    slotify_params,
-)
+from repro.serving.engine import slotify_params
 from repro.serving.request import Request, RequestState
 
 
@@ -131,6 +127,12 @@ class SchedulerConfig:
     # the live cache may hold; None admits on free rows alone.  The paged
     # backend ignores this — its budget is the free-block pool itself.
     max_live_tokens: Optional[int] = None
+    # per-model-shard admission budget (slot backend, DESIGN.md §10): the
+    # projected Σ lengths any single shard may hold — the bottleneck shard
+    # gates admission, which is what makes balanced (Fair-Copying) plans
+    # admit more concurrent rows than imbalanced ones (benchmarks/fig8).
+    # The paged backend's analog is its per-partition free-block check.
+    max_live_tokens_per_shard: Optional[int] = None
     replan_window: int = 8
     replan_threshold: float = 1.25
     replan_cooldown: int = 16
@@ -153,6 +155,8 @@ class Scheduler:
         dtype=jnp.float32,
         serve_params: Optional[dict] = None,
         backend: Optional[CacheBackend] = None,
+        executor: Optional[Executor] = None,
+        head_importance: Optional[np.ndarray] = None,
     ):
         if cfg.is_encoder_decoder or cfg.is_vlm:
             raise NotImplementedError(
@@ -173,8 +177,22 @@ class Scheduler:
                    else slotify_params(params, plan, cfg))
         # cache backend: storage layout + admission accounting (DESIGN.md §9)
         self.backend = backend if backend is not None else make_cache_backend(
-            "slot", cfg, ccfg, max_live_tokens=scfg.max_live_tokens)
-        self.state = self.backend.init_state(self.pa, scfg.max_rows, dtype)
+            "slot", cfg, ccfg, max_live_tokens=scfg.max_live_tokens,
+            n_shards=plan.n_shards,
+            max_live_tokens_per_shard=scfg.max_live_tokens_per_shard)
+        # executor: the compiled StepFns the hot loop runs (DESIGN.md §10);
+        # sp/pa are StepFn *arguments*, so replans swap placements through
+        # the same executable — no retrace
+        self.executor = (executor if executor is not None
+                         else make_executor("local", cfg, ccfg))
+        # per-head weights for importance-driven policies (headkv): admission
+        # prefills must compress with the same budgets the profile was
+        # measured under, or realized loads drift from the plan
+        self.head_importance = head_importance
+        # born sharded: the mesh executor lays the empty state out under its
+        # decode specs, so the cache never sits replicated on one device
+        self.state = self.executor.shard_state(
+            self.backend.init_state(self.pa, scfg.max_rows, dtype))
 
         # persisted straggler speed factors (set by a speed-aware replan):
         # imbalance() and every later replan score/plan against them, so an
@@ -191,14 +209,13 @@ class Scheduler:
         self.n_preemptions = 0
         self.replan_log: List[dict] = []  # {step, imbalance_before/after}
         self.finished: List[Request] = []
-        self._decode = self._make_decode()
 
     # ---- engine plumbing ---------------------------------------------------
 
-    def _make_decode(self):
-        sp, cfg, pa, ccfg = self.sp, self.cfg, self.pa, self.ccfg
-        return jax.jit(lambda st, act: decode_step(sp, st, cfg, pa, ccfg,
-                                                   active=act))
+    def _decode(self, state, active):
+        """One decode tick through the executor's StepFn."""
+        return self.executor.decode(self.sp, state, self.pa,
+                                    state.last_tokens, active=active)
 
     # ---- load accounting ---------------------------------------------------
 
@@ -278,8 +295,9 @@ class Scheduler:
         req.row = row
         req.admit_step = self.step_idx
         batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
-        sub, logits, _lens = prefill(self.sp, batch, self.cfg, self.pa,
-                                     self.ccfg, rows=jnp.asarray([row]))
+        sub, logits, _lens = self.executor.prefill(
+            self.sp, batch, self.pa, rows=jnp.asarray([row]),
+            head_importance=self.head_importance)
         try:
             self.state = self.backend.splice(self.state, sub,
                                              jnp.asarray([row]))
@@ -435,7 +453,7 @@ class Scheduler:
         self.state = dataclasses.replace(self.state, cache=commit())
         self.plan, self.pa = new_plan, new_pa
         self.sp = slotify_params(self.params, new_plan, self.cfg)
-        self._decode = self._make_decode()
+        # no StepFn rebuild: sp/pa are executor arguments, shapes unchanged
         self.n_replans += 1
         self.replan_log.append(event)
         return event
