@@ -6,7 +6,6 @@ FairKV-DP / SHA (throughput ∝ batch / max-shard-time).
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import (
     DecodeTimeModel,

@@ -8,7 +8,6 @@ from __future__ import annotations
 from benchmarks.common import (
     DecodeTimeModel,
     SIM_MODELS,
-    make_plans,
     realized_lengths,
     v5e_overhead_tokens,
 )

@@ -24,7 +24,8 @@ Two measurements:
 
 ``REPRO_BENCH_SMOKE=1`` shrinks the sweep for CI.
 
-Returns a metrics dict (recorded in ``BENCH_pr3.json`` by ``run.py``).
+Returns a metrics dict (recorded by ``run.py`` — ``BENCH.json`` by
+default; the PR-3-era committed copy lives in ``BENCH_pr3.json``).
 """
 from __future__ import annotations
 

@@ -28,7 +28,8 @@ sustains) plus the analytic device-time gain (max-shard load ratio on the
 measured profile, the fig3-style Eq. 4/5 number) across 2/4/8 shards.
 
 ``REPRO_BENCH_SMOKE=1`` trims the shard sweep for CI.
-Returns a metrics dict (recorded in ``BENCH_pr4.json`` by ``run.py``).
+Returns a metrics dict (recorded by ``run.py`` — ``BENCH.json`` by
+default; the PR-4-era committed copy lives in ``BENCH_pr4.json``).
 """
 from __future__ import annotations
 

@@ -22,9 +22,8 @@ import glob
 import json
 import os
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import List
 
-import numpy as np
 
 PEAK = 197e12
 HBM = 819e9

@@ -1,7 +1,8 @@
 """Benchmark driver: one suite per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV lines (one per measured entity) and
-writes a machine-readable summary (``BENCH_pr4.json`` by default): per-suite
+writes a machine-readable summary (``BENCH.json`` by default — the git sha
+recorded inside identifies the run, so the filename stays stable): per-suite
 wall time, ok flag, whatever metrics dict the suite's ``main()`` returned,
 plus the git sha — so the perf trajectory of this repo is diffable across
 PRs instead of living in scrollback.
@@ -49,6 +50,7 @@ SUITES = {
     "fig6": "benchmarks.fig6_continuous_throughput",
     "fig7": "benchmarks.fig7_paged_memory",
     "fig8": "benchmarks.fig8_fair_copying_tp",
+    "fig9": "benchmarks.fig9_paged_kernel",
     "table3": "benchmarks.table3_quality_proxy",
 }
 
@@ -88,8 +90,9 @@ def main(argv=None) -> None:
                     help="comma-separated suites to run (default: all)")
     ap.add_argument("--skip", default="",
                     help="comma-separated suites to exclude")
-    ap.add_argument("--out", default="BENCH_pr4.json",
-                    help="machine-readable results path ('' disables)")
+    ap.add_argument("--out", default="BENCH.json",
+                    help="machine-readable results path ('' disables); the "
+                         "git sha inside the JSON identifies the run")
     args = ap.parse_args(argv)
 
     if args.list:

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import realized_lengths, timed
+from benchmarks.common import realized_lengths
 from repro.core import cosine_similarity, profile_from_lengths
 
 

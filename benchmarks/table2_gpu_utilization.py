@@ -7,7 +7,6 @@ v5e-derived uniform overhead for the dense part.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import (
     DecodeTimeModel,

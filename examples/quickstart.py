@@ -19,7 +19,6 @@ Run:  PYTHONPATH=src python examples/quickstart.py [--cache-backend paged]
 import argparse
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.api import (
     CompressionConfig,

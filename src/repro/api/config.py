@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional
 
 import jax.numpy as jnp
 

@@ -118,7 +118,8 @@ class Engine:
         # placements without recompiling
         self.executor = make_executor(cfg.executor, cfg.model,
                                       cfg.compression,
-                                      exec_cfg=cfg.executor_cfg, mesh=mesh)
+                                      exec_cfg=cfg.executor_cfg, mesh=mesh,
+                                      paging=cfg.paging)
         # cache storage backend (DESIGN.md §9): "slot" | "paged" | plugin
         self.backend = make_cache_backend(
             cfg.cache_backend, cfg.model, cfg.compression,

@@ -22,7 +22,6 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.api.registry import POLICY_REGISTRY, register_policy
 from repro.compression.base import CompressionConfig, topk_select

@@ -9,9 +9,8 @@ long_500k); each arch advertises which cells apply to it (`shape_skips`).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field, replace
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List
 
 # ---------------------------------------------------------------------------
 # Shapes

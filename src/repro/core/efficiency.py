@@ -13,7 +13,6 @@ This is the measurement harness behind benchmarks/table2, fig3, fig4, fig5.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 import numpy as np
 

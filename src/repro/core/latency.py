@@ -14,7 +14,7 @@ HBM-bound, t = bytes/bw with bytes = weights_per_shard + Σ len·head_dim·2·dt
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import numpy as np
 

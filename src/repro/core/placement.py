@@ -13,7 +13,6 @@ arrays describe both, the runtime chooses the split dimension.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence

@@ -23,7 +23,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.assignment import assign_items, local_search
+from repro.core.assignment import assign_items
 from repro.core.placement import HeadPlacement, LayerPlacement, layer_from_assignment
 
 

@@ -14,7 +14,6 @@ Here profiles come from two sources:
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import numpy as np
 

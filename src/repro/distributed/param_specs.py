@@ -10,7 +10,6 @@ from __future__ import annotations
 from typing import Any, Optional, Tuple
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.distributed.sharding import ShardingRules

@@ -66,16 +66,26 @@ class ExecutorConfig:
 
 
 class Executor:
-    """Interface; see the module docstring for the StepFn contract."""
+    """Interface; see the module docstring for the StepFn contract.
+
+    ``paging`` (a `PagingConfig`, optional) carries the *static* paged
+    decode knobs the StepFns close over — today ``decode_impl``, the paged
+    decode-attention implementation (DESIGN.md §11).  Like the model and
+    compression configs it is trace-static: changing it means a new
+    executor, never a silent retrace.
+    """
 
     name: str = "?"
 
     def __init__(self, model_cfg: ModelConfig, ccfg: CompressionConfig,
-                 exec_cfg: Optional[ExecutorConfig] = None, mesh=None):
+                 exec_cfg: Optional[ExecutorConfig] = None, mesh=None,
+                 paging=None):
         self.cfg = model_cfg
         self.ccfg = ccfg
         self.exec_cfg = exec_cfg or ExecutorConfig()
         self.mesh = mesh
+        self.paging = paging
+        self.paged_impl = "auto" if paging is None else paging.decode_impl
         # actual (re)trace counts, incremented from inside the traced fns —
         # the no-retrace regression observable (a replan must not bump them)
         self.prefill_traces = 0
@@ -152,6 +162,7 @@ class Executor:
 
 def make_executor(name: str, model_cfg: ModelConfig, ccfg: CompressionConfig,
                   exec_cfg: Optional[ExecutorConfig] = None,
-                  mesh=None) -> Executor:
+                  mesh=None, paging=None) -> Executor:
     """Instantiate a registered executor by name."""
-    return get_executor(name)(model_cfg, ccfg, exec_cfg=exec_cfg, mesh=mesh)
+    return get_executor(name)(model_cfg, ccfg, exec_cfg=exec_cfg, mesh=mesh,
+                              paging=paging)

@@ -8,8 +8,6 @@ executable — no retrace (DESIGN.md §10).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,12 +21,14 @@ from repro.serving import engine as _serve
 class LocalExecutor(Executor):
     name = "local"
 
-    def __init__(self, model_cfg, ccfg, exec_cfg=None, mesh=None):
+    def __init__(self, model_cfg, ccfg, exec_cfg=None, mesh=None,
+                 paging=None):
         if mesh is not None:
             raise ValueError(
                 "the 'local' executor runs on a single device and ignores "
                 "meshes; pass executor='mesh' to run on one, or drop mesh=")
-        super().__init__(model_cfg, ccfg, exec_cfg=exec_cfg, mesh=None)
+        super().__init__(model_cfg, ccfg, exec_cfg=exec_cfg, mesh=None,
+                         paging=paging)
         self._prefill_jit = None
         self._decode_jit = None
 
@@ -45,12 +45,13 @@ class LocalExecutor(Executor):
         return jax.jit(fn)
 
     def _build_decode(self):
-        cfg, ccfg = self.cfg, self.ccfg
+        cfg, ccfg, impl = self.cfg, self.ccfg, self.paged_impl
 
         def fn(sp, state, pa, tokens, active, rows):
             self.decode_traces += 1  # runs at trace time only
             return _serve.decode_step(sp, state, cfg, pa, ccfg,
-                                      tokens=tokens, active=active, rows=rows)
+                                      tokens=tokens, active=active, rows=rows,
+                                      paged_impl=impl)
 
         donate = (1,) if self.exec_cfg.donate_state else ()
         return jax.jit(fn, donate_argnums=donate)

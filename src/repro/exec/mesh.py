@@ -36,11 +36,9 @@ parallelism or per-shard capacity scaling, not replication.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
@@ -57,8 +55,10 @@ _FAMILIES = ("dense",)
 class MeshExecutor(Executor):
     name = "mesh"
 
-    def __init__(self, model_cfg, ccfg, exec_cfg=None, mesh=None):
-        super().__init__(model_cfg, ccfg, exec_cfg=exec_cfg, mesh=mesh)
+    def __init__(self, model_cfg, ccfg, exec_cfg=None, mesh=None,
+                 paging=None):
+        super().__init__(model_cfg, ccfg, exec_cfg=exec_cfg, mesh=mesh,
+                         paging=paging)
         if mesh is None:
             raise ValueError(
                 "executor='mesh' needs a mesh; build one with "
@@ -226,7 +226,7 @@ class MeshExecutor(Executor):
     # ---- decode ------------------------------------------------------------
 
     def _build_decode(self, sp_specs, state_specs):
-        cfg, ccfg = self.cfg, self.ccfg
+        cfg, ccfg, impl = self.cfg, self.ccfg, self.paged_impl
         ec = self.exec_cfg
 
         def inner(sp, state, pa, tokens, active, rows):
@@ -234,14 +234,21 @@ class MeshExecutor(Executor):
             return _serve.decode_step(sp, state, cfg, pa, ccfg,
                                       tokens=tokens, active=active, rows=rows,
                                       model_axis=ec.model_axis,
-                                      data_axis=ec.data_axis)
+                                      data_axis=ec.data_axis,
+                                      paged_impl=impl)
 
         d = ec.data_axis
+        # the static replication checker stays on for XLA-only decode; a
+        # Pallas kernel in the trace (TPU, impl="pallas", or forced
+        # interpret) has no replication rule, so the check is dropped there
+        # (semantics unchanged — ops.pallas_in_decode)
+        from repro.kernels.ops import pallas_in_decode
         fn = shard_map(
             inner, mesh=self.mesh,
             in_specs=(sp_specs, state_specs, self._pa_specs(), P(d), P(d),
                       P(d)),
-            out_specs=(state_specs, P(d)))
+            out_specs=(state_specs, P(d)),
+            check_rep=not pallas_in_decode(self.paged_impl))
         donate = (1,) if ec.donate_state else ()
         return jax.jit(fn, donate_argnums=donate)
 

@@ -1,7 +1,7 @@
 """Paged slot-layout decode attention: block gather + ``fairkv_decode``.
 
 The paged cache stores each (slot, row)'s KV in fixed-size blocks
-(``repro.paging``); decode attention reconstructs the exact contiguous
+(``repro.paging``); this path reconstructs the exact contiguous
 ``(S, B, C, Dh)`` views the FairKV decode kernel already consumes by
 gathering each row's blocks and reshaping — logical column ``c`` lives at
 offset ``c % bs`` of block ``table[c // bs]``, so the gathered view is
@@ -9,9 +9,16 @@ offset ``c % bs`` of block ``table[c // bs]``, so the gathered view is
 and the kernel's length masking guarantees nothing outside that prefix
 reaches the output.  Reusing the kernel this way keeps one set of masking /
 online-softmax semantics for both backends (validated by the parity property
-test in tests/test_paging.py); HBM traffic for the gather is proportional to
-the *allocated* blocks, i.e. to the realized retained lengths — the same
-quantity FairKV balances.
+test in tests/test_paging.py).
+
+The cost is bandwidth: the gather **materializes capacity-sized views** —
+it writes (and the kernel re-reads) the full ``S·B·C`` columns every decode
+step, null-backed garbage included — so its HBM traffic is paid at
+slot-cache scale regardless of how little the compression retained.  The
+native kernel (`kernels/paged_fairkv_decode.py`, ``ops.paged_fairkv_decode``
+with ``impl="pallas"``) removes that materialization; the gather stays as
+(a) the block→contiguous primitive migration and ``paged_to_slot`` build on
+and (b) an XLA-only fallback/debug path (DESIGN.md §11).
 
 The pure-jnp oracle is ``ref.paged_fairkv_decode_ref``.
 """
@@ -45,7 +52,7 @@ def paged_gather_views(
     return k, v, pos
 
 
-def paged_fairkv_decode(
+def paged_fairkv_decode_gather(
     q: jnp.ndarray,  # (B, S, G, Dh)
     k_pool: jnp.ndarray,  # (N, bs, Dh)
     v_pool: jnp.ndarray,  # (N, bs, Dh)
@@ -60,8 +67,8 @@ def paged_fairkv_decode(
     block_c: int = 128,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
-    """Decode attention over a paged layer — same contract as
-    ``ops.fairkv_decode`` with (k, v, k_pos) replaced by (pools, table)."""
+    """Gather-based paged decode — same contract as
+    ``ops.paged_fairkv_decode`` (which dispatches here for ``impl="gather"``)."""
     k, v, k_pos = paged_gather_views(k_pool, v_pool, pos_pool, block_table,
                                      capacity)
     return K.fairkv_decode(q, k, v, lengths, attn_cap=attn_cap, k_pos=k_pos,

@@ -1,0 +1,193 @@
+"""Pallas TPU kernel: native paged decode attention over block pools.
+
+The gather path (`kernels/paged_decode.py`) materializes each row's blocks
+into a full capacity-sized ``(S, B, C, Dh)`` contiguous view before reusing
+the slot kernel, so its decode HBM traffic is paid at *slot-cache* scale
+even when compression retained a fraction of the capacity.  This kernel is
+the paged analog of vLLM's PagedAttention: it consumes the ``(N, bs, Dh)``
+pools and the ``(S, B, M)`` block table directly, so HBM→VMEM traffic (the
+decode bottleneck) is proportional to the **allocated blocks** — the
+realized retained lengths FairKV balances across shards (DESIGN.md §11).
+
+Design (TPU-adapted flash-decoding over block tables):
+- grid = (S, B, M); one program attends one (slot, row) over one pool
+  block of ``bs`` positions (logical columns ``[j·bs, (j+1)·bs)``).
+- the block table and ``lengths`` ride in scalar prefetch; the K/V
+  BlockSpec index maps resolve ``table[s, b, j]`` per grid step.  Steps
+  past ``ceil(len/bs)`` clamp to the *last valid* block's pool index, so
+  consecutive grid steps map to the same block and the Pallas TPU pipeline
+  skips the redundant copy — null and past-length blocks cost no bandwidth.
+- rows with no valid blocks resolve to the table's first entry (the null
+  block); its garbage never reaches the output because the in-kernel
+  length mask zeroes every score past ``lengths[s, b]``.
+- online softmax (m, l, acc) in VMEM scratch, fp32; the final grid step
+  writes ``acc / l`` (exact zeros for rows the slot does not own).
+- sliding-window masking uses the pool's per-entry absolute positions
+  (gemma2 local layers / hymba) and gemma2's attention softcap is applied
+  before masking, matching the slot kernel bit-for-bit on the same math.
+
+Validated in interpret mode against ``ref.paged_fairkv_decode_ref``
+(tests/test_paged_kernel.py); dispatched via ``ops.paged_fairkv_decode``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_compat import compiler_params
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    # scalar prefetch
+    table_ref,  # (S, B, M) int32 pool block ids; <=0 = null
+    lengths_ref,  # (S, B) int32
+    q_pos_ref,  # (B,) int32
+    # inputs
+    q_ref,  # (1, 1, G, Dh)
+    k_ref,  # (1, bs, Dh) — one pool block
+    v_ref,  # (1, bs, Dh)
+    kpos_ref,  # (1, bs) int32
+    # output
+    o_ref,  # (1, 1, G, Dh)
+    # scratch
+    acc_ref,  # (G, Dh) f32
+    m_ref,  # (G, 1) f32
+    l_ref,  # (G, 1) f32
+    *,
+    bs: int,
+    n_blocks: int,
+    scale: float,
+    attn_cap: float,
+    window: int,
+):
+    s, b, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    ln = lengths_ref[s, b]
+    n_valid = (ln + bs - 1) // bs
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(j < n_valid)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, Dh)
+        k = k_ref[0].astype(jnp.float32)  # (bs, Dh)
+        scores = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (G, bs)
+        if attn_cap > 0:
+            scores = attn_cap * jnp.tanh(scores / attn_cap)
+        offs = j * bs + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+        valid = offs < ln  # masks the last block's partial fill too
+        if window > 0:
+            kp = kpos_ref[0]  # (bs,) int32 absolute entry positions
+            qp = q_pos_ref[b]
+            valid &= kp[None, :] > (qp - window)
+        scores = jnp.where(valid, scores, NEG_INF)
+        m_prev = m_ref[...]  # (G, 1)
+        m_new = jnp.maximum(m_prev, scores.max(axis=1, keepdims=True))
+        # explicit mask: when every entry is masked, m_new stays NEG_INF and
+        # exp(NEG_INF - NEG_INF) would be 1 — the mask zeroes it instead
+        p = jnp.where(valid, jnp.exp(scores - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        m_ref[...] = m_new
+        v = v_ref[0].astype(jnp.float32)  # (bs, Dh)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + pv
+
+    @pl.when(j == n_blocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        out = acc_ref[...] / jnp.where(l > 0, l, 1.0)
+        out = jnp.where(l > 0, out, 0.0)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def paged_fairkv_decode_pallas(
+    q: jnp.ndarray,  # (B, S, G, Dh)
+    k_pool: jnp.ndarray,  # (N, bs, Dh) — one layer's key pool
+    v_pool: jnp.ndarray,  # (N, bs, Dh)
+    pos_pool: jnp.ndarray,  # (N, bs) int32
+    block_table: jnp.ndarray,  # (S, B, M) int32; <=0 = null block
+    lengths: jnp.ndarray,  # (S, B) int32
+    capacity: int,
+    attn_cap: float = 0.0,
+    q_pos: Optional[jnp.ndarray] = None,  # (B,) int32
+    window: int = 0,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Decode attention over one paged layer — same contract as
+    ``ref.paged_fairkv_decode_ref``, consuming pools + table directly."""
+    B, S, G, Dh = q.shape
+    N, bs, _ = k_pool.shape
+    M = block_table.shape[2]
+    if M * bs < capacity:
+        raise ValueError(
+            f"block table spans {M}x{bs} tokens < capacity {capacity}")
+    table = jnp.asarray(block_table, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    if q_pos is None:
+        q_pos = jnp.zeros((B,), jnp.int32)
+
+    def q_map(s, b, j, tbl, lens, qp):
+        return (b, s, 0, 0)
+
+    def block_id(s, b, j, tbl, lens):
+        # clamp past-length grid steps to the last valid block so
+        # consecutive steps map to equal indices (pipeline skips the copy);
+        # rows with no valid blocks resolve to entry 0 (the null block)
+        ln = lens[s, b]
+        last_valid = jnp.maximum((ln + bs - 1) // bs - 1, 0)
+        jj = jnp.minimum(j, last_valid)
+        return jnp.maximum(tbl[s, b, jj], 0)
+
+    def kv_map(s, b, j, tbl, lens, qp):
+        return (block_id(s, b, j, tbl, lens), 0, 0)
+
+    def kpos_map(s, b, j, tbl, lens, qp):
+        return (block_id(s, b, j, tbl, lens), 0)
+
+    def o_map(s, b, j, tbl, lens, qp):
+        return (b, s, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(S, B, M),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, Dh), q_map),
+            pl.BlockSpec((1, bs, Dh), kv_map),
+            pl.BlockSpec((1, bs, Dh), kv_map),
+            pl.BlockSpec((1, bs), kpos_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dh), o_map),
+        scratch_shapes=[
+            pltpu.VMEM((G, Dh), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _kernel, bs=bs, n_blocks=M, scale=1.0 / math.sqrt(Dh),
+        attn_cap=attn_cap, window=window)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, S, G, Dh), q.dtype),
+        interpret=interpret,
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(table, lengths, q_pos, q, k_pool, v_pool, pos_pool)
+    return out

@@ -7,7 +7,7 @@ are also the production fallback path on CPU and in the XLA-only dry-run.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -65,7 +65,8 @@ def _engine_config(args, max_seq_len: int, batch_cap: int,
         scheduler=scheduler,
         cache_backend=args.cache_backend,
         paging=PagingConfig(block_size=args.block_size,
-                            n_blocks=args.pool_blocks),
+                            n_blocks=args.pool_blocks,
+                            decode_impl=args.paged_impl),
         executor=args.executor)
 
 
@@ -203,6 +204,11 @@ def main() -> None:
     ap.add_argument("--pool-blocks", type=int, default=0,
                     help="paged backend: blocks per layer pool "
                          "(0 = slot-equivalent worst case)")
+    ap.add_argument("--paged-impl", default="auto",
+                    choices=["auto", "pallas", "gather", "jnp"],
+                    help="paged backend: decode-attention implementation "
+                         "(DESIGN.md §11; auto = native pallas kernel on "
+                         "TPU, jnp oracle elsewhere)")
     # --- executor (DESIGN.md §10) --------------------------------------------
     ap.add_argument("--executor", default="local",
                     help=f"device execution strategy; registered: "

@@ -15,14 +15,12 @@ which exercises the uncompressed long-context path where the arch allows it
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import api

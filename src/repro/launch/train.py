@@ -12,12 +12,9 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import SHAPES, get_config, get_smoke_config
 from repro.configs.base import InputShape
-from repro.distributed.sharding import train_rules, use_rules
-from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import init_params
 from repro.training import (
     OptimizerConfig,

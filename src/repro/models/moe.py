@@ -14,7 +14,7 @@ work, implemented here as a beyond-paper extension).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

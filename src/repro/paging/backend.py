@@ -19,7 +19,7 @@ fails fast at submit (`never_fits`).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -28,11 +28,7 @@ from repro.api.registry import register_cache_backend
 from repro.cache.slot_cache import PlanArrays
 from repro.cache.slot_cache import migrate_cache as migrate_slot_cache
 from repro.compression.policies import layer_keep_bound
-from repro.paging.block_pool import (
-    BlockPool,
-    PoolExhausted,
-    blocks_for_tokens,
-)
+from repro.paging.block_pool import BlockPool
 from repro.paging.paged_cache import (
     PagedCache,
     build_table,

@@ -20,7 +20,7 @@ reuse blocks; today every block has refcount 1 while allocated.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterable, List, Optional, Sequence
+from typing import Iterable, List, Optional
 
 import numpy as np
 
@@ -45,16 +45,30 @@ class PagingConfig:
     allocated) so nothing can ever be preempted — useful as a drop-in
     correctness mode.  Undersize it deliberately to trade preemptions for
     HBM (the fig7 benchmark's equal-HBM comparison).
+    ``decode_impl``: the paged decode-attention implementation
+    (``kernels.ops.PAGED_DECODE_IMPLS``): "pallas" is the native
+    block-table kernel (HBM traffic proportional to allocated blocks,
+    DESIGN.md §11), "gather" materializes capacity-sized views and reuses
+    the slot kernel, "jnp" is the pure-jnp oracle, and "auto" (default)
+    picks pallas on TPU and jnp elsewhere.  Validated here at construction
+    (`EngineConfig` composes this config), so a typo fails before any
+    StepFn traces.
     """
 
     block_size: int = 16
     n_blocks: int = 0
+    decode_impl: str = "auto"
 
     def __post_init__(self):
         if self.block_size < 1:
             raise ValueError(f"block_size must be >= 1, got {self.block_size}")
         if self.n_blocks < 0:
             raise ValueError(f"n_blocks must be >= 0, got {self.n_blocks}")
+        from repro.kernels.ops import PAGED_DECODE_IMPLS
+        if self.decode_impl not in PAGED_DECODE_IMPLS:
+            raise ValueError(
+                f"unknown decode_impl {self.decode_impl!r}; known: "
+                f"{list(PAGED_DECODE_IMPLS)}")
 
 
 def blocks_for_tokens(tokens: int, block_size: int) -> int:

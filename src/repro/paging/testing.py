@@ -1,0 +1,47 @@
+"""Shared paged-layer fixture for kernel parity tests and benchmarks.
+
+Builds one layer's (pools, table, lengths) the adversarial way: block ids
+handed out in *shuffled* order (so nothing accidentally relies on
+contiguity), every pool entry a valid column does not overwrite left as
+garbage (so missing masking surfaces as a parity failure, not silent
+zeros), absolute positions written per column.  Used by
+``tests/test_paged_kernel.py`` and ``benchmarks/fig9_paged_kernel.py`` so
+the committed fig9 parity number always validates the same construction
+the tests gate.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_paged_layer(rng, S, B, C, bs, Dh, empty_frac=0.3, dtype=np.float32,
+                     lengths: Optional[np.ndarray] = None):
+    """One layer's (k_pool, v_pool, pos_pool, block_table, lengths) as jnp
+    arrays; ``lengths`` defaults to a ragged draw with ``empty_frac`` of
+    the (slot, row) pairs fully empty (all-null table rows)."""
+    M = -(-C // bs)
+    if lengths is None:
+        lengths = rng.integers(1, C + 1, size=(S, B)).astype(np.int32)
+        lengths[rng.random((S, B)) < empty_frac] = 0
+    else:
+        lengths = np.asarray(lengths, np.int32)
+    need = -(-lengths // bs)
+    N = int(need.sum()) + 2
+    ids = list(rng.permutation(np.arange(1, N)))
+    table = np.zeros((S, B, M), np.int32)  # 0 = null block
+    k_pool = rng.normal(size=(N, bs, Dh)).astype(dtype)
+    v_pool = rng.normal(size=(N, bs, Dh)).astype(dtype)
+    # garbage positions everywhere a valid column does not overwrite them
+    pos_pool = rng.integers(-1, 10**6, size=(N, bs)).astype(np.int32)
+    for s in range(S):
+        for b in range(B):
+            n = int(need[s, b])
+            blocks = [ids.pop() for _ in range(n)]
+            table[s, b, :n] = blocks
+            for c in range(int(lengths[s, b])):
+                pos_pool[blocks[c // bs], c % bs] = c  # absolute positions
+    return (jnp.asarray(k_pool), jnp.asarray(v_pool), jnp.asarray(pos_pool),
+            jnp.asarray(table), jnp.asarray(lengths))

@@ -22,8 +22,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from dataclasses import dataclass
-from functools import partial
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,7 +44,6 @@ from repro.configs.base import ModelConfig
 from repro.core.placement import HeadPlacement
 from repro.distributed.sharding import constrain
 from repro.kernels import ops as K
-from repro.kernels.paged_decode import paged_fairkv_decode
 from repro.models import layers as L
 from repro.models import ssm as S
 from repro.models import transformer as M
@@ -339,6 +337,7 @@ def decode_step(
     rows: Optional[jnp.ndarray] = None,
     model_axis: Optional[str] = None,
     data_axis: Optional[str] = None,
+    paged_impl: str = "auto",
 ) -> Tuple[ServeState, jnp.ndarray]:
     """One decode step for the whole batch.  Returns (state, logits (B, V)).
 
@@ -362,6 +361,12 @@ def decode_step(
     (model shard of the slot, data shard of the row) device), so the
     block-id localization needs both indices.  ``None`` (default) is the
     single-device path.
+
+    ``paged_impl`` selects the paged decode-attention implementation
+    (``kernels.ops.PAGED_DECODE_IMPLS``: native "pallas" kernel, legacy
+    "gather", "jnp" oracle, or "auto" — DESIGN.md §11).  It is *static*
+    configuration (the executors close over ``PagingConfig.decode_impl``),
+    so it never affects the StepFn's trace signature.
     """
     tokens = state.last_tokens if tokens is None else tokens
     B = tokens.shape[0]
@@ -380,7 +385,7 @@ def decode_step(
             attn_flat, cache = _decode_attention(pl, hn, positions, cfg, i,
                                                  cache, plan, state.decode_steps,
                                                  ccfg, active, rows, model_axis,
-                                                 data_axis)
+                                                 data_axis, paged_impl)
             a = _slot_rms_norm(attn_flat, pl["attn_out_norm_s"],
                                cfg.n_heads * cfg.head_dim, cfg.rms_eps,
                                model_axis)
@@ -396,7 +401,7 @@ def decode_step(
             attn_flat, cache = _decode_attention(pl, hn, positions, cfg, i,
                                                  cache, plan, state.decode_steps,
                                                  ccfg, active, rows, model_axis,
-                                                 data_axis)
+                                                 data_axis, paged_impl)
             h = h + _decode_slot_o(pl, attn_flat, cfg, model_axis)
         if cfg.is_encoder_decoder:
             hc = L.rms_norm(h, pl["ln_cross"], cfg.rms_eps)
@@ -427,7 +432,7 @@ def decode_step(
 
 def _decode_attention(pl, hn, positions, cfg, layer_idx, cache, plan,
                       decode_steps, ccfg, active=None, rows=None,
-                      model_axis=None, data_axis=None):
+                      model_axis=None, data_axis=None, paged_impl="auto"):
     """Slot-layout attention for one new token; appends to the cache."""
     B = hn.shape[0]
     G, Dh = cfg.q_per_kv, cfg.head_dim
@@ -450,7 +455,8 @@ def _decode_attention(pl, hn, positions, cfg, layer_idx, cache, plan,
     window = M.layer_window(cfg, layer_idx)
     if isinstance(cache, PagedCache):
         # paged backend (DESIGN.md §9): block-pool storage, same append
-        # index rule and decode masking via block-gathered views.  Appends
+        # index rule and decode masking through `ops.paged_fairkv_decode`
+        # (native block-table kernel on TPU by default, §11).  Appends
         # are always scatters into the pool (the onehot trade-off does not
         # arise: writes touch one block, not a full cache slice).
         capacity = ccfg.static_capacity()
@@ -477,11 +483,11 @@ def _decode_attention(pl, hn, positions, cfg, layer_idx, cache, plan,
                                    v_new.swapaxes(0, 1), own, decode_steps,
                                    capacity, ring=max(1, ccfg.decode_margin),
                                    table_layer=table_l)
-        out = paged_fairkv_decode(
+        out = K.paged_fairkv_decode(
             q, cache.k_pool[layer_idx], cache.v_pool[layer_idx],
             cache.pos_pool[layer_idx], table_l,
             cache.lengths[layer_idx], capacity, attn_cap=cfg.attn_softcap,
-            q_pos=positions, window=window)
+            q_pos=positions, window=window, impl=paged_impl)
         return out, cache
     cache = append_token(cache, layer_idx, k_new.swapaxes(0, 1),
                          v_new.swapaxes(0, 1), own, decode_steps,

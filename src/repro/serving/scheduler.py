@@ -184,7 +184,8 @@ class Scheduler:
         # sp/pa are StepFn *arguments*, so replans swap placements through
         # the same executable — no retrace
         self.executor = (executor if executor is not None
-                         else make_executor("local", cfg, ccfg))
+                         else make_executor("local", cfg, ccfg,
+                                            paging=self.backend.paging))
         # per-head weights for importance-driven policies (headkv): admission
         # prefills must compress with the same budgets the profile was
         # measured under, or realized loads drift from the plan

@@ -22,9 +22,8 @@ import json
 import os
 import re
 import shutil
-import tempfile
 import threading
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

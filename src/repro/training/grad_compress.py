@@ -13,7 +13,6 @@ dequantize pair and the error-feedback update are unit-tested standalone.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Tuple
 
 import jax

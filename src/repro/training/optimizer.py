@@ -7,7 +7,7 @@ the live params stay bf16, the standard mixed-precision training recipe.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, NamedTuple, Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

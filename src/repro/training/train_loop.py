@@ -6,7 +6,6 @@ buffers: (params, opt_state, batch) → (params, opt_state, metrics).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from functools import partial
 from typing import Dict, Tuple
 
@@ -20,7 +19,6 @@ from repro.training.optimizer import (
     OptimizerConfig,
     adamw_update,
     cast_like,
-    init_optimizer,
 )
 
 

@@ -8,7 +8,6 @@ facade is a pure re-packaging, not a behavioral fork.
 import numpy as np
 import pytest
 
-import jax
 import jax.numpy as jnp
 
 from repro.api import (

@@ -5,9 +5,7 @@ import subprocess
 import sys
 import textwrap
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 

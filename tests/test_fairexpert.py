@@ -1,6 +1,5 @@
 """FairExpert (beyond-paper MoE extension): expert-load balancing."""
 import numpy as np
-import pytest
 
 from repro.core.fairexpert import (
     expert_dispatch_stats,

@@ -1,0 +1,284 @@
+"""Native paged decode kernel (`kernels/paged_fairkv_decode.py`): interpret
+mode vs the ``ref.paged_fairkv_decode_ref`` oracle over ragged lengths,
+null-block tables, partial last blocks, window + softcap, and dtypes; the
+``ops.paged_fairkv_decode`` impl dispatch; and gather↔native↔slot three-way
+token parity through `Engine.generate` on the local and 2x4-mesh executors
+(the mesh case runs in a subprocess so the fake-device count is set before
+the first jax import, mirroring tests/test_executor.py).
+"""
+import json
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops as K
+from repro.kernels.paged_fairkv_decode import paged_fairkv_decode_pallas
+from repro.kernels.ref import paged_fairkv_decode_ref
+from repro.paging.testing import make_paged_layer
+
+from tests._hypothesis_compat import given, settings, st
+
+
+def _compare(rng, S, B, G, Dh, C, bs, window=0, cap=0.0, dtype=jnp.float32,
+             lengths=None):
+    kp, vp, pp, tbl, lens = make_paged_layer(
+        rng, S, B, C, bs, Dh, dtype=np.dtype(dtype), lengths=lengths)
+    q = jnp.asarray(rng.normal(size=(B, S, G, Dh)), dtype)
+    qpos = jnp.full((B,), C + 7, jnp.int32)
+    ref = paged_fairkv_decode_ref(q, kp, vp, pp, tbl, lens, C, cap,
+                                  q_pos=qpos, window=window)
+    out = paged_fairkv_decode_pallas(q, kp, vp, pp, tbl, lens, C,
+                                     attn_cap=cap, q_pos=qpos, window=window,
+                                     interpret=True)
+    return float(jnp.abs(out.astype(jnp.float32)
+                         - ref.astype(jnp.float32)).max())
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle (interpret mode)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10)
+@given(S=st.integers(2, 5), B=st.integers(1, 4), G=st.integers(1, 8),
+       C=st.integers(6, 200), bs=st.sampled_from([2, 8, 16, 32, 64]),
+       seed=st.integers(0, 10))
+def test_paged_kernel_ragged_lengths(S, B, G, C, bs, seed):
+    """Random ragged lengths (empty rows included), shuffled block ids,
+    partial last blocks — the kernel must match the oracle everywhere."""
+    rng = np.random.default_rng(seed)
+    assert _compare(rng, S, B, G, 32, C, bs) < 1e-5
+
+
+@pytest.mark.parametrize("S,B,G,Dh,C,bs", [
+    (4, 3, 4, 64, 96, 16),    # several blocks, ragged
+    (2, 2, 8, 64, 256, 32),   # GQA 8:1
+    (3, 2, 1, 128, 200, 64),  # MHA, capacity not a block multiple
+    (2, 2, 2, 32, 64, 64),    # single block per row
+])
+def test_paged_kernel_shapes(S, B, G, Dh, C, bs):
+    rng = np.random.default_rng(0)
+    assert _compare(rng, S, B, G, Dh, C, bs) < 1e-5
+
+
+def test_paged_kernel_null_block_tables():
+    """Rows with zero length hold all-null tables; their output must be
+    exactly 0 (the §2 psum-reassembly contract) even though the null block
+    holds garbage."""
+    rng = np.random.default_rng(1)
+    S, B, G, Dh, C, bs = 3, 2, 4, 32, 96, 16
+    lengths = np.zeros((S, B), np.int32)
+    kp, vp, pp, tbl, lens = make_paged_layer(rng, S, B, C, bs, Dh,
+                                             lengths=lengths)
+    assert int(np.asarray(tbl).max()) == 0  # nothing allocated
+    q = jnp.asarray(rng.normal(size=(B, S, G, Dh)), jnp.float32)
+    out = paged_fairkv_decode_pallas(q, kp, vp, pp, tbl, lens, C,
+                                     interpret=True)
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+def test_paged_kernel_mixed_null_rows():
+    """Empty and full rows in one grid: the null-row clamp must not leak
+    into neighbouring (slot, row) programs."""
+    rng = np.random.default_rng(2)
+    S, B, C, bs = 2, 3, 64, 16
+    lengths = np.array([[0, C, 7], [C - 1, 0, bs]], np.int32)
+    assert _compare(rng, S, B, 4, 32, C, bs, lengths=lengths) < 1e-5
+
+
+def test_paged_kernel_last_block_partial_fill():
+    """Lengths straddling a block boundary: the final block's tail past
+    ``len`` holds garbage and must be masked."""
+    rng = np.random.default_rng(3)
+    S, B, C, bs = 3, 2, 96, 16
+    lengths = np.array([[1, bs - 1], [bs, bs + 1], [C - 1, C]], np.int32)
+    assert _compare(rng, S, B, 4, 32, C, bs, lengths=lengths) < 1e-5
+
+
+def test_paged_kernel_window():
+    rng = np.random.default_rng(4)
+    assert _compare(rng, 3, 3, 4, 32, 96, 16, window=40) < 1e-5
+
+
+def test_paged_kernel_softcap():
+    rng = np.random.default_rng(5)
+    assert _compare(rng, 2, 2, 8, 64, 128, 16, cap=50.0) < 1e-5
+
+
+def test_paged_kernel_window_and_softcap():
+    rng = np.random.default_rng(6)
+    assert _compare(rng, 3, 2, 4, 32, 96, 16, window=30, cap=30.0) < 1e-5
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-5),
+                                       (jnp.bfloat16, 0.03)])
+def test_paged_kernel_dtypes(dtype, tol):
+    rng = np.random.default_rng(7)
+    assert _compare(rng, 3, 2, 4, 64, 96, 16, dtype=dtype) < tol
+
+
+def test_paged_kernel_rejects_short_table():
+    rng = np.random.default_rng(8)
+    kp, vp, pp, tbl, lens = make_paged_layer(rng, 2, 2, 32, 16, 8)
+    q = jnp.zeros((2, 2, 2, 8), jnp.float32)
+    with pytest.raises(ValueError, match="capacity"):
+        paged_fairkv_decode_pallas(q, kp, vp, pp, tbl, lens, 64,
+                                   interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# ops dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_ops_dispatch_impls_agree():
+    rng = np.random.default_rng(9)
+    kp, vp, pp, tbl, lens = make_paged_layer(rng, 3, 2, 96, 16, 32)
+    q = jnp.asarray(rng.normal(size=(2, 3, 4, 32)), jnp.float32)
+    qpos = jnp.full((2,), 99, jnp.int32)
+    outs = {impl: K.paged_fairkv_decode(q, kp, vp, pp, tbl, lens, 96,
+                                        q_pos=qpos, impl=impl)
+            for impl in ("jnp", "gather", "pallas")}
+    if K._force_interpret():
+        # the gather's inner slot kernel is pallas-interpret here (the CI
+        # kernels-interpret gate) — reduction order differs from the ref
+        assert float(jnp.abs(outs["gather"] - outs["jnp"]).max()) < 1e-5
+    else:
+        # jnp and gather are the same math in the same order -> exact
+        assert bool((outs["jnp"] == outs["gather"]).all())
+    assert float(jnp.abs(outs["pallas"] - outs["jnp"]).max()) < 1e-5
+
+
+def test_ops_dispatch_rejects_unknown_impl():
+    q = jnp.zeros((1, 1, 1, 8), jnp.float32)
+    with pytest.raises(ValueError, match="bogus"):
+        K.paged_fairkv_decode(q, q, q, q[..., 0], q[..., 0, 0], None, 8,
+                              impl="bogus")
+
+
+def test_force_interpret_env_routes_auto_to_pallas(monkeypatch):
+    """REPRO_PALLAS_INTERPRET=1 (the CI kernels-interpret gate) must route
+    "auto" dispatch onto the Pallas kernels in interpret mode off-TPU."""
+    rng = np.random.default_rng(10)
+    kp, vp, pp, tbl, lens = make_paged_layer(rng, 2, 2, 64, 16, 32)
+    q = jnp.asarray(rng.normal(size=(2, 2, 4, 32)), jnp.float32)
+    ref = K.paged_fairkv_decode(q, kp, vp, pp, tbl, lens, 64, impl="jnp")
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert K._force_interpret()
+    out = K.paged_fairkv_decode(q, kp, vp, pp, tbl, lens, 64, impl="auto")
+    assert float(jnp.abs(out - ref).max()) < 1e-5
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert not K._force_interpret()
+
+
+def test_paging_config_validates_decode_impl():
+    from repro.api import EngineConfig, PagingConfig
+    with pytest.raises(ValueError, match="pallas"):
+        PagingConfig(decode_impl="cuda")
+    cfg = EngineConfig.smoke("minitron-8b",
+                             paging=PagingConfig(decode_impl="pallas"))
+    assert cfg.paging.decode_impl == "pallas"
+
+
+# ---------------------------------------------------------------------------
+# three-way token parity through Engine.generate (local executor)
+# ---------------------------------------------------------------------------
+
+
+def _engine_cfg(backend, impl="auto", rows=2, T=16, gen=3):
+    from repro.api import (CompressionConfig, EngineConfig, PagingConfig,
+                           PlannerConfig, SchedulerConfig)
+    return EngineConfig.smoke(
+        "minitron-8b", n_shards=4, max_seq_len=T + gen + 8,
+        compression=CompressionConfig(policy="ada_snapkv", budget=16,
+                                      alpha_max=2.0, obs_window=8, sink=2,
+                                      decode_margin=8),
+        planner=PlannerConfig(mode="fairkv_dp", extra_copies=4,
+                              batch_cap=rows),
+        scheduler=SchedulerConfig(max_rows=rows, enable_replan=False),
+        cache_backend=backend,
+        paging=PagingConfig(block_size=8, decode_impl=impl))
+
+
+def test_engine_generate_three_way_token_parity_local():
+    """gather, native-pallas (interpret), and jnp paged decode — and the
+    slot backend — produce identical tokens through `Engine.generate`."""
+    from repro.api import Engine
+    B, T, GEN = 2, 16, 3
+    prompts = np.random.default_rng(0).integers(0, 256, (B, T))
+    slot_eng = Engine.build(_engine_cfg("slot"))
+    base = slot_eng.generate(prompts, GEN)
+    for impl in ("jnp", "gather", "pallas"):
+        eng = Engine.build(_engine_cfg("paged", impl), params=slot_eng.params)
+        res = eng.generate(prompts, GEN)
+        assert np.array_equal(base.tokens, res.tokens), impl
+        assert np.array_equal(base.lengths, res.lengths), impl
+        # one decode trace per engine: the impl knob is static config
+        assert eng.executor.decode_traces == 1, impl
+
+
+# ---------------------------------------------------------------------------
+# three-way token parity on the 2x4 mesh executor (subprocess: the fake
+# device count must be set before the first jax import)
+# ---------------------------------------------------------------------------
+
+
+SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, __SRC__)
+import json
+import numpy as np
+from repro.api import (CompressionConfig, Engine, EngineConfig, PagingConfig,
+                       PlannerConfig, SchedulerConfig)
+from repro.launch.mesh import make_host_mesh
+
+B, T, GEN = 4, 16, 3
+
+def cfg_for(backend, impl, executor):
+    return EngineConfig.smoke(
+        "minitron-8b", n_shards=4, max_seq_len=T + GEN + 8,
+        compression=CompressionConfig(policy="ada_snapkv", budget=16,
+                                      alpha_max=2.0, obs_window=8, sink=2,
+                                      decode_margin=8),
+        planner=PlannerConfig(mode="fairkv_dp", extra_copies=4, batch_cap=B),
+        scheduler=SchedulerConfig(max_rows=B, enable_replan=False),
+        cache_backend=backend, executor=executor,
+        paging=PagingConfig(block_size=8, decode_impl=impl))
+
+prompts = np.random.default_rng(0).integers(0, 256, (B, T))
+loc = Engine.build(cfg_for("slot", "auto", "local"))
+base = loc.generate(prompts, GEN)
+out = {}
+for impl in ("jnp", "gather", "pallas"):
+    mesh = make_host_mesh(model=4, data=2)
+    eng = Engine.build(cfg_for("paged", impl, "mesh"), mesh=mesh,
+                       params=loc.params)
+    res = eng.generate(prompts, GEN)
+    out[impl] = {
+        "tokens_equal": bool(np.array_equal(base.tokens, res.tokens)),
+        "lengths_equal": bool(np.array_equal(base.lengths, res.lengths)),
+        "decode_traces": eng.executor.decode_traces,
+    }
+print(json.dumps(out))
+"""
+
+
+def test_engine_generate_three_way_token_parity_mesh_2x4():
+    """All three paged decode impls on the (data=2, model=4) mesh executor
+    match the local slot baseline token-for-token, one decode trace each."""
+    import repro
+    src = list(repro.__path__)[0].rsplit("/repro", 1)[0]
+    code = SUBPROC.replace("__SRC__", repr(src))
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    results = json.loads(out.stdout.strip().splitlines()[-1])
+    for impl, rec in results.items():
+        assert rec["tokens_equal"], (impl, rec)
+        assert rec["lengths_equal"], (impl, rec)
+        assert rec["decode_traces"] == 1, (impl, rec)

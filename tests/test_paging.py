@@ -9,7 +9,6 @@ from repro.cache.slot_cache import SlotCache, append_token
 from repro.kernels.ref import fairkv_decode_ref, paged_fairkv_decode_ref
 from repro.paging.block_pool import BlockPool, PoolExhausted
 from repro.paging.paged_cache import (
-    PagedCache,
     build_table,
     init_paged_cache,
     max_blocks_per_row,

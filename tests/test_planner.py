@@ -8,8 +8,7 @@ from repro.core import (
     build_plan,
     synthetic_profile,
 )
-from repro.core.assignment import backtracking, greedy_lpt, local_search
-from repro.core.placement import layer_from_assignment
+from repro.core.assignment import backtracking, greedy_lpt
 
 
 # ---------------------------------------------------------------------------

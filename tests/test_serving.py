@@ -11,7 +11,7 @@ import pytest
 from repro.cache.slot_cache import PlanArrays, init_cache, append_token, ring_write_index
 from repro.compression.base import CompressionConfig
 from repro.compression.policies import BALANCED, IMBALANCED, POLICIES, select
-from repro.configs import ALL_ARCHS, get_smoke_config
+from repro.configs import get_smoke_config
 from repro.core import PlannerConfig, build_plan, synthetic_profile
 from repro.models import forward_train, init_params
 from repro.serving import decode_step, prefill, slotify_params

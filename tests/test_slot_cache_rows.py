@@ -1,6 +1,5 @@
 """Row-level slot-cache ops: reset_rows / insert_rows / migrate_cache and
 their interaction with the strided owner mask and ring-buffer appends."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
