@@ -54,7 +54,14 @@ def run_one(planner: str, base_cfg: EngineConfig, params: dict) -> dict:
     out["wall_s"] = time.time() - t0
     out["pct"] = latency_percentiles(eng.finished_requests)
     out["imbalance"] = eng.imbalance()
+    # replan counts come from the obs registry — the same counter the
+    # scheduler increments — not a re-tally of replan_log
+    out["replans_accepted"] = eng.obs.metrics.counter_value(
+        "sched_replans_total", outcome="accepted")
+    out["replans_rejected"] = eng.obs.metrics.counter_value(
+        "sched_replans_total", outcome="rejected")
     assert out["finished"] == out["total"], out
+    assert out["replans_accepted"] == out["replans"], out
     return out
 
 
@@ -81,8 +88,13 @@ def main():
               f"p50_steps={pct['p50_steps']:.0f};"
               f"p99_steps={pct['p99_steps']:.0f};"
               f"p50_s={pct['p50_s']:.3f};p99_s={pct['p99_s']:.3f};"
+              f"p50_ttft_s={pct['p50_ttft_s']:.3f};"
+              f"p99_ttft_s={pct['p99_ttft_s']:.3f};"
+              f"p50_itl_s={pct['p50_itl_s']:.3f};"
+              f"p99_itl_s={pct['p99_itl_s']:.3f};"
               f"steps={r['steps']};"
-              f"mid_stream_admissions={r['mid_stream_admissions']}")
+              f"mid_stream_admissions={r['mid_stream_admissions']};"
+              f"replans={r['replans_accepted']:.0f}")
     gain = (results["fairkv_dp"]["generated_tokens"]
             / results["fairkv_dp"]["wall_s"]) / (
         results["sha"]["generated_tokens"] / results["sha"]["wall_s"])
@@ -92,7 +104,10 @@ def main():
             "tokens_per_s": r["generated_tokens"] / r["wall_s"],
             "p50_steps": r["pct"]["p50_steps"],
             "p99_steps": r["pct"]["p99_steps"],
+            "p50_ttft_s": r["pct"]["p50_ttft_s"],
+            "p50_itl_s": r["pct"]["p50_itl_s"],
             "steps": r["steps"],
+            "replans": r["replans_accepted"],
         } for planner, r in results.items()
     } | {"gain_dp_over_sha": gain}
 

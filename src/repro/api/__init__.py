@@ -97,6 +97,11 @@ _LAZY = {
     "Executor": "repro.exec.base:Executor",
     "ExecutorConfig": "repro.exec.base:ExecutorConfig",
     "make_executor": "repro.exec.base:make_executor",
+    # observability (DESIGN.md §12)
+    "Obs": "repro.obs:Obs",
+    "ObsConfig": "repro.obs:ObsConfig",
+    "MetricsRegistry": "repro.obs:MetricsRegistry",
+    "TraceBuffer": "repro.obs:TraceBuffer",
 }
 
 __all__ = sorted(

@@ -31,6 +31,7 @@ from repro.configs import get_config, get_smoke_config
 from repro.configs.base import ModelConfig
 from repro.core.planner import PLANNER_MODES, PlannerConfig
 from repro.exec.base import ExecutorConfig
+from repro.obs import ObsConfig
 from repro.paging.block_pool import PagingConfig
 from repro.serving.scheduler import SchedulerConfig
 
@@ -69,6 +70,10 @@ class EngineConfig:
     # via mesh=); third parties extend via @repro.api.register_executor
     executor: str = "local"
     executor_cfg: ExecutorConfig = field(default_factory=ExecutorConfig)
+    # observability (DESIGN.md §12): metrics registry + span trace threaded
+    # through scheduler/executor/backend; ObsConfig(enabled=False) swaps
+    # every collection point for shared no-op singletons
+    obs: ObsConfig = field(default_factory=ObsConfig)
 
     def __post_init__(self):
         if not isinstance(self.model, ModelConfig):
@@ -123,6 +128,9 @@ class EngineConfig:
             raise TypeError(
                 f"executor_cfg must be an ExecutorConfig, got "
                 f"{type(self.executor_cfg).__name__}")
+        if not isinstance(self.obs, ObsConfig):
+            raise TypeError(
+                f"obs must be an ObsConfig, got {type(self.obs).__name__}")
 
     # ---- constructors ------------------------------------------------------
 

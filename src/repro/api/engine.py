@@ -44,6 +44,7 @@ from repro.core.planner import PlannerConfig, build_plan
 from repro.core.profiles import profile_from_lengths, synthetic_profile
 from repro.exec.base import make_executor
 from repro.models import init_params
+from repro.obs import Obs
 from repro.serving import engine as _serve
 from repro.serving.cache_backend import make_cache_backend
 from repro.serving.request import Request
@@ -113,13 +114,16 @@ class Engine:
         self.mesh = mesh
         self.pa = PlanArrays.from_plan(plan)
         self.sp = _serve.slotify_params(params, plan, cfg.model)
+        # observability (DESIGN.md §12): one registry + trace per engine,
+        # threaded through the executor, backend, and (lazily) the scheduler
+        self.obs = Obs.build(cfg.obs)
         # executor (DESIGN.md §10): owns the compiled prefill/decode StepFns;
         # weights and plan arrays are StepFn *arguments*, so replans swap
         # placements without recompiling
         self.executor = make_executor(cfg.executor, cfg.model,
                                       cfg.compression,
                                       exec_cfg=cfg.executor_cfg, mesh=mesh,
-                                      paging=cfg.paging)
+                                      paging=cfg.paging, obs=self.obs)
         # cache storage backend (DESIGN.md §9): "slot" | "paged" | plugin
         self.backend = make_cache_backend(
             cfg.cache_backend, cfg.model, cfg.compression,
@@ -127,7 +131,7 @@ class Engine:
             n_shards=cfg.n_shards,
             max_live_tokens_per_shard=cfg.scheduler.max_live_tokens_per_shard,
             pool_partitions=self.executor.pool_partitions,
-            row_partitions=self.executor.row_partitions)
+            row_partitions=self.executor.row_partitions, obs=self.obs)
         self.state: Optional[_serve.ServeState] = None
         self._mode: Optional[str] = None  # "oneshot" | "continuous" (last used)
         # persisted straggler speed factors (set by a speed-aware replan);
@@ -226,6 +230,10 @@ class Engine:
         logits, lengths = self.prefill(prompts)
         jax.block_until_ready(logits)
         prefill_s = time.perf_counter() - t0
+        # one-shot TTFT is the prefill wall (no queue to wait in)
+        self.obs.metrics.histogram(
+            "ttft_s", help="time to first token (queue wait + prefill "
+                           "wall time)").observe(prefill_s)
         # re-house the prefilled cache in the configured backend's layout
         # (identity for "slot"; "paged" allocates blocks proportional to the
         # realized retained lengths).  One-shot mode has no request queue to
@@ -262,6 +270,10 @@ class Engine:
             self.state = state
             jax.block_until_ready(lg)
             step_s.append(time.perf_counter() - t0)
+            self.obs.metrics.histogram(
+                "itl_s", help="inter-token latency (per-request mean in "
+                              "continuous mode; per-step in one-shot mode)"
+                ).observe(step_s[-1])
             tokens.append(np.asarray(state.last_tokens))
             if collect_logits:
                 logits_all.append(np.asarray(lg))
@@ -373,12 +385,14 @@ class Engine:
                     max_live_tokens_per_shard=(
                         self.cfg.scheduler.max_live_tokens_per_shard),
                     pool_partitions=self.executor.pool_partitions,
-                    row_partitions=self.executor.row_partitions),
+                    row_partitions=self.executor.row_partitions,
+                    obs=self.obs),
                 # the executor is shared: its StepFn caches are keyed by
                 # batch shape and cache layout, so one-shot and continuous
                 # traces coexist without evicting each other
                 executor=self.executor,
-                head_importance=self.head_importance)
+                head_importance=self.head_importance,
+                obs=self.obs, plan_profile=self.profile)
             # inherit any one-shot straggler mitigation
             self._scheduler.shard_speeds = self._shard_speeds
         return self._scheduler
@@ -471,6 +485,26 @@ class Engine:
         out = self._ensure_scheduler().run(requests, max_steps=max_steps)
         self._sync_from_scheduler()
         return out
+
+    # ---- observability (DESIGN.md §12) -------------------------------------
+
+    def metrics(self) -> dict:
+        """Deterministic snapshot of every metric family (counters, gauges,
+        histograms with cumulative buckets); ``{}`` when obs is disabled."""
+        return self.obs.metrics.snapshot()
+
+    def metrics_prometheus(self) -> str:
+        """Prometheus text exposition of the metrics registry."""
+        return self.obs.metrics.to_prometheus()
+
+    def metrics_jsonl(self) -> str:
+        """One JSON object per metric series (appendable log format)."""
+        return self.obs.metrics.to_jsonl()
+
+    def trace_export(self) -> str:
+        """Chrome trace-event JSON of the recent span window — load in
+        Perfetto or chrome://tracing."""
+        return self.obs.trace.export_json()
 
     # ---- continuous-mode telemetry ----------------------------------------
 

@@ -30,6 +30,7 @@ regression observable for "replans must not recompile".
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Optional, Tuple
 
@@ -40,6 +41,7 @@ import numpy as np
 from repro.api.registry import get_executor
 from repro.compression.base import CompressionConfig
 from repro.configs.base import ModelConfig
+from repro.obs import NULL_OBS
 
 
 @dataclass(frozen=True)
@@ -79,13 +81,17 @@ class Executor:
 
     def __init__(self, model_cfg: ModelConfig, ccfg: CompressionConfig,
                  exec_cfg: Optional[ExecutorConfig] = None, mesh=None,
-                 paging=None):
+                 paging=None, obs=None):
         self.cfg = model_cfg
         self.ccfg = ccfg
         self.exec_cfg = exec_cfg or ExecutorConfig()
         self.mesh = mesh
         self.paging = paging
         self.paged_impl = "auto" if paging is None else paging.decode_impl
+        # observability handle (DESIGN.md §12): StepFn wall-time histograms
+        # + compile instant events; NULL_OBS (no-op) unless the Engine
+        # facade threads its live Obs through
+        self.obs = obs if obs is not None else NULL_OBS
         # actual (re)trace counts, incremented from inside the traced fns —
         # the no-retrace regression observable (a replan must not bump them)
         self.prefill_traces = 0
@@ -134,6 +140,44 @@ class Executor:
         materialized before the call so every mode shares one trace."""
         raise NotImplementedError
 
+    # ---- observability -----------------------------------------------------
+
+    def _observe_step(self, kind: str, fn, args) -> Tuple:
+        """Run one jitted StepFn call under observation (DESIGN.md §12).
+
+        Records a wall-time histogram sample and a trace span per call, and
+        a compile instant event + counter whenever the call actually
+        (re)traced — turning the §10 zero-recompile invariant into an
+        asserted metric (``stepfn_compiles_total{kind="decode"}`` must stay
+        at its warm value).  Blocks on the result so the sample is real
+        device time, not dispatch time; the host consumes the result
+        synchronously right after in every caller, so no pipelining is
+        lost.  Collection is host-side only — nothing here runs inside the
+        trace.  Callers skip this entirely when obs is disabled.
+        """
+        attr = f"{kind}_traces"
+        before = getattr(self, attr)
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        obs = self.obs
+        m = obs.metrics
+        obs.trace.complete(f"stepfn_{kind}", t0, dt, executor=self.name)
+        if getattr(self, attr) > before:
+            m.counter(
+                "stepfn_compiles_total",
+                help="StepFn (re)traces; decode must stay at one per "
+                     "(shape, backend) across replans (DESIGN.md §10)",
+            ).inc(kind=kind, executor=self.name)
+            obs.trace.instant(f"stepfn_{kind}_compile", executor=self.name)
+        m.histogram(
+            "stepfn_wall_s",
+            help="StepFn wall time per invocation, seconds (blocked on "
+                 "device completion)",
+        ).observe(dt, kind=kind, executor=self.name)
+        return out
+
     # ---- shared normalization ---------------------------------------------
 
     def _norm_decode_args(self, tokens, active, rows):
@@ -162,7 +206,7 @@ class Executor:
 
 def make_executor(name: str, model_cfg: ModelConfig, ccfg: CompressionConfig,
                   exec_cfg: Optional[ExecutorConfig] = None,
-                  mesh=None, paging=None) -> Executor:
+                  mesh=None, paging=None, obs=None) -> Executor:
     """Instantiate a registered executor by name."""
     return get_executor(name)(model_cfg, ccfg, exec_cfg=exec_cfg, mesh=mesh,
-                              paging=paging)
+                              paging=paging, obs=obs)

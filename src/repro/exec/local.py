@@ -22,13 +22,13 @@ class LocalExecutor(Executor):
     name = "local"
 
     def __init__(self, model_cfg, ccfg, exec_cfg=None, mesh=None,
-                 paging=None):
+                 paging=None, obs=None):
         if mesh is not None:
             raise ValueError(
                 "the 'local' executor runs on a single device and ignores "
                 "meshes; pass executor='mesh' to run on one, or drop mesh=")
         super().__init__(model_cfg, ccfg, exec_cfg=exec_cfg, mesh=None,
-                         paging=paging)
+                         paging=paging, obs=obs)
         self._prefill_jit = None
         self._decode_jit = None
 
@@ -65,14 +65,19 @@ class LocalExecutor(Executor):
         if rows is None:
             rows = jnp.arange(B, dtype=jnp.int32)
         hi = None if head_importance is None else jnp.asarray(head_importance)
-        return self._prefill_jit(sp, batch, pa,
-                                 jnp.asarray(rows, jnp.int32), hi)
+        args = (sp, batch, pa, jnp.asarray(rows, jnp.int32), hi)
+        if not self.obs.enabled:
+            return self._prefill_jit(*args)
+        return self._observe_step("prefill", self._prefill_jit, args)
 
     def decode(self, sp, state, pa, tokens, active=None, rows=None):
         if self._decode_jit is None:
             self._decode_jit = self._build_decode()
         tokens, active, rows = self._norm_decode_args(tokens, active, rows)
-        return self._decode_jit(sp, state, pa, tokens, active, rows)
+        args = (sp, state, pa, tokens, active, rows)
+        if not self.obs.enabled:
+            return self._decode_jit(*args)
+        return self._observe_step("decode", self._decode_jit, args)
 
     def decode_hlo(self, sp, state, pa, tokens):
         if self._decode_jit is None:

@@ -56,9 +56,9 @@ class MeshExecutor(Executor):
     name = "mesh"
 
     def __init__(self, model_cfg, ccfg, exec_cfg=None, mesh=None,
-                 paging=None):
+                 paging=None, obs=None):
         super().__init__(model_cfg, ccfg, exec_cfg=exec_cfg, mesh=mesh,
-                         paging=paging)
+                         paging=paging, obs=obs)
         if mesh is None:
             raise ValueError(
                 "executor='mesh' needs a mesh; build one with "
@@ -216,8 +216,12 @@ class MeshExecutor(Executor):
         if key not in self._prefill_jits:
             self._prefill_jits[key] = self._build_prefill(
                 sp_specs, state_specs, hi is not None)
-        state, logits, lengths = self._prefill_jits[key](
-            sp, {"tokens": tokens}, pa, rows, hi)
+        args = (sp, {"tokens": tokens}, pa, rows, hi)
+        if self.obs.enabled:
+            state, logits, lengths = self._observe_step(
+                "prefill", self._prefill_jits[key], args)
+        else:
+            state, logits, lengths = self._prefill_jits[key](*args)
         if pad:
             state = _slice_state_rows(state, B)
             logits, lengths = logits[:B], lengths[..., :B]
@@ -270,8 +274,11 @@ class MeshExecutor(Executor):
                 f"decode batch {B} does not split over data="
                 f"{self.data_size}; size the batch (scheduler max_rows / "
                 f"generate batch) as a multiple of the data-axis width")
-        return self._decode_jit_for(sp, state)(sp, state, pa, tokens, active,
-                                               rows)
+        jit = self._decode_jit_for(sp, state)
+        args = (sp, state, pa, tokens, active, rows)
+        if not self.obs.enabled:
+            return jit(*args)
+        return self._observe_step("decode", jit, args)
 
     def shard_state(self, state):
         from jax.sharding import NamedSharding

@@ -33,6 +33,7 @@ from repro.api import (
     CompressionConfig,
     Engine,
     EngineConfig,
+    ObsConfig,
     PagingConfig,
     PlannerConfig,
     SchedulerConfig,
@@ -67,7 +68,9 @@ def _engine_config(args, max_seq_len: int, batch_cap: int,
         paging=PagingConfig(block_size=args.block_size,
                             n_blocks=args.pool_blocks,
                             decode_impl=args.paged_impl),
-        executor=args.executor)
+        executor=args.executor,
+        obs=ObsConfig(enabled=not args.no_obs,
+                      print_every=args.obs_print_every))
 
 
 def _build_engine(args, ecfg: EngineConfig) -> Engine:
@@ -101,6 +104,19 @@ def _collective_audit(eng: Engine) -> None:
           f"total {total / 1e3:.1f} kB")
 
 
+def _export_obs(eng: Engine, args) -> None:
+    """Write the Prometheus / Chrome-trace exports when paths were given."""
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(eng.metrics_prometheus())
+        print(f"metrics -> {args.metrics_out}")
+    if args.trace_out:
+        with open(args.trace_out, "w") as f:
+            f.write(eng.trace_export())
+        print(f"trace -> {args.trace_out} (load in Perfetto / "
+              f"chrome://tracing)")
+
+
 def run_continuous(args) -> None:
     """Poisson-trace continuous batching via the facade."""
     max_prompt = max(args.min_prompt, args.max_prompt)
@@ -128,10 +144,21 @@ def run_continuous(args) -> None:
               f"{r.finish_step:3d} | queued {r.queueing_steps():2d} steps | "
               f"{r.n_generated} tokens")
     pct = latency_percentiles(eng.finished_requests)
+
+    def fmt(key: str, scale: float = 1.0, unit: str = "") -> str:
+        # absent key = no request recorded the observable: print n/a, not nan
+        v = pct.get(key)
+        return "n/a" if v is None else f"{v * scale:.0f}{unit}"
+
+    note = (f" ({out['tokens_per_s_note']})"
+            if "tokens_per_s_note" in out else "")
     print(f"steps {out['steps']} | {out['generated_tokens']} tokens in "
-          f"{out['wall_s']:.1f}s = {out['tokens_per_s']:.1f} tok/s | "
-          f"latency p50 {pct.get('p50_steps', float('nan')):.0f} / p99 "
-          f"{pct.get('p99_steps', float('nan')):.0f} steps")
+          f"{out['wall_s']:.1f}s = {out['tokens_per_s']:.1f} tok/s{note} | "
+          f"latency p50 {fmt('p50_steps')} / p99 {fmt('p99_steps')} steps")
+    print(f"ttft p50 {fmt('p50_ttft_s', 1e3, ' ms')} / p99 "
+          f"{fmt('p99_ttft_s', 1e3, ' ms')} | itl p50 "
+          f"{fmt('p50_itl_s', 1e3, ' ms')} / p99 "
+          f"{fmt('p99_itl_s', 1e3, ' ms')}")
     print(f"mid-stream admissions: {out['mid_stream_admissions']} | "
           f"replans: {out['replans']} | preemptions: {out['preemptions']}")
     mem = out["memory"]
@@ -144,6 +171,7 @@ def run_continuous(args) -> None:
         print(f"  replan @ step {ev['step']} ({tag}): imbalance "
               f"{ev['imbalance_before']:.3f} -> {ev['imbalance_after']:.3f}")
     _collective_audit(eng)
+    _export_obs(eng, args)
     if out["finished"] != out["total"]:
         raise RuntimeError(
             f"only {out['finished']}/{out['total']} requests finished")
@@ -173,6 +201,7 @@ def run_oneshot(args) -> None:
               f"{mem['blocks_in_use']} blocks vs slot-equivalent "
               f"{mem['slot_equivalent_bytes']} B")
     _collective_audit(eng)
+    _export_obs(eng, args)
     for b in range(min(args.batch, 2)):
         print(f"row {b}: {res.tokens[b].tolist()}")
 
@@ -239,6 +268,17 @@ def main() -> None:
     ap.add_argument("--replan-cooldown", type=int, default=16)
     ap.add_argument("--no-replan", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    # --- observability (DESIGN.md §12) ---------------------------------------
+    ap.add_argument("--no-obs", action="store_true",
+                    help="disable the metrics/trace subsystem entirely")
+    ap.add_argument("--obs-print-every", type=int, default=0,
+                    help="scheduler steps between one-line stats prints "
+                         "(0 = off)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write Prometheus text metrics here on exit")
+    ap.add_argument("--trace-out", default="",
+                    help="write Chrome trace-event JSON here on exit "
+                         "(Perfetto-loadable)")
     args = ap.parse_args()
 
     if args.continuous:

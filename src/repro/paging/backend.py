@@ -57,12 +57,12 @@ class PagedBackend(CacheBackend):
 
     def __init__(self, model_cfg, ccfg, max_live_tokens=None, paging=None,
                  n_shards=1, max_live_tokens_per_shard=None,
-                 pool_partitions=1, row_partitions=1):
+                 pool_partitions=1, row_partitions=1, obs=None):
         super().__init__(model_cfg, ccfg, max_live_tokens=max_live_tokens,
                          paging=paging, n_shards=n_shards,
                          max_live_tokens_per_shard=max_live_tokens_per_shard,
                          pool_partitions=pool_partitions,
-                         row_partitions=row_partitions)
+                         row_partitions=row_partitions, obs=obs)
         self.capacity = ccfg.static_capacity()
         self.block_size = self.paging.block_size
         self.max_blocks = max_blocks_per_row(self.capacity, self.block_size)
@@ -88,6 +88,7 @@ class PagedBackend(CacheBackend):
             self.cfg.n_layers, int(pa.slot_head.shape[1]), batch,
             self.capacity, self.cfg.head_dim, self.paging, dtype=dtype,
             partitions=self.partitions)
+        self.pool.obs = self.obs  # alloc/free/exhaustion counters (§12)
         self.table = np.zeros(cache.block_table.shape, np.int32)
         return _serve.init_serve_state(self.cfg, pa, batch, self.ccfg,
                                        dtype=dtype, cache=cache)
@@ -215,6 +216,7 @@ class PagedBackend(CacheBackend):
             own[:, :, rows] = _owner_mask_np(new_pa, rows)
         trial = BlockPool(self.pool.n_layers, self.pool.n_blocks,
                           n_partitions=self.pool.n_partitions)
+        trial.obs = self.obs  # trial allocations are real allocator work
         table = build_table(np.asarray(slot2.lengths), trial,
                             self.block_size, self.max_blocks, own=own,
                             partitions=self.partitions, n_rows=B)
@@ -335,6 +337,16 @@ class PagedBackend(CacheBackend):
         return None
 
     # ---- telemetry ---------------------------------------------------------
+
+    def sample_metrics(self, state) -> None:
+        if self.pool is None:
+            return
+        self.pool.sample_gauges(self.obs.metrics)
+        if state.cache is not None:
+            self.obs.metrics.gauge(
+                "cache_live_tokens",
+                help="Σ retained KV tokens across the live cache"
+            ).set(int(np.asarray(state.cache.lengths).sum()))
 
     def memory_stats(self, state) -> dict:
         if (state.cache is not None

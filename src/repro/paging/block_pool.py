@@ -24,6 +24,8 @@ from typing import Iterable, List, Optional
 
 import numpy as np
 
+from repro.obs import NULL_OBS
+
 
 class PoolExhausted(RuntimeError):
     """Raised when an allocation cannot be satisfied.
@@ -109,6 +111,9 @@ class BlockPool:
         self.n_blocks = int(n_blocks)
         self.n_partitions = int(n_partitions)
         self.part_size = part
+        # observability handle (DESIGN.md §12): alloc/free/exhaustion
+        # counters; the owning backend swaps in the engine's live Obs
+        self.obs = NULL_OBS
         nulls = [p * part for p in range(n_partitions)]
         self.refcount = np.zeros((n_layers, n_blocks), np.int32)
         self.refcount[:, nulls] = 1  # null blocks: pinned forever
@@ -149,6 +154,39 @@ class BlockPool:
     def partition_of(self, block_id: int) -> int:
         return int(block_id) // self.part_size
 
+    def sample_gauges(self, metrics) -> None:
+        """Record the pool-pressure gauges (DESIGN.md §12): free/in-use
+        totals, per-partition free counts, max refcount, and fragmentation
+        — free blocks stranded outside each layer's *tightest* partition.
+        Admission gates on the worst partition, so stranded blocks are free
+        yet unusable for the next admission."""
+        free = self.free_blocks_by_partition()  # (L, P)
+        metrics.gauge(
+            "pool_free_blocks",
+            help="free KV blocks, summed over layers and partitions"
+        ).set(int(free.sum()))
+        metrics.gauge(
+            "pool_blocks_in_use",
+            help="allocated KV blocks across all layers (nulls excluded)"
+        ).set(self.blocks_in_use())
+        g = metrics.gauge(
+            "pool_free_blocks_partition",
+            help="free KV blocks per pool partition (one partition per "
+                 "(model shard, data shard) pair), summed over layers")
+        for p, v in enumerate(free.sum(axis=0)):
+            g.set(int(v), partition=str(p))
+        metrics.gauge(
+            "pool_fragmentation_blocks",
+            help="free blocks outside each layer's tightest partition — "
+                 "free but unusable for the admission the tightest "
+                 "partition is about to refuse"
+        ).set(int((free - free.min(axis=1, keepdims=True)).sum()))
+        metrics.gauge(
+            "pool_max_refcount",
+            help="max block refcount (copy-on-write sharing depth; 1 = "
+                 "no sharing)"
+        ).set(int(self.refcount.max()))
+
     # ---- alloc / free ------------------------------------------------------
 
     def alloc(self, layer: int, n: int, partition: int = 0) -> List[int]:
@@ -160,12 +198,19 @@ class BlockPool:
         """
         free = self._free[layer][partition]
         if n > len(free):
+            self.obs.metrics.counter(
+                "pool_exhausted_total",
+                help="allocations refused by an empty free list (the "
+                     "scheduler's preemption signal)").inc()
             raise PoolExhausted(
                 f"layer {layer} partition {partition}: requested {n} "
                 f"blocks, {len(free)} free "
                 f"(pool {self.usable_blocks}/layer)")
         ids = [free.pop() for _ in range(n)]
         self.refcount[layer, ids] = 1
+        self.obs.metrics.counter(
+            "pool_alloc_blocks_total",
+            help="KV blocks handed out by the pool").inc(n)
         return ids
 
     def incref(self, layer: int, ids: Iterable[int]) -> None:
@@ -193,6 +238,10 @@ class BlockPool:
             if rc == 1:
                 freed.append(b)
         if freed:
+            self.obs.metrics.counter(
+                "pool_freed_blocks_total",
+                help="KV blocks returned to the pool "
+                     "(refcount reached 0)").inc(len(freed))
             for p in {self.partition_of(b) for b in freed}:
                 fl = self._free[layer][p]
                 fl.extend(b for b in freed if self.partition_of(b) == p)
@@ -211,6 +260,7 @@ class BlockPool:
         out = BlockPool.__new__(BlockPool)
         out.n_layers, out.n_blocks = self.n_layers, self.n_blocks
         out.n_partitions, out.part_size = self.n_partitions, self.part_size
+        out.obs = self.obs
         out.refcount = self.refcount.copy()
         out._free = [[list(f) for f in fs] for fs in self._free]
         return out

@@ -38,6 +38,7 @@ from repro.compression.policies import (
     projected_request_tokens,
 )
 from repro.configs.base import ModelConfig
+from repro.obs import NULL_OBS
 from repro.paging.block_pool import PagingConfig, PoolExhausted  # noqa: F401
 from repro.serving import engine as _serve
 from repro.serving.request import Request
@@ -65,7 +66,8 @@ class CacheBackend:
                  n_shards: int = 1,
                  max_live_tokens_per_shard: Optional[int] = None,
                  pool_partitions: int = 1,
-                 row_partitions: int = 1):
+                 row_partitions: int = 1,
+                 obs=None):
         self.cfg = model_cfg
         self.ccfg = ccfg
         self.max_live_tokens = max_live_tokens
@@ -74,6 +76,9 @@ class CacheBackend:
         self.max_live_tokens_per_shard = max_live_tokens_per_shard
         self.pool_partitions = int(pool_partitions)
         self.row_partitions = int(row_partitions)
+        # observability handle (DESIGN.md §12); NULL_OBS unless the Engine
+        # facade threads its live Obs through
+        self.obs = obs if obs is not None else NULL_OBS
 
     # ---- state lifecycle ---------------------------------------------------
 
@@ -131,6 +136,12 @@ class CacheBackend:
 
     def memory_stats(self, state) -> dict:
         raise NotImplementedError
+
+    def sample_metrics(self, state) -> None:
+        """Per-step gauge sampling hook (host-side, outside jit): record
+        this backend's cache-pressure observables into ``self.obs``.  The
+        scheduler calls it once per tick when observability is on; the
+        default records nothing."""
 
 
 @register_cache_backend("slot")
@@ -250,6 +261,21 @@ class SlotBackend(CacheBackend):
                         f"empty cache")
         return None
 
+    def sample_metrics(self, state) -> None:
+        if state.cache is None:
+            return
+        m = self.obs.metrics
+        live = self.live_tokens(state)
+        lens = np.asarray(state.cache.lengths)
+        cap = int(np.prod(lens.shape)) * self.ccfg.static_capacity()
+        m.gauge("cache_live_tokens",
+                help="Σ retained KV tokens across the live cache"
+                ).set(live)
+        m.gauge("cache_utilization",
+                help="live tokens / static slot capacity (slot backend "
+                     "pressure; the paged analog is pool_free_blocks)"
+                ).set(live / max(1, cap))
+
     def memory_stats(self, state) -> dict:
         if state.cache is None:
             return {"backend": self.name, "cache_bytes": 0, "live_tokens": 0}
@@ -273,7 +299,8 @@ def make_cache_backend(name: str, model_cfg: ModelConfig,
                        n_shards: int = 1,
                        max_live_tokens_per_shard: Optional[int] = None,
                        pool_partitions: int = 1,
-                       row_partitions: int = 1) -> CacheBackend:
+                       row_partitions: int = 1,
+                       obs=None) -> CacheBackend:
     """Instantiate a registered backend by name (geometry kwargs: see the
     `CacheBackend` docstring)."""
     from repro.api.registry import get_cache_backend
@@ -281,4 +308,5 @@ def make_cache_backend(name: str, model_cfg: ModelConfig,
         model_cfg, ccfg, max_live_tokens=max_live_tokens, paging=paging,
         n_shards=n_shards,
         max_live_tokens_per_shard=max_live_tokens_per_shard,
-        pool_partitions=pool_partitions, row_partitions=row_partitions)
+        pool_partitions=pool_partitions, row_partitions=row_partitions,
+        obs=obs)

@@ -47,6 +47,7 @@ class Request:
     first_token_step: Optional[int] = None
     finish_step: Optional[int] = None
     arrival_time: Optional[float] = None
+    first_token_time: Optional[float] = None  # wall clock of the first token
     finish_time: Optional[float] = None
     n_preemptions: int = 0  # times evicted back to QUEUED (paged backend)
 
@@ -75,6 +76,7 @@ class Request:
             self.logits = []
         self.admit_step = None
         self.first_token_step = None
+        self.first_token_time = None
         self.n_preemptions += 1
 
     def queueing_steps(self) -> Optional[int]:
@@ -92,6 +94,27 @@ class Request:
         if self.finish_time is None or self.arrival_time is None:
             return None
         return self.finish_time - self.arrival_time
+
+    def ttft_steps(self) -> Optional[int]:
+        """Arrival → first token, in scheduler steps."""
+        if self.first_token_step is None:
+            return None
+        return self.first_token_step - self.arrival_step
+
+    def ttft_seconds(self) -> Optional[float]:
+        """Arrival → first token, wall clock (queueing + prefill)."""
+        if self.first_token_time is None or self.arrival_time is None:
+            return None
+        return self.first_token_time - self.arrival_time
+
+    def itl_seconds(self) -> Optional[float]:
+        """Mean inter-token latency after the first token (the streaming
+        cadence a client sees); None until a second token exists."""
+        if (self.finish_time is None or self.first_token_time is None
+                or self.n_generated < 2):
+            return None
+        return (self.finish_time - self.first_token_time) / (
+            self.n_generated - 1)
 
 
 def poisson_arrivals(n_requests: int, rate: float,
@@ -133,16 +156,25 @@ def synthesize_requests(
 
 
 def latency_percentiles(requests: List[Request]) -> dict:
-    """p50/p99 of request latency over the finished subset, in steps and
-    seconds (seconds only when wall-clock stamps were recorded)."""
-    steps = [r.latency_steps() for r in requests if r.latency_steps() is not None]
-    secs = [r.latency_seconds() for r in requests
-            if r.latency_seconds() is not None]
-    out = {"n_finished": len(steps)}
-    if steps:
-        out["p50_steps"] = float(np.percentile(steps, 50))
-        out["p99_steps"] = float(np.percentile(steps, 99))
-    if secs:
-        out["p50_s"] = float(np.percentile(secs, 50))
-        out["p99_s"] = float(np.percentile(secs, 99))
+    """p50/p99 of end-to-end latency, TTFT, and mean ITL over the finished
+    subset, in steps and seconds (seconds only when wall-clock stamps were
+    recorded).
+
+    Keys for an observable are present only when at least one request
+    recorded it — an empty trace returns just ``{"n_finished": 0}``, never
+    NaN percentiles (callers print ``n/a`` for missing keys).
+    """
+    samples = {
+        "steps": [r.latency_steps() for r in requests],
+        "s": [r.latency_seconds() for r in requests],
+        "ttft_steps": [r.ttft_steps() for r in requests],
+        "ttft_s": [r.ttft_seconds() for r in requests],
+        "itl_s": [r.itl_seconds() for r in requests],
+    }
+    out = {"n_finished": sum(1 for v in samples["steps"] if v is not None)}
+    for key, vals in samples.items():
+        vals = [v for v in vals if v is not None]
+        if vals:
+            out[f"p50_{key}"] = float(np.percentile(vals, 50))
+            out[f"p99_{key}"] = float(np.percentile(vals, 99))
     return out

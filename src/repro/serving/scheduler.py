@@ -37,10 +37,12 @@ from repro.configs.base import ModelConfig
 from repro.core.placement import HeadPlacement
 from repro.core.planner import PlannerConfig, build_plan
 from repro.exec.base import Executor, make_executor
+from repro.obs import NULL_OBS, Obs
 from repro.paging.block_pool import PoolExhausted
 from repro.serving.cache_backend import CacheBackend, make_cache_backend
 from repro.serving.engine import slotify_params
-from repro.serving.request import Request, RequestState
+from repro.serving.request import (Request, RequestState,
+                                   latency_percentiles)
 
 
 # ---------------------------------------------------------------------------
@@ -157,6 +159,8 @@ class Scheduler:
         backend: Optional[CacheBackend] = None,
         executor: Optional[Executor] = None,
         head_importance: Optional[np.ndarray] = None,
+        obs: Optional[Obs] = None,
+        plan_profile: Optional[np.ndarray] = None,
     ):
         if cfg.is_encoder_decoder or cfg.is_vlm:
             raise NotImplementedError(
@@ -190,6 +194,19 @@ class Scheduler:
         # prefills must compress with the same budgets the profile was
         # measured under, or realized loads drift from the plan
         self.head_importance = head_importance
+        # observability (DESIGN.md §12): one shared registry/trace pair for
+        # the whole stack.  Threading it into the backend and executor makes
+        # pool counters and StepFn timings land in the same registry the
+        # scheduler's load gauges use — backend *before* init_state, so the
+        # paged backend's BlockPool is born with the live handle
+        self.obs = obs if obs is not None else NULL_OBS
+        if obs is not None:
+            self.backend.obs = self.obs
+            self.executor.obs = self.obs
+        # the per-head profile the current plan was planned from (for the
+        # shard_projected_load gauge); refreshed on every accepted replan
+        self.plan_profile = (None if plan_profile is None
+                             else np.asarray(plan_profile, np.float64))
         # born sharded: the mesh executor lays the empty state out under its
         # decode specs, so the cache never sits replicated on one device
         self.state = self.executor.shard_state(
@@ -210,6 +227,15 @@ class Scheduler:
         self.n_preemptions = 0
         self.replan_log: List[dict] = []  # {step, imbalance_before/after}
         self.finished: List[Request] = []
+        if self.obs.enabled:
+            # pre-register outcome series so exports show explicit zeros
+            c = self.obs.metrics.counter(
+                "sched_replans_total",
+                help="replan attempts by outcome (accepted replans migrated "
+                     "the live cache; rejected left state untouched)")
+            c.inc(0, outcome="accepted")
+            c.inc(0, outcome="rejected")
+            self._sample_plan_metrics()
 
     # ---- engine plumbing ---------------------------------------------------
 
@@ -235,14 +261,59 @@ class Scheduler:
         per_slot = lens.sum(axis=(0, 2))  # (S,)
         return per_slot.reshape(self.plan.n_shards, S_per).sum(axis=1)
 
-    def imbalance(self) -> float:
-        """max/mean per-shard realized load (1.0 = perfectly fair); under
-        persisted ``shard_speeds`` it is the *time* imbalance load/speed."""
-        load = self.per_shard_load()
+    def _imbalance_from(self, load: np.ndarray) -> float:
+        """max/mean of an already-computed per-shard load vector (the step
+        loop computes the load once and feeds both this and the gauges)."""
         if self.shard_speeds is not None:
             load = load / self.shard_speeds
         mean = load.mean()
         return float(load.max() / mean) if mean > 0 else 1.0
+
+    def imbalance(self) -> float:
+        """max/mean per-shard realized load (1.0 = perfectly fair); under
+        persisted ``shard_speeds`` it is the *time* imbalance load/speed."""
+        return self._imbalance_from(self.per_shard_load())
+
+    # ---- observability sampling (DESIGN.md §12) ----------------------------
+
+    def _sample_plan_metrics(self) -> None:
+        """Gauge the *projected* per-shard load of the current plan under
+        the profile it was planned from — the planner's promise, against
+        which ``shard_load_tokens`` shows the realized truth."""
+        if self.plan_profile is None:
+            return
+        g = self.obs.metrics.gauge(
+            "shard_projected_load",
+            help="planner-projected per-shard load of the active placement "
+                 "under the profile it was planned from")
+        for s, v in enumerate(self.plan.per_shard_load(self.plan_profile)):
+            g.set(float(v), shard=str(s))
+
+    def _sample_step_metrics(self, load: np.ndarray, imb: float) -> None:
+        """Per-tick gauges (host-side; called only when obs is on)."""
+        m = self.obs.metrics
+        g = m.gauge("shard_load_tokens",
+                    help="realized Σ retained KV tokens per model shard "
+                         "(the paper's Eq. 4 observable)")
+        for s, v in enumerate(load):
+            g.set(float(v), shard=str(s))
+        m.gauge("sched_imbalance",
+                help="max/mean per-shard realized load (1.0 = fair); "
+                     "speed-normalized under persisted shard_speeds"
+                ).set(imb)
+        m.gauge("sched_active_rows",
+                help="batch rows holding a live request").set(
+            len(self.active))
+        m.gauge("sched_queue_depth",
+                help="requests waiting in the FCFS queue").set(
+            len(self.queue))
+        self.backend.sample_metrics(self.state)
+        pe = self.obs.cfg.print_every
+        if pe > 0 and self.step_idx % pe == 0:
+            print(f"[obs] step={self.step_idx} active={len(self.active)} "
+                  f"queued={len(self.queue)} finished={len(self.finished)} "
+                  f"imbalance={imb:.3f} preemptions={self.n_preemptions} "
+                  f"replans={self.n_replans}", flush=True)
 
     def realized_profile(self) -> np.ndarray:
         """(L, H) mean retained length per head over *active* rows.
@@ -316,6 +387,15 @@ class Scheduler:
         first = int(np.asarray(sub.last_tokens)[0])
         req.generated.append(first)
         req.first_token_step = self.step_idx
+        req.first_token_time = time.time()
+        self.obs.metrics.counter(
+            "sched_admissions_total",
+            help="requests admitted (prefilled + spliced)").inc()
+        ttft = req.ttft_seconds()
+        if ttft is not None:
+            self.obs.metrics.histogram(
+                "ttft_s", help="time to first token (queue wait + prefill "
+                               "wall time)").observe(ttft)
         if self.scfg.collect_logits:
             req.logits = [np.asarray(logits[0])]
         req.state = RequestState.DECODING
@@ -339,6 +419,20 @@ class Scheduler:
         req.finish_time = time.time()
         req.row = None
         self.finished.append(req)
+        m = self.obs.metrics
+        m.counter("sched_retirements_total",
+                  help="requests retired (EOS or max-new-tokens)").inc()
+        self.obs.trace.instant("retire", req=req.req_id,
+                               n_generated=req.n_generated)
+        itl = req.itl_seconds()
+        if itl is not None:
+            m.histogram("itl_s",
+                        help="inter-token latency (per-request mean in "
+                             "continuous mode; per-step in one-shot mode)"
+                        ).observe(itl)
+        if req.arrival_time is not None:
+            m.histogram("e2e_s", help="end-to-end request latency"
+                        ).observe(req.finish_time - req.arrival_time)
 
     # ---- preemption (paged backend, DESIGN.md §9) --------------------------
 
@@ -358,6 +452,11 @@ class Scheduler:
         victim.reset_for_requeue()
         self.queue.appendleft(victim)  # re-admit first: it is oldest by FCFS
         self.n_preemptions += 1
+        self.obs.metrics.counter(
+            "sched_preemptions_total",
+            help="youngest-first evictions back to QUEUED "
+                 "(pool exhaustion)").inc()
+        self.obs.trace.instant("preempt", req=victim.req_id)
         return True
 
     def _prepare_decode(self) -> None:
@@ -417,6 +516,16 @@ class Scheduler:
         and rejected (no state change, cooldown still consumed) unless it
         strictly reduces the per-shard imbalance.
         """
+        with self.obs.trace.span("replan"):
+            event = self._replan_impl(profile, shard_speeds)
+        # outcome counter is the single source of truth for replan counts
+        # (benchmarks read it instead of re-tallying replan_log)
+        self.obs.metrics.counter("sched_replans_total").inc(
+            outcome="accepted" if event["accepted"] else "rejected")
+        return event
+
+    def _replan_impl(self, profile: Optional[np.ndarray],
+                     shard_speeds: Optional[Sequence[float]]) -> dict:
         if shard_speeds is not None:
             self.shard_speeds = np.asarray(shard_speeds, float)
         speeds = self.shard_speeds
@@ -457,6 +566,10 @@ class Scheduler:
         # no StepFn rebuild: sp/pa are executor arguments, shapes unchanged
         self.n_replans += 1
         self.replan_log.append(event)
+        if self.obs.enabled:
+            # the new plan's promise, from the profile it was planned from
+            self.plan_profile = profile
+            self._sample_plan_metrics()
         return event
 
     # ---- main loop ---------------------------------------------------------
@@ -475,7 +588,8 @@ class Scheduler:
         # admission: fill free rows from the queue head (FCFS)
         while self.queue and self.admissible(self.queue[0]):
             req = self.queue.popleft()
-            row = self._admit(req)
+            with self.obs.trace.span("admit", req=req.req_id):
+                row = self._admit(req)
             if row is None:  # backend memory dry even after preemption
                 self.queue.appendleft(req)
                 break
@@ -486,7 +600,9 @@ class Scheduler:
         if self.active:
             self._prepare_decode()  # may preempt (paged pool dry)
         if self.active:
-            self.state, logits = self._decode(self.state, self.active_mask())
+            with self.obs.trace.span("decode_tick", rows=len(self.active)):
+                self.state, logits = self._decode(self.state,
+                                                  self.active_mask())
             toks = np.asarray(self.state.last_tokens)
             logits_np = (np.asarray(logits) if self.scfg.collect_logits
                          else None)
@@ -501,8 +617,13 @@ class Scheduler:
                     self._retire(req)
                     events["finished"].append(req.req_id)
         events["preempted"] = self.n_preemptions - preempted_before
-        # load accounting + replan trigger (hysteresis inside the trigger)
-        self.trigger.observe(self.imbalance())
+        # load accounting + replan trigger (hysteresis inside the trigger);
+        # the load vector feeds the trigger and the gauges from one compute
+        load = self.per_shard_load()
+        imb = self._imbalance_from(load)
+        self.trigger.observe(imb)
+        if self.obs.enabled:
+            self._sample_step_metrics(load, imb)
         if self.should_replan():
             self.trigger.fire(self.step_idx)
             events["replan"] = self.replan()
@@ -532,16 +653,24 @@ class Scheduler:
                     first_decode_step = ev["step"]
         wall = time.time() - t0
         total_tokens = sum(r.n_generated for r in self.finished)
-        return {
+        summary = {
             "steps": self.step_idx,
             "wall_s": wall,
             "finished": len(self.finished),
             "total": n_total,
             "generated_tokens": total_tokens,
-            "tokens_per_s": total_tokens / wall if wall > 0 else float("inf"),
             "mid_stream_admissions": mid_stream_admissions,
             "replans": self.n_replans,
             "replan_log": list(self.replan_log),
             "preemptions": self.n_preemptions,
+            "latency": latency_percentiles(self.finished),
             "memory": self.backend.memory_stats(self.state),
         }
+        if wall > 0:
+            summary["tokens_per_s"] = total_tokens / wall
+        else:
+            # timer resolution can make a tiny trace's wall collapse to 0 —
+            # an honest 0.0 with a note beats a division to inf
+            summary["tokens_per_s"] = 0.0
+            summary["tokens_per_s_note"] = "wall_too_short"
+        return summary
