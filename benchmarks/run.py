@@ -51,6 +51,7 @@ SUITES = {
     "fig7": "benchmarks.fig7_paged_memory",
     "fig8": "benchmarks.fig8_fair_copying_tp",
     "fig9": "benchmarks.fig9_paged_kernel",
+    "fig10": "benchmarks.fig10_goodput",
     "table3": "benchmarks.table3_quality_proxy",
 }
 

@@ -102,6 +102,14 @@ _LAZY = {
     "ObsConfig": "repro.obs:ObsConfig",
     "MetricsRegistry": "repro.obs:MetricsRegistry",
     "TraceBuffer": "repro.obs:TraceBuffer",
+    # serving front end (DESIGN.md §13)
+    "FrontendConfig": "repro.frontend.config:FrontendConfig",
+    "PriorityClass": "repro.frontend.config:PriorityClass",
+    "FrontendScheduler": "repro.frontend.core:FrontendScheduler",
+    "run_frontend_trace": "repro.frontend.core:run_frontend_trace",
+    "EngineLoop": "repro.frontend.bridge:EngineLoop",
+    "FrontendServer": "repro.frontend.http:FrontendServer",
+    "serve_http": "repro.frontend.http:serve_http",
 }
 
 __all__ = sorted(

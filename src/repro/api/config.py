@@ -31,6 +31,7 @@ from repro.configs import get_config, get_smoke_config
 from repro.configs.base import ModelConfig
 from repro.core.planner import PLANNER_MODES, PlannerConfig
 from repro.exec.base import ExecutorConfig
+from repro.frontend.config import FrontendConfig
 from repro.obs import ObsConfig
 from repro.paging.block_pool import PagingConfig
 from repro.serving.scheduler import SchedulerConfig
@@ -74,6 +75,10 @@ class EngineConfig:
     # through scheduler/executor/backend; ObsConfig(enabled=False) swaps
     # every collection point for shared no-op singletons
     obs: ObsConfig = field(default_factory=ObsConfig)
+    # multi-tenant serving front end (DESIGN.md §13): fair queuing, SLO
+    # admission, HTTP ingress; only `serve --http` / `FrontendServer` read
+    # it, so offline engines pay nothing for the default
+    frontend: FrontendConfig = field(default_factory=FrontendConfig)
 
     def __post_init__(self):
         if not isinstance(self.model, ModelConfig):
@@ -131,6 +136,10 @@ class EngineConfig:
         if not isinstance(self.obs, ObsConfig):
             raise TypeError(
                 f"obs must be an ObsConfig, got {type(self.obs).__name__}")
+        if not isinstance(self.frontend, FrontendConfig):
+            raise TypeError(
+                f"frontend must be a FrontendConfig, got "
+                f"{type(self.frontend).__name__}")
 
     # ---- constructors ------------------------------------------------------
 

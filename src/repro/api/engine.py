@@ -140,6 +140,9 @@ class Engine:
         self._shard_speeds: Optional[np.ndarray] = None
         self._scheduler: Optional[Scheduler] = None
         self._next_req_id = 0
+        # drain() before the scheduler exists (e.g. a signal landing during
+        # build) must still stick — applied on first _ensure_scheduler
+        self._drain_pending = False
 
     # ---- construction ------------------------------------------------------
 
@@ -395,6 +398,8 @@ class Engine:
                 obs=self.obs, plan_profile=self.profile)
             # inherit any one-shot straggler mitigation
             self._scheduler.shard_speeds = self._shard_speeds
+            if self._drain_pending:
+                self._scheduler.drain()
         return self._scheduler
 
     def _sync_from_scheduler(self) -> None:
@@ -426,17 +431,43 @@ class Engine:
 
     def submit(self, request: Union[Request, np.ndarray, Sequence[int]],
                max_new_tokens: int = 16, eos_id: Optional[int] = None,
-               arrival_step: int = 0) -> Request:
+               arrival_step: int = 0, tenant: str = "default",
+               priority: int = 1,
+               deadline_s: Optional[float] = None) -> Request:
         """Queue a request (continuous mode).  Accepts a prepared `Request`
-        or a raw prompt token sequence."""
+        or a raw prompt token sequence; ``tenant`` / ``priority`` /
+        ``deadline_s`` thread the multi-tenant metadata (DESIGN.md §13)
+        onto a raw-prompt submission (a prepared `Request` carries its
+        own)."""
         if not isinstance(request, Request):
             request = Request(req_id=self._next_req_id,
                               prompt=np.asarray(request, np.int32),
                               arrival_step=arrival_step,
-                              max_new_tokens=max_new_tokens, eos_id=eos_id)
+                              max_new_tokens=max_new_tokens, eos_id=eos_id,
+                              tenant=tenant, priority=priority,
+                              deadline_s=deadline_s)
         self._next_req_id = max(self._next_req_id, request.req_id + 1)
         self._ensure_scheduler().submit(request)
         return request
+
+    def cancel(self, request_id: int) -> bool:
+        """Retire an in-flight or queued request early (continuous mode):
+        its batch row and — on the paged backend — its pool blocks are
+        released immediately (refcounts decremented), exactly like a
+        normal retirement.  The client-disconnect path for SSE streams.
+        Returns False when the id is unknown or already finished."""
+        if self._scheduler is None:
+            return False
+        return self._scheduler.cancel(request_id)
+
+    def drain(self) -> None:
+        """Graceful shutdown (continuous mode): stop admitting, let live
+        rows decode to completion.  `run_trace` then cancels queued and
+        unsubmitted requests and returns; safe to call from a signal
+        handler mid-trace (it only sets a flag)."""
+        self._drain_pending = True
+        if self._scheduler is not None:
+            self._scheduler.drain()
 
     def step(self) -> dict:
         """One scheduler tick: admit → decode → retire → (maybe) replan."""

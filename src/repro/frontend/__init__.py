@@ -1,0 +1,52 @@
+"""`repro.frontend` — multi-tenant async serving front end (DESIGN.md §13).
+
+Layers, bottom-up (each importable without the ones above it):
+
+- `repro.frontend.config`     — `FrontendConfig` / `PriorityClass`
+  (dependency-free; composed into `EngineConfig`);
+- `repro.frontend.queues`     — deficit-round-robin tenant fair queuing
+  over token-budget quotas;
+- `repro.frontend.admission`  — the SLO-aware admit/queue/degrade/reject
+  decision table (and the FCFS baseline);
+- `repro.frontend.accounting` — per-tenant rolling TTFT/ITL percentiles,
+  SLO attainment, goodput counters (through the §12 metrics registry);
+- `repro.frontend.core`       — `FrontendScheduler`: the synchronous pump
+  gluing the above around one engine `Scheduler`; `run_frontend_trace`
+  drives synthetic traces (the fig10 goodput harness);
+- `repro.frontend.bridge`     — `EngineLoop`: the single engine thread +
+  thread-safe command/event queues;
+- `repro.frontend.http`       — `FrontendServer` / `serve_http`: stdlib
+  asyncio HTTP/1.1 + SSE ingress.
+"""
+from __future__ import annotations
+
+from repro.frontend.accounting import TenantAccounting  # noqa: F401
+from repro.frontend.admission import (  # noqa: F401
+    AdmissionController,
+    Decision,
+    FCFSController,
+    make_admission,
+)
+from repro.frontend.bridge import EngineLoop  # noqa: F401
+from repro.frontend.config import (  # noqa: F401
+    DEFAULT_CLASSES,
+    FrontendConfig,
+    PriorityClass,
+)
+from repro.frontend.core import (  # noqa: F401
+    FrontendScheduler,
+    run_frontend_trace,
+)
+from repro.frontend.http import FrontendServer, serve_http  # noqa: F401
+from repro.frontend.queues import (  # noqa: F401
+    DeficitRoundRobin,
+    SingleQueue,
+)
+
+__all__ = [
+    "AdmissionController", "DEFAULT_CLASSES", "Decision",
+    "DeficitRoundRobin", "EngineLoop", "FCFSController", "FrontendConfig",
+    "FrontendScheduler", "FrontendServer", "PriorityClass", "SingleQueue",
+    "TenantAccounting", "make_admission", "run_frontend_trace",
+    "serve_http",
+]

@@ -12,6 +12,15 @@ admission → interleaved decode → retirement, with online replanning when the
 realized per-shard KV imbalance drifts.  Prints per-request latency,
 p50/p99, and the replan log.
 
+``--http`` mode serves the multi-tenant asyncio front end (DESIGN.md §13)
+over the continuous engine: ``POST /v1/generate`` (JSON), ``POST
+/v1/stream`` (SSE per-token events), ``GET /metrics`` (Prometheus with
+per-tenant goodput/latency families), ``GET /healthz``.  Admission is
+SLO-aware (``--admission slo``, priority classes with degrade/shed and
+tenant-fair deficit-round-robin quotas) or the FCFS baseline; SIGINT /
+SIGTERM drain gracefully (finish live decodes, shed the queue, flush
+``--metrics-out`` / ``--trace-out``).
+
 ``--executor mesh`` runs both modes' StepFns under ``shard_map`` on a
 (data=``--data``, model=``--shards``) host mesh (DESIGN.md §10) and prints
 the decode StepFn's per-device collective audit (parsed from the compiled
@@ -117,10 +126,8 @@ def _export_obs(eng: Engine, args) -> None:
               f"chrome://tracing)")
 
 
-def run_continuous(args) -> None:
-    """Poisson-trace continuous batching via the facade."""
-    max_prompt = max(args.min_prompt, args.max_prompt)
-    scfg = SchedulerConfig(
+def _scheduler_config(args) -> SchedulerConfig:
+    return SchedulerConfig(
         max_rows=args.rows,
         max_live_tokens=args.max_live_tokens or None,
         replan_window=args.replan_window,
@@ -128,6 +135,45 @@ def run_continuous(args) -> None:
         replan_cooldown=args.replan_cooldown,
         enable_replan=not args.no_replan,
     )
+
+
+def _install_drain_handlers(eng: Engine):
+    """SIGINT/SIGTERM → `Engine.drain` (graceful: stop admitting, finish
+    live decodes; queued/unsubmitted requests are shed).  Returns a restore
+    callback.  A second signal falls through to the previous handler, so
+    Ctrl-C twice still kills a stuck drain."""
+    import signal
+
+    prev = {}
+
+    def _drain(signum, frame):
+        print(f"\nsignal {signum}: draining (live rows decode to "
+              f"completion; queued requests are shed) ...", flush=True)
+        eng.drain()
+        # restore immediately: the next signal interrupts for real
+        for sig, h in prev.items():
+            signal.signal(sig, h)
+
+    for sig in (signal.SIGINT, signal.SIGTERM):
+        try:
+            prev[sig] = signal.signal(sig, _drain)
+        except ValueError:  # not the main thread (embedded use)
+            pass
+
+    def restore() -> None:
+        for sig, h in prev.items():
+            try:
+                signal.signal(sig, h)
+            except ValueError:
+                pass
+
+    return restore
+
+
+def run_continuous(args) -> None:
+    """Poisson-trace continuous batching via the facade."""
+    max_prompt = max(args.min_prompt, args.max_prompt)
+    scfg = _scheduler_config(args)
     ecfg = _engine_config(args, max_prompt + args.gen + 8, args.rows, scfg)
     eng = _build_engine(args, ecfg)
     reqs = synthesize_requests(args.requests, args.rate,
@@ -137,7 +183,14 @@ def run_continuous(args) -> None:
                                max_new_tokens=args.gen, seed=args.seed)
     print(f"continuous: {len(reqs)} requests, rate {args.rate}/step, "
           f"{args.rows} rows, planner {args.planner}")
-    out = eng.run_trace(reqs, max_steps=args.max_steps)
+    restore = _install_drain_handlers(eng)
+    try:
+        out = eng.run_trace(reqs, max_steps=args.max_steps)
+    finally:
+        restore()
+        # a drained (signalled) run still flushes its exports — that's the
+        # point of graceful shutdown
+        _export_obs(eng, args)
     for r in eng.finished_requests:
         print(f"req {r.req_id}: prompt {r.prompt_len:3d} | arrive "
               f"{r.arrival_step:3d} admit {r.admit_step:3d} finish "
@@ -171,13 +224,68 @@ def run_continuous(args) -> None:
         print(f"  replan @ step {ev['step']} ({tag}): imbalance "
               f"{ev['imbalance_before']:.3f} -> {ev['imbalance_after']:.3f}")
     _collective_audit(eng)
-    _export_obs(eng, args)
+    if out.get("drained"):
+        # graceful shutdown: cancelled requests are expected, not a failure
+        print(f"drained: {out['cancelled']} request(s) shed, "
+              f"{out['finished'] - out['cancelled']} decoded to completion")
+        return
     if out["finished"] != out["total"]:
         raise RuntimeError(
             f"only {out['finished']}/{out['total']} requests finished")
     if args.smoke and out["mid_stream_admissions"] < 1:
         raise RuntimeError("smoke trace produced no mid-stream admission — "
                            "raise --requests or lower --rows")
+
+
+def run_http(args) -> None:
+    """``--http``: the multi-tenant asyncio serving front end
+    (DESIGN.md §13) over the continuous-batching engine.
+
+    SIGINT/SIGTERM drain gracefully: the listener closes, queued requests
+    are shed with 503-style terminal events, live rows decode to
+    completion, and ``--metrics-out`` / ``--trace-out`` are flushed.
+    """
+    import asyncio
+    import signal
+
+    from repro.frontend import FrontendConfig, FrontendServer
+
+    max_prompt = max(args.min_prompt, args.max_prompt)
+    ecfg = _engine_config(args, max_prompt + args.gen + 8, args.rows,
+                          _scheduler_config(args))
+    fcfg = FrontendConfig(
+        host=args.host, port=args.port, admission=args.admission,
+        quantum_tokens=args.quantum, quota_cap_tokens=args.quota_cap,
+        max_prompt_tokens=max_prompt, max_new_tokens_cap=args.gen)
+    eng = _build_engine(args, ecfg)
+
+    async def _main() -> None:
+        server = FrontendServer(eng, fcfg)
+        await server.start()
+        print(f"serving on http://{server.host}:{server.port} "
+              f"(admission={fcfg.admission}, rows={args.rows}, "
+              f"backend={ecfg.cache_backend}, executor={ecfg.executor})",
+              flush=True)
+        stop = asyncio.Event()
+        loop = asyncio.get_running_loop()
+        for sig in (signal.SIGINT, signal.SIGTERM):
+            try:
+                loop.add_signal_handler(sig, stop.set)
+            except (NotImplementedError, RuntimeError):
+                signal.signal(sig, lambda *_: stop.set())
+        await stop.wait()
+        print("signal received: draining (live rows decode to completion, "
+              "queued requests shed) ...", flush=True)
+        await server.shutdown(drain=True)
+        summary = server.engine_loop.fe.summary()
+        print(f"drained after {summary['steps']} steps | "
+              f"{summary['finished']} terminal requests | goodput "
+              f"{summary['goodput_tokens']:.0f} tokens", flush=True)
+
+    try:
+        asyncio.run(_main())
+    finally:
+        _export_obs(eng, args)
 
 
 def run_oneshot(args) -> None:
@@ -268,6 +376,23 @@ def main() -> None:
     ap.add_argument("--replan-cooldown", type=int, default=16)
     ap.add_argument("--no-replan", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    # --- HTTP serving front end (DESIGN.md §13) ------------------------------
+    ap.add_argument("--http", action="store_true",
+                    help="serve the multi-tenant asyncio HTTP front end "
+                         "(POST /v1/generate, POST /v1/stream [SSE], "
+                         "GET /metrics, GET /healthz) over the continuous "
+                         "engine; SIGINT/SIGTERM drain gracefully")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8000,
+                    help="listen port (0 = ephemeral, printed on start)")
+    ap.add_argument("--admission", default="slo", choices=["slo", "fcfs"],
+                    help="admission controller: 'slo' (priority classes, "
+                         "degrade/shed, tenant-fair DRR) or 'fcfs' "
+                         "(baseline global queue)")
+    ap.add_argument("--quantum", type=int, default=512,
+                    help="DRR per-tenant token refill per engine tick")
+    ap.add_argument("--quota-cap", type=int, default=8192,
+                    help="DRR banked-deficit cap per tenant (tokens)")
     # --- observability (DESIGN.md §12) ---------------------------------------
     ap.add_argument("--no-obs", action="store_true",
                     help="disable the metrics/trace subsystem entirely")
@@ -281,7 +406,9 @@ def main() -> None:
                          "(Perfetto-loadable)")
     args = ap.parse_args()
 
-    if args.continuous:
+    if args.http:
+        run_http(args)
+    elif args.continuous:
         run_continuous(args)
     else:
         run_oneshot(args)

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import enum
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -26,6 +26,7 @@ class RequestState(enum.Enum):
     PREFILLING = "prefilling"
     DECODING = "decoding"
     FINISHED = "finished"
+    CANCELLED = "cancelled"  # retired early (client disconnect / shed)
 
 
 @dataclass
@@ -37,6 +38,15 @@ class Request:
     arrival_step: int = 0  # scheduler step at which the request exists
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
+    # multi-tenant serving metadata (DESIGN.md §13).  Defaults keep every
+    # pre-frontend caller unchanged: one anonymous tenant, one priority
+    # class, no deadline.  ``priority`` is an integer class index where
+    # *lower is more urgent* (0 = interactive); the scheduler's preemption
+    # victim choice and queue pick are priority-aware but degenerate to the
+    # historical FIFO/youngest-first behavior when all priorities are equal.
+    tenant: str = "default"
+    priority: int = 1
+    deadline_s: Optional[float] = None  # wall-clock budget from arrival
 
     state: RequestState = RequestState.QUEUED
     row: Optional[int] = None  # live batch row while DECODING
@@ -50,6 +60,7 @@ class Request:
     first_token_time: Optional[float] = None  # wall clock of the first token
     finish_time: Optional[float] = None
     n_preemptions: int = 0  # times evicted back to QUEUED (paged backend)
+    degraded_from: Optional[int] = None  # original max_new_tokens pre-degrade
 
     @property
     def prompt_len(self) -> int:
@@ -61,7 +72,22 @@ class Request:
 
     @property
     def is_finished(self) -> bool:
-        return self.state is RequestState.FINISHED
+        """Terminal: the request will generate no further tokens (normal
+        retirement or cancellation)."""
+        return self.state in (RequestState.FINISHED, RequestState.CANCELLED)
+
+    @property
+    def cancelled(self) -> bool:
+        return self.state is RequestState.CANCELLED
+
+    def deadline_exceeded(self, now: Optional[float] = None) -> bool:
+        """True when a wall-clock deadline was set and has elapsed (always
+        False for requests without a deadline or an arrival stamp)."""
+        if self.deadline_s is None or self.arrival_time is None:
+            return False
+        import time as _time
+        now = _time.time() if now is None else now
+        return (now - self.arrival_time) > self.deadline_s
 
     def reset_for_requeue(self) -> None:
         """Preemption (recompute policy): drop all generated state so a
@@ -142,16 +168,40 @@ def synthesize_requests(
     max_prompt: int = 48,
     max_new_tokens: int = 12,
     seed: int = 0,
+    tenant_mix: Optional[Dict[str, float]] = None,
+    tenant_priorities: Optional[Dict[str, int]] = None,
 ) -> List[Request]:
-    """A reproducible Poisson trace of random-token requests."""
+    """A reproducible Poisson trace of random-token requests.
+
+    ``tenant_mix`` assigns each request a tenant sampled from the given
+    ``{name: weight}`` distribution (weights are normalized); without it
+    every request belongs to the anonymous ``"default"`` tenant, so
+    pre-frontend callers see identical traces.  ``tenant_priorities`` maps
+    tenant names to priority-class indices (missing tenants keep the
+    `Request` default).
+    """
     rng = np.random.default_rng(seed)
     arrivals = poisson_arrivals(n_requests, rate, rng)
+    names, probs = None, None
+    if tenant_mix:
+        names = sorted(tenant_mix)
+        w = np.asarray([float(tenant_mix[n]) for n in names])
+        if (w < 0).any() or w.sum() <= 0:
+            raise ValueError(f"tenant_mix weights must be non-negative with "
+                             f"a positive sum, got {tenant_mix}")
+        probs = w / w.sum()
     reqs = []
     for i, step in enumerate(arrivals):
         T = int(rng.integers(min_prompt, max_prompt + 1))
         prompt = rng.integers(0, vocab_size, size=T).astype(np.int32)
+        kw = {}
+        if names is not None:
+            tenant = names[int(rng.choice(len(names), p=probs))]
+            kw["tenant"] = tenant
+            if tenant_priorities and tenant in tenant_priorities:
+                kw["priority"] = int(tenant_priorities[tenant])
         reqs.append(Request(req_id=i, prompt=prompt, arrival_step=int(step),
-                            max_new_tokens=max_new_tokens))
+                            max_new_tokens=max_new_tokens, **kw))
     return reqs
 
 

@@ -225,6 +225,10 @@ class Scheduler:
         self.step_idx = 0
         self.n_replans = 0
         self.n_preemptions = 0
+        self.n_cancellations = 0
+        # graceful shutdown (DESIGN.md §13): once draining, admission stops
+        # but live rows keep decoding to completion — set via drain()
+        self.draining = False
         self.replan_log: List[dict] = []  # {step, imbalance_before/after}
         self.finished: List[Request] = []
         if self.obs.enabled:
@@ -409,11 +413,16 @@ class Scheduler:
             return True
         return req.eos_id is not None and req.generated[-1] == req.eos_id
 
-    def _retire(self, req: Request) -> None:
+    def _release_row(self, req: Request) -> None:
+        """Free a live request's row and its backing storage (blocks /
+        slot state) — shared by retirement, cancellation, and preemption."""
         row = req.row
         self.state = self.backend.release_rows(self.state, jnp.asarray([row]))
         del self.active[row]
         self.freelist.release(row)
+
+    def _retire(self, req: Request) -> None:
+        self._release_row(req)
         req.state = RequestState.FINISHED
         req.finish_step = self.step_idx
         req.finish_time = time.time()
@@ -434,29 +443,89 @@ class Scheduler:
             m.histogram("e2e_s", help="end-to-end request latency"
                         ).observe(req.finish_time - req.arrival_time)
 
+    # ---- cancellation + draining (DESIGN.md §13) ---------------------------
+
+    def cancel(self, req_id: int) -> bool:
+        """Retire a request early (client disconnect, deadline shed).
+
+        An in-flight row is released exactly like a normal retirement —
+        the paged backend frees its blocks back to the pool (refcounts
+        decremented), the slot backend zeroes the row — so cancellation
+        conserves pool capacity.  A still-queued request is simply removed.
+        The request lands in ``finished`` with state CANCELLED so trace
+        drivers and streams observe a terminal state.  Returns False when
+        the id is unknown or already finished.
+        """
+        req = next((r for r in self.active.values()
+                    if r.req_id == req_id), None)
+        if req is not None:
+            self._release_row(req)
+        else:
+            req = next((r for r in self.queue if r.req_id == req_id), None)
+            if req is None:
+                return False
+            self.queue.remove(req)
+        req.state = RequestState.CANCELLED
+        req.finish_step = self.step_idx
+        req.finish_time = time.time()
+        req.row = None
+        self.finished.append(req)
+        self.n_cancellations += 1
+        self.obs.metrics.counter(
+            "sched_cancellations_total",
+            help="requests retired early (client disconnect / deadline "
+                 "shed); rows and blocks are released like a normal "
+                 "retirement").inc()
+        self.obs.trace.instant("cancel", req=req_id)
+        return True
+
+    def drain(self) -> None:
+        """Graceful shutdown: stop admitting (queued requests stay queued
+        for the driver to cancel or report), finish decoding live rows.
+        `run` cancels the queue and sheds unsubmitted arrivals itself."""
+        self.draining = True
+
     # ---- preemption (paged backend, DESIGN.md §9) --------------------------
 
-    def _preempt_one(self) -> bool:
-        """Evict the youngest active request back to QUEUED (recompute
-        policy), freeing its rows/blocks.  Victim choice protects invested
-        work: the most recently admitted request has the least progress to
-        replay.  Returns False when there is nothing (left) to evict."""
-        victims = list(self.active.values())
-        if not victims:
-            return False
-        victim = max(victims, key=lambda r: (r.admit_step, r.req_id))
-        row = victim.row
-        self.state = self.backend.release_rows(self.state, jnp.asarray([row]))
-        del self.active[row]
-        self.freelist.release(row)
+    def _evict(self, victim: Request) -> None:
+        """Preempt one live request back to QUEUED (recompute policy),
+        freeing its rows/blocks.  Re-queued at the front: among equal
+        priorities it is oldest by FCFS."""
+        self._release_row(victim)
         victim.reset_for_requeue()
-        self.queue.appendleft(victim)  # re-admit first: it is oldest by FCFS
+        self.queue.appendleft(victim)
         self.n_preemptions += 1
         self.obs.metrics.counter(
             "sched_preemptions_total",
-            help="youngest-first evictions back to QUEUED "
-                 "(pool exhaustion)").inc()
-        self.obs.trace.instant("preempt", req=victim.req_id)
+            help="evictions back to QUEUED (pool exhaustion or priority "
+                 "pressure), lowest-priority-youngest-first").inc()
+        self.obs.trace.instant("preempt", req=victim.req_id,
+                               priority=victim.priority)
+
+    def _preempt_one(self) -> bool:
+        """Evict the least-important, then youngest, active request.
+        Victim choice protects invested work within a priority class: the
+        most recently admitted request has the least progress to replay;
+        across classes, low-priority (higher index) rows go first — the
+        frontend's SLO enforcement lever (DESIGN.md §13).  Returns False
+        when there is nothing (left) to evict."""
+        victims = list(self.active.values())
+        if not victims:
+            return False
+        self._evict(max(victims,
+                        key=lambda r: (r.priority, r.admit_step, r.req_id)))
+        return True
+
+    def preempt_lower_priority(self, than: int) -> bool:
+        """Evict one active request whose priority class is strictly less
+        urgent than ``than`` (priority index greater), if any — called by
+        the frontend when a high-priority request is starving behind a
+        full batch.  Returns False when no such victim exists."""
+        victims = [r for r in self.active.values() if r.priority > than]
+        if not victims:
+            return False
+        self._evict(max(victims,
+                        key=lambda r: (r.priority, r.admit_step, r.req_id)))
         return True
 
     def _prepare_decode(self) -> None:
@@ -585,9 +654,20 @@ class Scheduler:
         events: dict = {"step": self.step_idx, "admitted": [], "finished": [],
                         "preempted": 0, "replanned": False}
         preempted_before = self.n_preemptions
-        # admission: fill free rows from the queue head (FCFS)
-        while self.queue and self.admissible(self.queue[0]):
-            req = self.queue.popleft()
+        # admission: fill free rows from the queue, best (priority, FIFO)
+        # first — with uniform priorities this is exactly the historical
+        # strict FCFS (including preempted victims re-admitting first via
+        # appendleft); a more urgent class jumps the line.  Head-of-line
+        # blocking is per pick: the chosen request gates admission, so a
+        # large urgent request is never starved by smaller later ones.
+        # Draining (graceful shutdown) stops admission entirely.
+        while self.queue and not self.draining:
+            i = min(range(len(self.queue)),
+                    key=lambda j: (self.queue[j].priority, j))
+            req = self.queue[i]
+            if not self.admissible(req):
+                break
+            del self.queue[i]
             with self.obs.trace.span("admit", req=req.req_id):
                 row = self._admit(req)
             if row is None:  # backend memory dry even after preemption
@@ -642,7 +722,22 @@ class Scheduler:
         mid_stream_admissions = 0
         t0 = time.time()
         while len(self.finished) < n_total and self.step_idx < max_steps:
-            while i < len(pending) and pending[i].arrival_step <= self.step_idx:
+            if self.draining:
+                # graceful shutdown: cancel everything not yet decoding
+                # (queued + unsubmitted arrivals) so the loop converges on
+                # the in-flight rows alone, which decode to completion
+                for req in list(self.queue):
+                    self.cancel(req.req_id)
+                while i < len(pending):
+                    req = pending[i]
+                    req.state = RequestState.CANCELLED
+                    self.finished.append(req)
+                    self.n_cancellations += 1
+                    i += 1
+                if not self.active:
+                    break
+            while (not self.draining and i < len(pending)
+                   and pending[i].arrival_step <= self.step_idx):
                 self.submit(pending[i])
                 i += 1
             ev = self.step()
@@ -663,7 +758,10 @@ class Scheduler:
             "replans": self.n_replans,
             "replan_log": list(self.replan_log),
             "preemptions": self.n_preemptions,
-            "latency": latency_percentiles(self.finished),
+            "cancelled": sum(1 for r in self.finished if r.cancelled),
+            "drained": self.draining,
+            "latency": latency_percentiles(
+                [r for r in self.finished if not r.cancelled]),
             "memory": self.backend.memory_stats(self.state),
         }
         if wall > 0:

@@ -1,0 +1,215 @@
+"""HTTP front end integration (DESIGN.md §13): an in-process
+`FrontendServer` on an ephemeral port, driven by a raw asyncio client —
+JSON generate, SSE stream ordering against `Engine.stream` ground truth,
+the /metrics tenant-label contract, input validation, and drain refusal."""
+import asyncio
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    CompressionConfig,
+    Engine,
+    EngineConfig,
+    PlannerConfig,
+    Request,
+    SchedulerConfig,
+)
+from repro.frontend import FrontendConfig, FrontendServer
+
+ARCH = "minitron-8b"
+PROMPT = [5, 17, 42, 99, 7, 123, 56, 201, 11, 88]
+GEN = 6
+
+
+def _cfg(rows=2):
+    return EngineConfig.smoke(
+        ARCH, n_shards=4, max_seq_len=48,
+        compression=CompressionConfig(policy="ada_snapkv", budget=12,
+                                      alpha_max=2.0, obs_window=8, sink=2,
+                                      decode_margin=8),
+        planner=PlannerConfig(mode="fairkv_dp", extra_copies=4,
+                              batch_cap=rows),
+        scheduler=SchedulerConfig(max_rows=rows, enable_replan=False))
+
+
+@pytest.fixture(scope="module")
+def shared_params():
+    cfg = _cfg()
+    return cfg, Engine.build(cfg).params
+
+
+# ---------------------------------------------------------------------------
+# raw asyncio HTTP client (the server is stdlib-only; so is the test)
+# ---------------------------------------------------------------------------
+
+
+async def _request(host, port, method, path, payload=None, raw_body=None):
+    """One HTTP/1.1 exchange; returns (status, headers, body bytes).  The
+    server replies ``Connection: close``, so the body is read to EOF."""
+    reader, writer = await asyncio.open_connection(host, port)
+    body = (raw_body if raw_body is not None
+            else b"" if payload is None else json.dumps(payload).encode())
+    writer.write(
+        (f"{method} {path} HTTP/1.1\r\nHost: t\r\n"
+         f"Content-Type: application/json\r\n"
+         f"Content-Length: {len(body)}\r\n\r\n").encode() + body)
+    await writer.drain()
+    status = int((await reader.readline()).split()[1])
+    headers = {}
+    while True:
+        h = await reader.readline()
+        if h in (b"\r\n", b"\n", b""):
+            break
+        k, _, v = h.decode("latin-1").partition(":")
+        headers[k.strip().lower()] = v.strip()
+    data = await reader.read()
+    writer.close()
+    try:
+        await writer.wait_closed()
+    except ConnectionError:
+        pass
+    return status, headers, data
+
+
+def _parse_sse(raw: bytes):
+    """[(event_type, payload_dict), ...] from an SSE byte stream."""
+    events = []
+    for block in raw.decode().strip().split("\n\n"):
+        lines = block.split("\n")
+        assert lines[0].startswith("event: "), lines
+        assert lines[1].startswith("data: "), lines
+        events.append((lines[0][len("event: "):],
+                       json.loads(lines[1][len("data: "):])))
+    return events
+
+
+async def _with_server(engine, body, **cfg_kw):
+    """Start a server on an ephemeral port, run ``body(server)``, always
+    shut down (drain + stop the engine thread)."""
+    cfg_kw.setdefault("port", 0)
+    server = FrontendServer(engine, FrontendConfig(**cfg_kw))
+    await server.start()
+    try:
+        return await body(server)
+    finally:
+        await server.shutdown(drain=True)
+
+
+# ---------------------------------------------------------------------------
+# tests
+# ---------------------------------------------------------------------------
+
+
+def test_http_generate_then_stream_matches_engine_stream(shared_params):
+    """The SSE route must deliver exactly the `Engine.stream` event order:
+    token events with contiguous indices, ``finished`` on the last token,
+    one ``end`` event after it — and the same tokens a fresh engine
+    produces for the same prompt (decode is deterministic argmax)."""
+    cfg, params = shared_params
+    # ground truth from the plain streaming iterator on its own engine
+    ref_eng = Engine.build(cfg, params=params)
+    ref_events = list(ref_eng.stream(
+        [Request(req_id=0, prompt=np.asarray(PROMPT, np.int32),
+                 max_new_tokens=GEN)]))
+    ref_tokens = [e.token for e in ref_events]
+    assert [e.index for e in ref_events] == list(range(len(ref_tokens)))
+    assert [e.finished for e in ref_events[:-1]] == [False] * (
+        len(ref_events) - 1) and ref_events[-1].finished
+
+    async def body(server):
+        payload = {"prompt": PROMPT, "max_new_tokens": GEN,
+                   "tenant": "acme", "priority": 0}
+        status, _, data = await asyncio.wait_for(
+            _request(server.host, server.port, "POST", "/v1/generate",
+                     payload), timeout=120)
+        assert status == 200
+        out = json.loads(data)
+        assert out["state"] == "finished"
+        assert out["tokens"] == ref_tokens
+        assert out["tenant"] == "acme" and out["priority"] == 0
+
+        status, headers, raw = await asyncio.wait_for(
+            _request(server.host, server.port, "POST", "/v1/stream",
+                     payload), timeout=120)
+        assert status == 200
+        assert headers["content-type"].startswith("text/event-stream")
+        events = _parse_sse(raw)
+        kinds = [k for k, _ in events]
+        assert kinds == ["token"] * len(ref_tokens) + ["end"]
+        tokens = [ev for k, ev in events if k == "token"]
+        assert [ev["token"] for ev in tokens] == ref_tokens
+        assert [ev["index"] for ev in tokens] == list(range(len(ref_tokens)))
+        assert [ev["finished"] for ev in tokens[:-1]] == [False] * (
+            len(tokens) - 1) and tokens[-1]["finished"]
+        end = events[-1][1]
+        assert end["state"] == "finished" and end["tokens"] == ref_tokens
+
+        # the §13 observability contract over the same engine's registry
+        status, headers, prom = await asyncio.wait_for(
+            _request(server.host, server.port, "GET", "/metrics"),
+            timeout=30)
+        assert status == 200
+        text = prom.decode()
+        for family in ("slo_attained_total", "goodput_tokens_total",
+                       "frontend_ttft_steps_bucket",
+                       "frontend_admission_total"):
+            assert f"{family}{{" in text, family
+        assert 'tenant="acme"' in text
+
+        status, _, health = await _request(
+            server.host, server.port, "GET", "/healthz")
+        assert status == 200 and json.loads(health)["status"] == "ok"
+
+    asyncio.run(_with_server(Engine.build(cfg, params=params), body))
+
+
+def test_http_validation_and_routing(shared_params):
+    cfg, params = shared_params
+
+    async def body(server):
+        h, p = server.host, server.port
+        status, _, data = await _request(h, p, "POST", "/v1/generate",
+                                         raw_body=b"{not json")
+        assert status == 400 and b"invalid JSON" in data
+        status, _, data = await _request(h, p, "POST", "/v1/generate",
+                                         {"prompt": []})
+        assert status == 400 and b"prompt" in data
+        status, _, data = await _request(h, p, "POST", "/v1/generate",
+                                         {"prompt": [1, -2]})
+        assert status == 400
+        status, _, data = await _request(
+            h, p, "POST", "/v1/generate",
+            {"prompt": [1, 2, 3], "max_new_tokens": 0})
+        assert status == 400 and b"max_new_tokens" in data
+        status, _, data = await _request(
+            h, p, "POST", "/v1/generate", {"prompt": [1] * 9})
+        assert status == 400 and b"too long" in data  # max_prompt_tokens
+        status, _, _ = await _request(h, p, "GET", "/nope")
+        assert status == 404
+        status, _, _ = await _request(h, p, "GET", "/v1/generate")
+        assert status == 405
+
+    asyncio.run(_with_server(Engine.build(cfg, params=params), body,
+                             max_prompt_tokens=8))
+
+
+def test_http_drain_refuses_new_work(shared_params):
+    cfg, params = shared_params
+
+    async def body(server):
+        loop = asyncio.get_running_loop()
+        drained = await loop.run_in_executor(
+            None, server.engine_loop.drain, 30.0)
+        assert drained
+        status, _, data = await _request(
+            server.host, server.port, "POST", "/v1/generate",
+            {"prompt": PROMPT, "max_new_tokens": 2})
+        assert status == 503 and b"draining" in data
+        status, _, health = await _request(
+            server.host, server.port, "GET", "/healthz")
+        assert status == 200
+        assert json.loads(health)["status"] == "draining"
+
+    asyncio.run(_with_server(Engine.build(cfg, params=params), body))
