@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Sequence
 
 from repro.frontend.config import FrontendConfig, PriorityClass
 from repro.serving.request import Request
@@ -70,13 +70,17 @@ class AdmissionController:
 
     # ---- helpers -----------------------------------------------------------
 
-    def _fits_now(self, sched, req: Request) -> bool:
-        """Free row + backend projected-cost admission at the current ask."""
+    def _fits_now(self, sched, req: Request,
+                  pending: Sequence[Request]) -> bool:
+        """Free row + backend projected-cost admission at the current ask,
+        charged jointly with the ``pending`` requests already admitted this
+        tick (submitted but not yet spliced, so invisible to ``state``)."""
         return (len(sched.freelist) > 0
-                and sched.backend.admissible(sched.state, req))
+                and sched.backend.admissible(sched.state, req,
+                                             pending=pending))
 
-    def _degrade_ask(self, sched, req: Request,
-                     cls: PriorityClass) -> Optional[int]:
+    def _degrade_ask(self, sched, req: Request, cls: PriorityClass,
+                     pending: Sequence[Request]) -> Optional[int]:
         """Largest ``max_new_tokens`` in [floor, current) whose projected
         cost fits right now (admissibility is monotone in the ask, so
         binary search); None when even the floor does not fit."""
@@ -87,7 +91,8 @@ class AdmissionController:
 
         def fits(m: int) -> bool:
             probe = dataclasses.replace(req, max_new_tokens=m)
-            return sched.backend.admissible(sched.state, probe)
+            return sched.backend.admissible(sched.state, probe,
+                                            pending=pending)
 
         lo, hi = cls.degrade_floor, req.max_new_tokens - 1
         if not fits(lo):
@@ -102,7 +107,12 @@ class AdmissionController:
 
     # ---- the decision table ------------------------------------------------
 
-    def decide(self, sched, req: Request) -> Decision:
+    def decide(self, sched, req: Request,
+               pending: Sequence[Request] = ()) -> Decision:
+        """One verdict for ``req``.  ``pending`` are requests already
+        admitted this pump tick (in the engine's queue, not yet spliced):
+        capacity checks charge them too, so a burst admitted in one tick
+        cannot jointly overshoot the backend budget."""
         cls = self.cfg.class_for(req.priority)
         waited = sched.step_idx - req.arrival_step
         # 1. dead on arrival or already past its latency budget: shed
@@ -121,9 +131,9 @@ class AdmissionController:
                                     degrade_to=floor)
             return Decision(REJECT, reason=f"never_fits: {never}")
         # 3. capacity now?
-        if self._fits_now(sched, req):
+        if self._fits_now(sched, req, pending):
             return Decision(ADMIT, reason="fits")
-        degrade_to = self._degrade_ask(sched, req, cls)
+        degrade_to = self._degrade_ask(sched, req, cls, pending)
         if degrade_to is not None and waited >= cls.ttft_slo_steps // 2:
             # only trade length for latency once the SLO is actually at
             # risk — a young request would rather wait for the full ask
@@ -146,12 +156,14 @@ class FCFSController:
     def __init__(self, cfg: FrontendConfig):
         self.cfg = cfg
 
-    def decide(self, sched, req: Request) -> Decision:
+    def decide(self, sched, req: Request,
+               pending: Sequence[Request] = ()) -> Decision:
         never = sched.backend.never_fits(req)
         if never is not None:
             return Decision(REJECT, reason=f"never_fits: {never}")
         if (len(sched.freelist) > 0
-                and sched.backend.admissible(sched.state, req)):
+                and sched.backend.admissible(sched.state, req,
+                                             pending=pending)):
             return Decision(ADMIT, reason="fits")
         return Decision(QUEUE, reason="no_capacity",
                         global_block=True)  # strict FCFS: head blocks all

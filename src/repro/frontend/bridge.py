@@ -202,6 +202,12 @@ class EngineLoop:
         try:
             while not self._stop.is_set():
                 self._absorb_inbox()
+                # emit BEFORE the idle gate: a request made terminal during
+                # absorption itself (synchronous rejection while draining /
+                # over backlog, cancel of a still-queued request) must
+                # deliver its end event even when no pump tick follows —
+                # otherwise the awaiting handler hangs forever
+                self._emit()
                 if self.fe.idle:
                     if self.fe.draining:
                         self._drained.set()

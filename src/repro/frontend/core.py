@@ -28,6 +28,8 @@ from __future__ import annotations
 import time
 from typing import Callable, Dict, List, Optional
 
+import numpy as np
+
 from repro.frontend import admission as adm
 from repro.frontend import queues as q
 from repro.frontend.accounting import TenantAccounting
@@ -45,9 +47,22 @@ class FrontendScheduler:
         self.cfg = cfg if cfg is not None else FrontendConfig()
         self.obs = sched.obs
         self.controller = adm.make_admission(self.cfg)
+        prios = [c.priority for c in self.cfg.classes]
+        self._prio_lo, self._prio_hi = min(prios), max(prios)
         if self.cfg.admission == "slo":
+            # FrontendConfig's quota knobs are denominated in *request*
+            # tokens (prompt + generation), but the DRR charges the
+            # backend's request_cost — L·H-scaled projected tokens (slot)
+            # or blocks (paged).  Calibrate the quantum/cap into backend
+            # units so a "512-token" quantum means 512 request tokens on
+            # any model geometry; without this, every request on a
+            # many-layer model outprices the cap and could never be
+            # admitted (the DRR's saturation path still guarantees
+            # liveness, but fairness would degenerate).
+            unit = self._cost_unit()
             self.queue = q.DeficitRoundRobin(
-                self.cfg.quantum_tokens, self.cfg.quota_cap_tokens,
+                max(1, round(self.cfg.quantum_tokens * unit)),
+                max(1, round(self.cfg.quota_cap_tokens * unit)),
                 self.cfg.max_queue_per_tenant)
         else:  # fcfs baseline: one global queue, tenant- and quota-blind
             self.queue = q.SingleQueue()
@@ -63,6 +78,13 @@ class FrontendScheduler:
         # wake waiting HTTP handlers); called with each newly terminal req
         self.on_terminal: Optional[Callable[[Request], None]] = None
 
+    def _cost_unit(self) -> float:
+        """Backend cost units per request token, measured with a canonical
+        64-token probe against the live backend's projection machinery."""
+        probe = Request(req_id=-1, prompt=np.zeros(32, np.int32),
+                        max_new_tokens=32)
+        return max(1.0, float(self.sched.backend.request_cost(probe))) / 64.0
+
     # ---- ingress -----------------------------------------------------------
 
     def submit(self, req: Request) -> bool:
@@ -72,6 +94,11 @@ class FrontendScheduler:
         if req.arrival_time is None:
             req.arrival_time = time.time()
         req.arrival_step = self.sched.step_idx
+        # clamp client-supplied priority to the configured ladder: an
+        # out-of-range value (e.g. a negative one) would otherwise outrank
+        # every configured class in the scheduler's queue pick and arm
+        # preemption against all of them
+        req.priority = max(self._prio_lo, min(self._prio_hi, req.priority))
         self._seen_tenants.add(req.tenant)
         if self.draining:
             self._reject(req, "draining")
@@ -143,25 +170,30 @@ class FrontendScheduler:
     def pump(self) -> dict:
         """One frontend tick (see module docstring).  Returns the engine
         step events extended with the frontend's admission activity."""
-        submitted = 0
+        # requests handed to the engine THIS tick: they are in sched.queue
+        # but not yet spliced, so the backend's admissible() cannot see
+        # their charge — the controller gets them as ``pending`` so later
+        # admissions this tick are checked against the joint budget, not
+        # each against the same un-spliced state
+        pending: List[Request] = []
         preempted_this_tick = False
         # rows the engine can fill this tick: free rows minus the requeues
         # it already owned at tick start (preemption victims re-admit
         # first).  Snapshot the backlog NOW — our own in-tick submissions
-        # land in ``sched.queue`` too and are counted via ``submitted``,
+        # land in ``sched.queue`` too and are counted via ``pending``,
         # and a mid-tick preemption that frees a row must enlarge the room
         # for the urgent request that armed it, not for its victim.
         engine_backlog = len(self.sched.queue)
 
         def room() -> int:
-            return len(self.sched.freelist) - engine_backlog - submitted
+            return len(self.sched.freelist) - engine_backlog - len(pending)
 
         def cost(req: Request) -> float:
             return float(self.sched.backend.request_cost(req))
 
         def offer(tenant: str, req: Request) -> str:
-            nonlocal submitted, preempted_this_tick
-            d = self.controller.decide(self.sched, req)
+            nonlocal preempted_this_tick
+            d = self.controller.decide(self.sched, req, pending)
             if (d.action == adm.QUEUE and d.preempt
                     and not preempted_this_tick
                     and self.sched.preempt_lower_priority(req.priority)):
@@ -171,7 +203,7 @@ class FrontendScheduler:
                 # straight back to the victim at step()).  At most one
                 # eviction per tick: one opening is one row; more is thrash.
                 preempted_this_tick = True
-                d = self.controller.decide(self.sched, req)
+                d = self.controller.decide(self.sched, req, pending)
             if (d.action in (adm.ADMIT, adm.DEGRADE) and room() <= 0):
                 # controller sized against the backend, but every free row
                 # is already spoken for this tick — wait, engine-full
@@ -187,7 +219,7 @@ class FrontendScheduler:
                         req.degraded_from = req.max_new_tokens
                     req.max_new_tokens = int(d.degrade_to)
                 self.sched.submit(req)
-                submitted += 1
+                pending.append(req)
                 return q.ADMITTED
             return q.STALL if d.global_block else q.BLOCKED
 

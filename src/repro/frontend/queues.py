@@ -14,7 +14,8 @@ Mechanics per `tick`:
 - tenants are visited in round-robin order starting after the last tenant
   served first in the previous tick (no positional bias);
 - a tenant admits requests from its FIFO head while its deficit covers the
-  head's cost; each admission charges the deficit by the cost;
+  head's cost (clamped to ``cap`` — see oversized items below); each
+  admission charges the deficit by the cost, clamped to the banked amount;
 - a tenant whose queue empties forfeits its remaining deficit (classic DRR
   — credit only banks while backlogged).
 
@@ -22,8 +23,15 @@ Starvation-freedom (property-tested): while a tenant stays backlogged its
 deficit grows by ``quantum`` per tick and is never charged except by its
 own admissions, so any head request with cost ≤ ``cap`` becomes admissible
 within ``ceil(cost / quantum)`` ticks; the visit order guarantees the
-tenant is offered the admission attempt each tick.  Token conservation
-(also property-tested): for every tenant,
+tenant is offered the admission attempt each tick.  An *oversized* head
+request (cost > ``cap``) can never be covered by banked deficit, so the
+quota gate saturates instead of starving: once the tenant's deficit
+reaches ``cap`` — the maximum wait any request can be charged,
+``ceil(cap / quantum)`` ticks — the item is offered anyway and, if
+admitted, charged the entire banked deficit.  Every queued item therefore
+reaches the admission controller (which may admit, reject, or shed it) in
+bounded ticks; nothing is silently head-of-line blocked forever.  Token
+conservation (also property-tested): for every tenant,
 ``deficit == refilled - charged - forfeited`` exactly, and the deficit is
 always within ``[0, cap]``.
 
@@ -151,13 +159,18 @@ class DeficitRoundRobin:
             while t.queue:
                 item = t.queue[0]
                 c = float(cost(item))
-                if c > t.deficit:
+                # an oversized item (c > cap) can never be covered by
+                # banked deficit — gate it on quota *saturation* instead,
+                # so it still reaches the controller (admit/reject there)
+                # rather than head-of-line blocking its tenant forever
+                if min(c, self.cap) > t.deficit:
                     break  # quota exhausted: bank and wait for refills
                 verdict = offer(name, item)
                 if verdict == ADMITTED:
                     t.queue.popleft()
-                    t.deficit -= c
-                    t.charged += c
+                    charge = min(c, t.deficit)  # oversized: drain the bank
+                    t.deficit -= charge
+                    t.charged += charge
                     admitted.append((name, item))
                 elif verdict == REJECTED:
                     t.queue.popleft()

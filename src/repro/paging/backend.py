@@ -297,12 +297,15 @@ class PagedBackend(CacheBackend):
         return int(self._layer_blocks(req.prompt_len, req.max_new_tokens,
                                       worst_case=True).sum())
 
-    def admissible(self, state, req):
+    def admissible(self, state, req, pending=()):
         if self.cfg.attention_free or self.pool is None:
             return True
         if self.pool.n_partitions > 1:
             need = self._partition_need(req.prompt_len, req.max_new_tokens,
                                         worst_case=False)  # (L, slot_parts)
+            for p in pending:  # accepted-not-yet-spliced charge (see base)
+                need = need + self._partition_need(
+                    p.prompt_len, p.max_new_tokens, worst_case=False)
             free = self.pool.free_blocks_by_partition()
             L = free.shape[0]
             # the request lands in one (unknown) row partition — require the
@@ -312,6 +315,9 @@ class PagedBackend(CacheBackend):
             return bool((free >= need).all())
         need = self._layer_blocks(req.prompt_len, req.max_new_tokens,
                                   worst_case=False)
+        for p in pending:
+            need = need + self._layer_blocks(p.prompt_len, p.max_new_tokens,
+                                             worst_case=False)
         return bool((self.pool.free_blocks() >= need).all())
 
     def never_fits(self, req):

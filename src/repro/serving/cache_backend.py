@@ -123,8 +123,14 @@ class CacheBackend:
         and fail-fast; an upper bound on what the request can ever pin."""
         raise NotImplementedError
 
-    def admissible(self, state, req: Request) -> bool:
-        """Do free resources cover the request's projected prefill need?"""
+    def admissible(self, state, req: Request,
+                   pending: Sequence[Request] = ()) -> bool:
+        """Do free resources cover the request's projected prefill need?
+
+        ``pending`` are requests already accepted but not yet spliced into
+        ``state`` (e.g. admitted earlier in the same frontend tick) — their
+        projected charge counts against the budget too, so a burst of
+        individually-admissible requests cannot jointly over-commit."""
         raise NotImplementedError
 
     def never_fits(self, req: Request) -> Optional[str]:
@@ -229,9 +235,10 @@ class SlotBackend(CacheBackend):
             self.ccfg.policy, self.ccfg, req.prompt_len, req.max_new_tokens,
             self.cfg.n_layers, self.cfg.n_kv_heads)
 
-    def admissible(self, state, req):
+    def admissible(self, state, req, pending=()):
         if self.max_live_tokens is not None:
-            if (self.live_tokens(state) + self.request_cost(req)
+            reserved = sum(self.request_cost(p) for p in pending)
+            if (self.live_tokens(state) + reserved + self.request_cost(req)
                     > self.max_live_tokens):
                 return False
         if (self.max_live_tokens_per_shard is not None
@@ -240,6 +247,8 @@ class SlotBackend(CacheBackend):
             # gates admission, so an imbalanced plan saturates one shard's
             # budget while balanced plans keep admitting — the fig8 signal
             load = self.per_shard_live(state) + self.per_shard_cost(req)
+            for p in pending:
+                load = load + self.per_shard_cost(p)
             if (load > self.max_live_tokens_per_shard).any():
                 return False
         return True

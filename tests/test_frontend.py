@@ -104,13 +104,14 @@ def test_drr_token_conservation(quantum, cap_mult, costs, seed):
     """For every tenant after every tick:
     ``deficit == refilled - charged - forfeited`` exactly, and
     ``0 <= deficit <= cap`` — across mixed admit/reject/block/stall
-    verdicts and mid-stream pushes."""
+    verdicts, mid-stream pushes, and *oversized* costs above the cap
+    (admitted by draining the banked deficit)."""
     cap = quantum * cap_mult
     drr = DeficitRoundRobin(quantum, cap)
     rng = np.random.default_rng(seed)
     tenants = ["a", "b", "c"]
     for i, c in enumerate(costs):
-        drr.push(tenants[i % len(tenants)], (i, min(c, cap)))
+        drr.push(tenants[i % len(tenants)], (i, c))
 
     verdicts = (q.ADMITTED, q.REJECTED, q.BLOCKED, q.STALL)
 
@@ -126,6 +127,26 @@ def test_drr_token_conservation(quantum, cap_mult, costs, seed):
             assert drr.deficit(t) == pytest.approx(
                 refilled - charged - forfeited)
             assert 0.0 <= drr.deficit(t) <= cap + 1e-9
+
+
+def test_drr_oversized_item_reaches_controller():
+    """A head item priced above the banked-deficit cap can never be
+    covered by quota — it must still be offered once the deficit saturates
+    at the cap (charging the whole bank), not head-of-line block its
+    tenant forever (regression: clients of such requests hung)."""
+    drr = DeficitRoundRobin(4, 8)
+    drr.push("t", ("big", 100))  # cost 100 >> cap 8
+    drr.push("t", ("small", 2))
+    offered, admitted = [], []
+    for _ in range(math.ceil(8 / 4) + 1):
+        admitted += drr.tick(
+            lambda item: item[1],
+            lambda t, item: (offered.append(item), q.ADMITTED)[1])
+    assert ("big", 100) in offered, "oversized item never reached offer()"
+    assert [i for _, i in admitted] == [("big", 100), ("small", 2)]
+    refilled, charged, forfeited = drr.counters("t")
+    assert drr.deficit("t") == pytest.approx(refilled - charged - forfeited)
+    assert 0.0 <= drr.deficit("t") <= 8.0
 
 
 def test_drr_validates_config():
@@ -170,7 +191,7 @@ class _StubBackend:
     def never_fits(self, req):
         return self.never
 
-    def admissible(self, state, req):
+    def admissible(self, state, req, pending=()):
         return req.max_new_tokens <= self.fits_upto
 
     def request_cost(self, req):
@@ -402,3 +423,67 @@ def test_frontend_backlog_bound_and_cancel(shared_params):
     assert fe.reject_reasons[2] == "cancelled"
     assert len(fe.queue) == 0
     assert fe.cancel(2) is False
+
+
+def test_frontend_serves_requests_costing_more_than_quota_cap(shared_params):
+    """A quota cap far below every request's projected cost must not hang
+    the trace: the DRR's saturation path still surfaces each request to
+    the admission controller, which admits (or sheds) it (regression:
+    such requests were never offered, admitted, or rejected)."""
+    cfg, params = shared_params
+    eng = Engine.build(cfg, params=params)
+    fe = _frontend(eng, quantum_tokens=1, quota_cap_tokens=1)
+    assert all(
+        fe.sched.backend.request_cost(r) > fe.queue.cap
+        for r in _tenant_trace(cfg.model.vocab_size, n=4, seed=23)), \
+        "precondition: every request must outprice the quota cap"
+    out = run_frontend_trace(fe, _tenant_trace(cfg.model.vocab_size, n=4,
+                                               seed=23), max_steps=400)
+    assert out["converged"] and out["finished"] == out["total"]
+
+
+def test_frontend_quota_calibrated_to_backend_units(shared_params):
+    """FrontendConfig quotas are denominated in request tokens; the DRR
+    charges backend cost units (L·H-scaled).  The constructor must scale
+    the knobs so a default-sized cap covers a typical request's cost."""
+    cfg, params = shared_params
+    eng = Engine.build(cfg, params=params)
+    fe = _frontend(eng)  # quantum 64 / cap 512 request tokens
+    req = _tenant_trace(cfg.model.vocab_size, n=1)[0]  # <= 20 tokens
+    assert fe.sched.backend.request_cost(req) <= fe.queue.cap, (
+        "a ~20-token request must fit a 512-token quota cap after "
+        "unit calibration")
+
+
+def test_frontend_submit_clamps_priority_to_configured_classes(
+        shared_params):
+    """A client-supplied out-of-range priority (e.g. -5) would outrank
+    every configured class and arm preemption; submit clamps it to the
+    configured ladder on both ends."""
+    cfg, params = shared_params
+    eng = Engine.build(cfg, params=params)
+    fe = _frontend(eng)
+    lo = _tenant_trace(cfg.model.vocab_size, n=2, seed=29)
+    lo[0].priority, lo[1].priority = -5, 99
+    for r in lo:
+        fe.submit(r)
+    assert lo[0].priority == 0, "clamped to the most urgent class"
+    assert lo[1].priority == 2, "clamped to the least urgent class"
+
+
+def test_backend_admissible_charges_pending(shared_params):
+    """Several admissions in one pump tick are checked against the same
+    un-spliced state; the ``pending`` charge must make the joint check
+    fail where each individual one passes."""
+    cfg, params = shared_params
+    eng = Engine.build(cfg, params=params)
+    sched = eng._ensure_scheduler()
+    b = sched.backend
+    req = Request(req_id=0, prompt=np.zeros(16, np.int32), max_new_tokens=4)
+    old = b.max_live_tokens
+    try:
+        b.max_live_tokens = int(b.request_cost(req) * 1.5)  # one fits
+        assert b.admissible(sched.state, req)
+        assert not b.admissible(sched.state, req, pending=[req])
+    finally:
+        b.max_live_tokens = old

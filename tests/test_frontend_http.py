@@ -195,6 +195,29 @@ def test_http_validation_and_routing(shared_params):
                              max_prompt_tokens=8))
 
 
+def test_engine_loop_emits_end_for_terminal_at_submit(shared_params):
+    """A request rejected synchronously at submit (here: loop already
+    draining and idle) must still deliver its ``end`` event — the emission
+    sweep runs on inbox absorption, not only after a pump tick
+    (regression: the awaiting handler hung forever)."""
+    import queue as pyqueue
+
+    from repro.frontend.bridge import EngineLoop
+
+    cfg, params = shared_params
+    loop = EngineLoop(Engine.build(cfg, params=params)).start()
+    try:
+        assert loop.drain(timeout=30.0)  # loop now idles in the sleep branch
+        out = pyqueue.SimpleQueue()
+        loop.submit(PROMPT, max_new_tokens=2, deliver=out.put)
+        ev = out.get(timeout=10.0)
+        assert ev["type"] == "end"
+        assert ev["state"] == "cancelled" and ev["reason"] == "draining"
+        assert ev["tokens"] == [] and ev["n_generated"] == 0
+    finally:
+        loop.stop()
+
+
 def test_http_drain_refuses_new_work(shared_params):
     cfg, params = shared_params
 
