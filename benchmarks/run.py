@@ -52,6 +52,7 @@ SUITES = {
     "fig8": "benchmarks.fig8_fair_copying_tp",
     "fig9": "benchmarks.fig9_paged_kernel",
     "fig10": "benchmarks.fig10_goodput",
+    "fig11": "benchmarks.fig11_prefix_reuse",
     "table3": "benchmarks.table3_quality_proxy",
 }
 

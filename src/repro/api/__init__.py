@@ -86,6 +86,10 @@ _LAZY = {
     "synthesize_requests": "repro.serving.request:synthesize_requests",
     "poisson_arrivals": "repro.serving.request:poisson_arrivals",
     "latency_percentiles": "repro.serving.request:latency_percentiles",
+    # shared-prefix reuse + chunked prefill (DESIGN.md §14)
+    "PrefixConfig": "repro.prefix:PrefixConfig",
+    "PrefixIndex": "repro.prefix:PrefixIndex",
+    "PrefixEntry": "repro.prefix:PrefixEntry",
     # paged cache backend (DESIGN.md §9)
     "PagingConfig": "repro.paging.block_pool:PagingConfig",
     "PoolExhausted": "repro.paging.block_pool:PoolExhausted",

@@ -34,6 +34,7 @@ from repro.exec.base import ExecutorConfig
 from repro.frontend.config import FrontendConfig
 from repro.obs import ObsConfig
 from repro.paging.block_pool import PagingConfig
+from repro.prefix import PrefixConfig
 from repro.serving.scheduler import SchedulerConfig
 
 # the one dtype-name table: validation and Engine's resolution both read it
@@ -79,6 +80,11 @@ class EngineConfig:
     # admission, HTTP ingress; only `serve --http` / `FrontendServer` read
     # it, so offline engines pay nothing for the default
     frontend: FrontendConfig = field(default_factory=FrontendConfig)
+    # shared-prefix block reuse + chunked prefill (DESIGN.md §14): chunking
+    # needs chunk_tokens > 0 and a dense-attention model; block sharing
+    # additionally needs the paged backend on a single-partition pool —
+    # the scheduler degrades gracefully when a piece is missing
+    prefix: PrefixConfig = field(default_factory=PrefixConfig)
 
     def __post_init__(self):
         if not isinstance(self.model, ModelConfig):
@@ -140,6 +146,16 @@ class EngineConfig:
             raise TypeError(
                 f"frontend must be a FrontendConfig, got "
                 f"{type(self.frontend).__name__}")
+        if not isinstance(self.prefix, PrefixConfig):
+            raise TypeError(
+                f"prefix must be a PrefixConfig, got "
+                f"{type(self.prefix).__name__}")
+        if self.prefix.enabled and self.cache_backend != "paged":
+            raise ValueError(
+                "prefix.enabled (shared-prefix block reuse) requires "
+                f"cache_backend='paged', got {self.cache_backend!r}; "
+                "chunked prefill alone (prefix.chunk_tokens > 0, "
+                "enabled=False) works on any backend")
 
     # ---- constructors ------------------------------------------------------
 

@@ -395,7 +395,8 @@ class Engine:
                 # traces coexist without evicting each other
                 executor=self.executor,
                 head_importance=self.head_importance,
-                obs=self.obs, plan_profile=self.profile)
+                obs=self.obs, plan_profile=self.profile,
+                prefix_cfg=self.cfg.prefix)
             # inherit any one-shot straggler mitigation
             self._scheduler.shard_speeds = self._shard_speeds
             if self._drain_pending:
@@ -518,6 +519,14 @@ class Engine:
         return out
 
     # ---- observability (DESIGN.md §12) -------------------------------------
+
+    def prefix_stats(self) -> dict:
+        """Prefix-cache census (entries, pinned, blocks held, hit/miss/
+        eviction counters — DESIGN.md §14).  Empty dict until a continuous
+        scheduler with sharing enabled exists."""
+        if self._scheduler is None:
+            return {}
+        return self._scheduler.prefix_stats()
 
     def metrics(self) -> dict:
         """Deterministic snapshot of every metric family (counters, gauges,

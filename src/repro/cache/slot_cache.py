@@ -260,6 +260,70 @@ def fill_from_selection(
     )
 
 
+def append_selection(
+    cache: SlotCache,
+    layer: int,
+    k_full: jnp.ndarray,  # (B, Ck, Hkv, Dh) post-RoPE chunk keys
+    v_full: jnp.ndarray,  # (B, Ck, Hkv, Dh)
+    sel_idx: jnp.ndarray,  # (B, Hkv, Csel) selected positions into Ck
+    sel_len: jnp.ndarray,  # (B, Hkv) int32 retained counts (<= Csel)
+    plan: PlanArrays,
+    rows: jnp.ndarray,  # (B,) global row ids for ownership
+    start: jnp.ndarray,  # (B,) int32 absolute position of chunk token 0
+) -> SlotCache:
+    """Append a chunk's compression-selected KV *after* existing entries.
+
+    The chunked-prefill counterpart of `fill_from_selection` (DESIGN.md
+    §14): instead of replacing the layer's slice, selected entries land at
+    columns ``lengths .. lengths+keep`` and entry positions are made
+    absolute (``start + sel_idx``), so each chunk's keep-set accumulates
+    into the slot layout and attention over the cache stays
+    order-independent (keys are post-RoPE, positions explicit).  The caller
+    guarantees headroom (``keep <= C - lengths``); columns past capacity are
+    dropped defensively.
+    """
+    L, S, B, C, Dh = cache.k.shape
+    heads = plan.slot_head[layer]  # (S,)
+    safe_heads = jnp.maximum(heads, 0)
+    own = plan.owner_mask_rows(layer, rows)  # (S, B)
+    idx = jnp.take(sel_idx, safe_heads, axis=1).transpose(1, 0, 2)  # (S,B,Cs)
+
+    def gather_one(kf, vf, ix):  # kf: (Ck, Hkv, Dh), ix: (S, Csel)
+        hh = safe_heads  # (S,)
+        kv_h = kf[:, hh, :]  # (Ck, S, Dh)
+        vv_h = vf[:, hh, :]
+        k_s = jnp.take_along_axis(kv_h.transpose(1, 0, 2), ix[..., None], axis=1)
+        v_s = jnp.take_along_axis(vv_h.transpose(1, 0, 2), ix[..., None], axis=1)
+        return k_s, v_s  # (S, Csel, Dh)
+
+    k_sel, v_sel = jax.vmap(gather_one)(k_full, v_full, idx.transpose(1, 0, 2))
+    k_sel = k_sel.transpose(1, 0, 2, 3).astype(cache.k.dtype)  # (S,B,Cs,Dh)
+    v_sel = v_sel.transpose(1, 0, 2, 3).astype(cache.v.dtype)
+    Csel = k_sel.shape[2]
+    lens_new = jnp.take(sel_len, safe_heads, axis=1).T  # (S, B)
+    lens_new = jnp.where(own, lens_new, 0).astype(jnp.int32)
+    # absolute entry positions; invalid tail masked out by the column drop
+    pos_sel = (start[None, :, None] + idx).astype(jnp.int32)  # (S, B, Csel)
+    cur = cache.lengths[layer]  # (S, B)
+    j = jnp.arange(Csel, dtype=jnp.int32)
+    cols = cur[:, :, None] + j[None, None, :]  # (S, B, Csel)
+    valid = j[None, None, :] < lens_new[:, :, None]
+    cols = jnp.where(valid, cols, C)  # C = out of range -> mode="drop"
+    s_ix = jnp.arange(S)[:, None, None]
+    b_ix = jnp.arange(B)[None, :, None]
+    k_layer = cache.k[layer].at[s_ix, b_ix, cols].set(k_sel, mode="drop")
+    v_layer = cache.v[layer].at[s_ix, b_ix, cols].set(v_sel, mode="drop")
+    p_layer = cache.pos[layer].at[s_ix, b_ix, cols].set(pos_sel, mode="drop")
+    new_len = jnp.minimum(cur + lens_new, C)
+    return SlotCache(
+        k=cache.k.at[layer].set(k_layer),
+        v=cache.v.at[layer].set(v_layer),
+        lengths=cache.lengths.at[layer].set(new_len),
+        pos=cache.pos.at[layer].set(p_layer),
+        positions=cache.positions,
+    )
+
+
 # ---------------------------------------------------------------------------
 # Row-level ops (continuous batching, DESIGN.md §7)
 # ---------------------------------------------------------------------------

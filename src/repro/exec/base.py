@@ -95,6 +95,7 @@ class Executor:
         # actual (re)trace counts, incremented from inside the traced fns —
         # the no-retrace regression observable (a replan must not bump them)
         self.prefill_traces = 0
+        self.prefill_chunk_traces = 0
         self.decode_traces = 0
 
     # ---- geometry ----------------------------------------------------------
@@ -129,6 +130,19 @@ class Executor:
         """Compiled prefill step → (ServeState, logits (B, V),
         lengths (L, Hkv, B)).  ``rows`` are the global batch-row ids the
         strided owner rule is evaluated at (default arange(B))."""
+        raise NotImplementedError
+
+    def prefill_chunk(self, sp: dict, tokens: jnp.ndarray, pa, state,
+                      rows: jnp.ndarray, start, valid, quota,
+                      head_importance: Optional[np.ndarray] = None) -> Tuple:
+        """Compiled chunked-prefill step (DESIGN.md §14) → (ServeState,
+        logits (B, V), lengths (L, Hkv, B)).
+
+        ``tokens`` is a fixed-width (B, chunk_tokens) slice (last chunk
+        zero-padded, ``valid`` (B,) counts real tokens), ``start`` (B,) the
+        absolute position of each row's chunk, and ``quota`` (L,) the
+        per-head keep cap the boundary compression is clamped to.  All are
+        traced arguments, so one trace serves every chunk of every prompt."""
         raise NotImplementedError
 
     def decode(self, sp: dict, state, pa, tokens: jnp.ndarray,

@@ -30,6 +30,7 @@ class LocalExecutor(Executor):
         super().__init__(model_cfg, ccfg, exec_cfg=exec_cfg, mesh=None,
                          paging=paging, obs=obs)
         self._prefill_jit = None
+        self._prefill_chunk_jit = None
         self._decode_jit = None
 
     # ---- StepFn construction ----------------------------------------------
@@ -43,6 +44,19 @@ class LocalExecutor(Executor):
                                   head_importance=head_importance, rows=rows)
 
         return jax.jit(fn)
+
+    def _build_prefill_chunk(self):
+        cfg, ccfg = self.cfg, self.ccfg
+
+        def fn(sp, tokens, pa, state, rows, start, valid, quota,
+               head_importance):
+            self.prefill_chunk_traces += 1  # runs at trace time only
+            return _serve.prefill_chunk(sp, tokens, cfg, pa, ccfg, state,
+                                        rows, start, valid, quota,
+                                        head_importance=head_importance)
+
+        donate = (3,) if self.exec_cfg.donate_state else ()
+        return jax.jit(fn, donate_argnums=donate)
 
     def _build_decode(self):
         cfg, ccfg, impl = self.cfg, self.ccfg, self.paged_impl
@@ -69,6 +83,20 @@ class LocalExecutor(Executor):
         if not self.obs.enabled:
             return self._prefill_jit(*args)
         return self._observe_step("prefill", self._prefill_jit, args)
+
+    def prefill_chunk(self, sp, tokens, pa, state, rows, start, valid, quota,
+                      head_importance=None):
+        if self._prefill_chunk_jit is None:
+            self._prefill_chunk_jit = self._build_prefill_chunk()
+        hi = None if head_importance is None else jnp.asarray(head_importance)
+        args = (sp, jnp.asarray(tokens, jnp.int32), pa, state,
+                jnp.asarray(rows, jnp.int32), jnp.asarray(start, jnp.int32),
+                jnp.asarray(valid, jnp.int32), jnp.asarray(quota, jnp.int32),
+                hi)
+        if not self.obs.enabled:
+            return self._prefill_chunk_jit(*args)
+        return self._observe_step("prefill_chunk", self._prefill_chunk_jit,
+                                  args)
 
     def decode(self, sp, state, pa, tokens, active=None, rows=None):
         if self._decode_jit is None:

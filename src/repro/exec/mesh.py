@@ -82,6 +82,7 @@ class MeshExecutor(Executor):
         self.model_size = int(mesh.shape[ec.model_axis])
         # memoized (shard_map + jit) StepFns keyed by arg structure
         self._prefill_jits = {}
+        self._prefill_chunk_jits = {}
         self._decode_jits = {}
 
     @property
@@ -227,6 +228,78 @@ class MeshExecutor(Executor):
             logits, lengths = logits[:B], lengths[..., :B]
         return state, logits, lengths
 
+    # ---- chunked prefill (DESIGN.md §14) -----------------------------------
+
+    def _build_prefill_chunk(self, sp_specs, state_specs, has_hi):
+        cfg, ccfg = self.cfg, self.ccfg
+        ec = self.exec_cfg
+
+        def inner(sp, tokens, pa, state, rows, start, valid, quota,
+                  head_importance):
+            self.prefill_chunk_traces += 1  # runs at trace time only
+            return _serve.prefill_chunk(sp, tokens, cfg, pa, ccfg, state,
+                                        rows, start, valid, quota,
+                                        head_importance=head_importance,
+                                        model_axis=ec.model_axis)
+
+        d = ec.data_axis
+        fn = shard_map(
+            inner, mesh=self.mesh,
+            in_specs=(sp_specs, P(d), self._pa_specs(), state_specs, P(d),
+                      P(d), P(d), P(), P() if has_hi else None),
+            out_specs=(state_specs, P(d), P(None, None, d)),
+            # chunk attention all-gathers the cache over model; non-cache
+            # outputs are replicated by construction (same as prefill)
+            check_rep=False)
+        donate = (3,) if ec.donate_state else ()
+        return jax.jit(fn, donate_argnums=donate)
+
+    def prefill_chunk(self, sp, tokens, pa, state, rows, start, valid, quota,
+                      head_importance=None):
+        self._check_quant(sp)
+        self._check_grid(pa)
+        if not isinstance(state.cache, SlotCache):
+            raise NotImplementedError(
+                "mesh chunked prefill accumulates into a slot-layout "
+                "sub-state (pagination happens at splice)")
+        tokens = jnp.asarray(tokens, jnp.int32)
+        B = int(tokens.shape[0])
+        rows = jnp.asarray(rows, jnp.int32)
+        start = jnp.asarray(start, jnp.int32)
+        valid = jnp.asarray(valid, jnp.int32)
+        # pad the sub-batch up to the data-axis width; padded rows repeat
+        # the last real row with valid=0, so they select nothing and their
+        # state columns are sliced off before anything consumes them
+        pad = (-B) % self.data_size
+        if pad:
+            tokens = jnp.concatenate(
+                [tokens, jnp.zeros((pad, tokens.shape[1]), tokens.dtype)])
+            rows = jnp.concatenate([rows, jnp.repeat(rows[-1:], pad)])
+            start = jnp.concatenate([start, jnp.zeros((pad,), jnp.int32)])
+            valid = jnp.concatenate([valid, jnp.zeros((pad,), jnp.int32)])
+            state = _pad_state_rows(state, pad)
+        hi = None if head_importance is None else jnp.asarray(head_importance)
+        state_specs = _serve.ServeState(
+            cache=self._cache_specs(SlotCache(None, None, None, None, None)),
+            ssm_state=None, conv_state=None, cross_k=None, cross_v=None,
+            last_tokens=P(self.exec_cfg.data_axis), decode_steps=P())
+        sp_specs = self._sp_specs(sp)
+        key = (jax.tree.structure(sp_specs), hi is not None)
+        if key not in self._prefill_chunk_jits:
+            self._prefill_chunk_jits[key] = self._build_prefill_chunk(
+                sp_specs, state_specs, hi is not None)
+        args = (sp, tokens, pa, state, rows, start, valid,
+                jnp.asarray(quota, jnp.int32), hi)
+        if self.obs.enabled:
+            state, logits, lengths = self._observe_step(
+                "prefill_chunk", self._prefill_chunk_jits[key], args)
+        else:
+            state, logits, lengths = self._prefill_chunk_jits[key](*args)
+        if pad:
+            state = _slice_state_rows(state, B)
+            logits, lengths = logits[:B], lengths[..., :B]
+        return state, logits, lengths
+
     # ---- decode ------------------------------------------------------------
 
     def _build_decode(self, sp_specs, state_specs):
@@ -292,6 +365,26 @@ class MeshExecutor(Executor):
         lowered = self._decode_jit_for(sp, state).lower(
             sp, state, pa, tokens, active, rows)
         return lowered.compile().as_text()
+
+
+def _pad_state_rows(state, pad: int):
+    """Widen a slot-layout sub-state by ``pad`` batch rows (repeat the last
+    row's content) so it splits over the data axis; inverse of
+    `_slice_state_rows`."""
+    c = state.cache
+
+    def rep(x, axis):
+        last = jnp.take(x, jnp.asarray([x.shape[axis] - 1]), axis=axis)
+        return jnp.concatenate([x, jnp.repeat(last, pad, axis=axis)],
+                               axis=axis)
+
+    cache = None if c is None else SlotCache(
+        k=rep(c.k, 2), v=rep(c.v, 2), lengths=rep(c.lengths, 2),
+        pos=rep(c.pos, 2), positions=rep(c.positions, 0))
+    return _serve.ServeState(
+        cache=cache, ssm_state=None, conv_state=None, cross_k=None,
+        cross_v=None, last_tokens=rep(state.last_tokens, 0),
+        decode_steps=state.decode_steps)
 
 
 def _slice_state_rows(state, n: int):

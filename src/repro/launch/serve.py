@@ -45,6 +45,7 @@ from repro.api import (
     ObsConfig,
     PagingConfig,
     PlannerConfig,
+    PrefixConfig,
     SchedulerConfig,
     latency_percentiles,
     list_cache_backends,
@@ -73,10 +74,22 @@ def _engine_config(args, max_seq_len: int, batch_cap: int,
         planner=PlannerConfig(mode=args.planner, engine=args.engine,
                               extra_copies=args.copies, batch_cap=batch_cap),
         scheduler=scheduler,
-        cache_backend=args.cache_backend,
+        # --prefix-cache needs block refcounts, which only the paged
+        # backend has; promote slot (the default) rather than erroring on
+        # the common invocation — any other backend choice still errors
+        # through EngineConfig validation
+        cache_backend=("paged" if (getattr(args, "prefix_cache", False)
+                                   and args.cache_backend == "slot")
+                       else args.cache_backend),
         paging=PagingConfig(block_size=args.block_size,
                             n_blocks=args.pool_blocks,
                             decode_impl=args.paged_impl),
+        prefix=PrefixConfig(
+            enabled=getattr(args, "prefix_cache", False),
+            chunk_tokens=(getattr(args, "prefill_chunk", 0)
+                          or (32 if getattr(args, "prefix_cache", False)
+                              else 0)),
+            max_entries=getattr(args, "prefix_entries", 256)),
         executor=args.executor,
         obs=ObsConfig(enabled=not args.no_obs,
                       print_every=args.obs_print_every))
@@ -172,15 +185,24 @@ def _install_drain_handlers(eng: Engine):
 
 def run_continuous(args) -> None:
     """Poisson-trace continuous batching via the facade."""
-    max_prompt = max(args.min_prompt, args.max_prompt)
+    min_prompt = args.min_prompt
+    tkw = {}
+    if getattr(args, "prefix_templates", 0) > 0:
+        # shared templates need room for a unique suffix on every prompt
+        min_prompt = max(min_prompt, args.prefix_len + 4)
+        tkw = dict(prefix_templates=args.prefix_templates,
+                   prefix_len=args.prefix_len,
+                   shared_fraction=args.shared_fraction)
+    max_prompt = max(min_prompt, args.max_prompt)
     scfg = _scheduler_config(args)
     ecfg = _engine_config(args, max_prompt + args.gen + 8, args.rows, scfg)
     eng = _build_engine(args, ecfg)
     reqs = synthesize_requests(args.requests, args.rate,
                                ecfg.model.vocab_size,
-                               min_prompt=args.min_prompt,
+                               min_prompt=min_prompt,
                                max_prompt=max_prompt,
-                               max_new_tokens=args.gen, seed=args.seed)
+                               max_new_tokens=args.gen, seed=args.seed,
+                               **tkw)
     print(f"continuous: {len(reqs)} requests, rate {args.rate}/step, "
           f"{args.rows} rows, planner {args.planner}")
     restore = _install_drain_handlers(eng)
@@ -219,6 +241,11 @@ def run_continuous(args) -> None:
         print(f"paged cache: {mem['blocks_in_use']}/{mem['blocks_total']} "
               f"blocks ({mem['cache_bytes']} B) vs slot-equivalent "
               f"{mem['slot_equivalent_bytes']} B")
+    pst = eng.prefix_stats()
+    if pst:
+        print(f"prefix cache: {pst['hits']} hits / {pst['misses']} misses | "
+              f"{pst['entries']} entries holding {pst['blocks_held']} "
+              f"blocks | {pst['evictions']} evictions")
     for ev in out["replan_log"]:
         tag = "accepted" if ev["accepted"] else "rejected"
         print(f"  replan @ step {ev['step']} ({tag}): imbalance "
@@ -346,6 +373,25 @@ def main() -> None:
                     help="paged backend: decode-attention implementation "
                          "(DESIGN.md §11; auto = native pallas kernel on "
                          "TPU, jnp oracle elsewhere)")
+    # --- shared-prefix reuse + chunked prefill (DESIGN.md §14) ---------------
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="split prompt prefill into chunks of this many "
+                         "tokens, interleaved with decode ticks (0 = "
+                         "monolithic prefill); dense-attention models only")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="content-addressed shared-prefix block reuse "
+                         "(requires --cache-backend paged; implies "
+                         "--prefill-chunk 32 when no chunk size is given)")
+    ap.add_argument("--prefix-entries", type=int, default=256,
+                    help="prefix index capacity (LRU-evicted entries)")
+    ap.add_argument("--prefix-templates", type=int, default=0,
+                    help="continuous trace: number of shared prompt "
+                         "templates (0 = fully random prompts)")
+    ap.add_argument("--prefix-len", type=int, default=0,
+                    help="continuous trace: tokens per shared template")
+    ap.add_argument("--shared-fraction", type=float, default=0.8,
+                    help="continuous trace: fraction of requests that "
+                         "start with a template prefix")
     # --- executor (DESIGN.md §10) --------------------------------------------
     ap.add_argument("--executor", default="local",
                     help=f"device execution strategy; registered: "

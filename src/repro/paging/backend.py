@@ -70,6 +70,13 @@ class PagedBackend(CacheBackend):
         self.table: Optional[np.ndarray] = None  # host mirror (L, S, B, M)
         self.pa: Optional[PlanArrays] = None
         self.n_rows: Optional[int] = None  # global batch width
+        # copy-on-write backlog (DESIGN.md §14): (layer, old_id, new_id)
+        # device content copies queued by `prepare_decode` when a row's next
+        # append would land in a shared (refcount > 1) block.  Kept across
+        # calls so a PoolExhausted mid-CoW retries without losing the queue
+        # (the old block's content stays live — someone still holds a ref).
+        self._pending_cow: list = []
+        self.cow_copies = 0  # lifetime count of privatized blocks
 
     @property
     def partitions(self):
@@ -114,9 +121,19 @@ class PagedBackend(CacheBackend):
                               table)
         return dataclasses.replace(state, cache=cache)
 
-    def splice(self, state, sub, rows):
+    def splice(self, state, sub, rows, shared_blocks=None):
         """Admit: allocate blocks for the sub-state's realized lengths and
-        scatter its contents in.  Atomic on ``PoolExhausted``."""
+        scatter its contents in.  Atomic on ``PoolExhausted``.
+
+        ``shared_blocks`` (optional, (L, S, len(rows), M) int32) carries
+        prefix-cache donor block ids (DESIGN.md §14): each (layer, slot,
+        row)'s shared *full* blocks, contiguous from column 0, already
+        holding the matched prefix content on device.  Fresh blocks are
+        allocated only for the remainder; shared ids are incref'd (never
+        written — `paginate_rows` null-redirects their columns) and the
+        stored table maps the row onto the shared blocks directly, so a
+        cache hit costs ``need − shared`` new blocks.
+        """
         if state.cache is None:
             return _serve.splice_state(state, sub, rows)
         rows_np = np.asarray(rows, np.int64)
@@ -125,13 +142,49 @@ class PagedBackend(CacheBackend):
             self.pool.free_table(leftovers.reshape(self.table.shape[0], -1))
             self.table[:, :, rows_np, :] = 0
         own = _owner_mask_np(self.pa, rows_np)
-        table_sub = build_table(np.asarray(sub.cache.lengths), self.pool,
-                                self.block_size, self.max_blocks, own=own,
-                                partitions=self.partitions, rows=rows_np,
-                                n_rows=self.n_rows)
-        self.table[:, :, rows_np, :] = table_sub
+        lengths = np.asarray(sub.cache.lengths)
+        if shared_blocks is None:
+            table_sub = build_table(lengths, self.pool,
+                                    self.block_size, self.max_blocks, own=own,
+                                    partitions=self.partitions, rows=rows_np,
+                                    n_rows=self.n_rows)
+            self.table[:, :, rows_np, :] = table_sub
+            cache = paginate_rows(state.cache, sub.cache,
+                                  jnp.asarray(rows_np, jnp.int32), table_sub)
+            return _serve.splice_state(state, sub, rows, cache=cache)
+        shared = np.asarray(shared_blocks, np.int32)
+        n_sh = (shared > 0).sum(axis=-1)  # (L, S, R) full shared blocks
+        # fresh blocks cover only tokens past the shared full blocks; the
+        # allocation trial runs BEFORE any incref/mirror change so a
+        # PoolExhausted here leaves pool and table untouched (atomicity)
+        lens_adj = np.maximum(lengths - n_sh * self.block_size, 0)
+        fresh = build_table(lens_adj, self.pool,
+                            self.block_size, self.max_blocks, own=own,
+                            partitions=self.partitions, rows=rows_np,
+                            n_rows=self.n_rows)
+        L, S, R, M = fresh.shape
+        for l in range(L):
+            ids = shared[l][shared[l] > 0]
+            if ids.size:
+                self.pool.incref(l, ids)
+        table_full = np.zeros_like(fresh)
+        for l, s, r in zip(*np.nonzero(own | (n_sh > 0))):
+            f = int(n_sh[l, s, r])
+            fr = fresh[l, s, r][fresh[l, s, r] > 0]
+            nf = min(fr.size, M - f)
+            table_full[l, s, r, :f] = shared[l, s, r, :f]
+            table_full[l, s, r, f:f + nf] = fr[:nf]
+            if fr.size > nf:  # fully-shared row at capacity: growth block
+                self.pool.decref(l, fr[nf:])  # has no table home, return it
+        self.table[:, :, rows_np, :] = table_full
+        # write addressing zeroes the shared columns (null-redirect): the
+        # shared blocks already hold the prefix content and must never be
+        # written through a refcount > 1 table entry
+        col = np.arange(M)[None, None, None, :]
+        table_write = np.where(col < n_sh[..., None], 0, table_full)
         cache = paginate_rows(state.cache, sub.cache,
-                              jnp.asarray(rows_np, jnp.int32), table_sub)
+                              jnp.asarray(rows_np, jnp.int32), table_write,
+                              table_store=table_full)
         return _serve.splice_state(state, sub, rows, cache=cache)
 
     def release_rows(self, state, rows):
@@ -152,6 +205,14 @@ class PagedBackend(CacheBackend):
         blocks), so an owned (layer, slot, row) needs ``len // bs + 1``
         blocks before the tick.  Raises ``PoolExhausted`` when a layer's
         free list runs dry — the scheduler's preemption signal.
+
+        Copy-on-write (DESIGN.md §14): before allocating growth, any owned
+        next write that would land in a *shared* (refcount > 1) block —
+        only the recency ring can wrap into the shared prefix region —
+        gets a private block first: alloc in the same partition, decref
+        the shared id, queue a device content copy.  A defensive recheck
+        after allocation turns any surviving shared-write into a hard
+        error instead of silent corruption.
         """
         if state.cache is None:
             return state
@@ -162,38 +223,107 @@ class PagedBackend(CacheBackend):
             return state
         lens = np.asarray(cache.lengths)[:, :, rows]  # (L, S, R)
         own = _owner_mask_np(self.pa, rows)
+        blk = self._next_write_blocks(state, lens)  # (L, S, R)
+        dirty = False
+        if int(self.pool.refcount.max()) > 1:
+            dirty = self._cow_next_writes(rows, own, blk)
         have = (self.table[:, :, rows, :] > 0).sum(axis=-1)  # (L, S, R)
         growing = own & (lens < self.capacity)
         need = np.where(growing, lens // self.block_size + 1, have)
         missing = need - have
-        if missing.max(initial=0) <= 0:
+        if missing.max(initial=0) > 0:
+            dirty = True
+            L, S = self.table.shape[0], self.table.shape[1]
+            slot_parts, row_parts = self.partitions
+            s_per = S // slot_parts
+            b_per = -(-self.n_rows // row_parts)
+            for l in range(L):
+                for sp in range(slot_parts):
+                    sl = slice(sp * s_per, (sp + 1) * s_per)
+                    for rp in range(row_parts):
+                        cols = np.nonzero(rows // b_per == rp)[0]
+                        if cols.size == 0:
+                            continue
+                        miss = missing[l, sl][:, cols]
+                        n_lp = int(np.maximum(miss, 0).sum())
+                        if n_lp == 0:
+                            continue
+                        ids = self.pool.alloc(l, n_lp,
+                                              partition=sp * row_parts + rp)
+                        hv = have[l, sl][:, cols]
+                        at = 0
+                        for s, c in zip(*np.nonzero(miss > 0)):
+                            m, h = int(miss[s, c]), int(hv[s, c])
+                            self.table[l, sp * s_per + s, rows[cols[c]],
+                                       h:h + m] = ids[at:at + m]
+                            at += m
+        if int(self.pool.refcount.max()) > 1:
+            # defensive recheck: CoW above must have privatized every owned
+            # next write — reject in-place mutation of shared blocks
+            tbl = self.table[:, :, rows, :]
+            bid = np.take_along_axis(tbl, blk[..., None], axis=-1)[..., 0]
+            l_ix = np.arange(tbl.shape[0])[:, None, None]
+            still = own & (bid > 0) & (self.pool.refcount[l_ix, bid] > 1)
+            if still.any():
+                l, s, r = next(zip(*np.nonzero(still)))
+                raise RuntimeError(
+                    f"next decode append for (layer {l}, slot {s}, row "
+                    f"{rows[r]}) targets shared block "
+                    f"{int(bid[l, s, r])} (refcount > 1); copy-on-write "
+                    f"failed to privatize it")
+        if not dirty and not self._pending_cow:
             return state
-        L, S = self.table.shape[0], self.table.shape[1]
-        slot_parts, row_parts = self.partitions
-        s_per = S // slot_parts
-        b_per = -(-self.n_rows // row_parts)
-        for l in range(L):
-            for sp in range(slot_parts):
-                sl = slice(sp * s_per, (sp + 1) * s_per)
-                for rp in range(row_parts):
-                    cols = np.nonzero(rows // b_per == rp)[0]
-                    if cols.size == 0:
-                        continue
-                    miss = missing[l, sl][:, cols]
-                    n_lp = int(np.maximum(miss, 0).sum())
-                    if n_lp == 0:
-                        continue
-                    ids = self.pool.alloc(l, n_lp,
-                                          partition=sp * row_parts + rp)
-                    hv = have[l, sl][:, cols]
-                    at = 0
-                    for s, c in zip(*np.nonzero(miss > 0)):
-                        m, h = int(miss[s, c]), int(hv[s, c])
-                        self.table[l, sp * s_per + s, rows[cols[c]],
-                                   h:h + m] = ids[at:at + m]
-                        at += m
+        cache = self._apply_pending_cow(cache)
         return dataclasses.replace(state, cache=dataclasses.replace(
             cache, block_table=jnp.asarray(self.table)))
+
+    def _next_write_blocks(self, state, lens: np.ndarray) -> np.ndarray:
+        """(L, S, R) block index of each pair's next append — the host
+        mirror of `ring_write_index` (below capacity: ``lens``; at
+        capacity: the shared ring phase)."""
+        cap = self.capacity
+        ring = max(1, min(max(1, self.ccfg.decode_margin), cap))
+        cyc = (cap - ring) + int(state.decode_steps) % ring
+        return np.where(lens < cap, lens, cyc) // self.block_size
+
+    def _cow_next_writes(self, rows, own, blk) -> bool:
+        """Privatize shared blocks under the next write index.  Mutates
+        the mirror + pool and queues content copies; returns True if any
+        block was replaced.  PoolExhausted mid-loop is safe to retry: the
+        queue survives and completed replacements stay consistent."""
+        tbl = self.table[:, :, rows, :]  # (L, S, R, M)
+        bid = np.take_along_axis(tbl, blk[..., None], axis=-1)[..., 0]
+        L = tbl.shape[0]
+        l_ix = np.arange(L)[:, None, None]
+        hit = own & (bid > 0) & (self.pool.refcount[l_ix, bid] > 1)
+        if not hit.any():
+            return False
+        for l, s, r in zip(*np.nonzero(hit)):
+            old = int(bid[l, s, r])
+            new = int(self.pool.alloc(
+                l, 1, partition=self.pool.partition_of(old))[0])
+            self.pool.decref(l, np.asarray([old]))
+            self.table[l, s, rows[r], int(blk[l, s, r])] = new
+            self._pending_cow.append((int(l), old, new))
+            self.cow_copies += 1
+        return True
+
+    def _apply_pending_cow(self, cache):
+        """Flush queued CoW content copies into the device pools.
+
+        Applied strictly in queue order: a freed-then-reallocated id can
+        appear as a copy *destination* only after all entries reading it
+        as a *source* (they were queued while it was still shared), so
+        sequential application never reads clobbered content."""
+        if not self._pending_cow:
+            return cache
+        kp, vp, pp = cache.k_pool, cache.v_pool, cache.pos_pool
+        for l, old, new in self._pending_cow:
+            kp = kp.at[l, new].set(kp[l, old])
+            vp = vp.at[l, new].set(vp[l, old])
+            pp = pp.at[l, new].set(pp[l, old])
+        self._pending_cow.clear()
+        return dataclasses.replace(cache, k_pool=kp, v_pool=vp, pos_pool=pp)
 
     def migrate_cache(self, cache, old_pa, new_pa, active_rows=None):
         """Trial re-layout for a replan: materialize → migrate → allocate
@@ -313,12 +443,25 @@ class PagedBackend(CacheBackend):
             free = free.reshape(L, self.pool_partitions,
                                 self.row_partitions).min(axis=2)
             return bool((free >= need).all())
-        need = self._layer_blocks(req.prompt_len, req.max_new_tokens,
-                                  worst_case=False)
+        need = self._discount_shared(
+            self._layer_blocks(req.prompt_len, req.max_new_tokens,
+                               worst_case=False), req)
         for p in pending:
-            need = need + self._layer_blocks(p.prompt_len, p.max_new_tokens,
-                                             worst_case=False)
+            need = need + self._discount_shared(
+                self._layer_blocks(p.prompt_len, p.max_new_tokens,
+                                   worst_case=False), p)
         return bool((self.pool.free_blocks() >= need).all())
+
+    @staticmethod
+    def _discount_shared(need: np.ndarray, req) -> np.ndarray:
+        """Admission charges only *unshared* blocks (DESIGN.md §14): a
+        prefix-cache hit stamps ``req.prefix_shared_blocks`` ((L,) full
+        blocks reused from the index) and those never leave the pool's
+        allocated set twice."""
+        sh = getattr(req, "prefix_shared_blocks", None)
+        if sh is None:
+            return need
+        return np.maximum(need - np.asarray(sh, np.int64), 0)
 
     def never_fits(self, req):
         if self.cfg.attention_free:

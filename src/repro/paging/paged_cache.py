@@ -129,6 +129,12 @@ def paged_to_slot(cache: PagedCache, capacity: int) -> SlotCache:
     Entries outside each (slot, row)'s valid prefix are zeroed (pos −1) so
     the result obeys the slot-cache masking contract exactly; the decode
     output over the result is bit-identical to the paged path.
+
+    **Deep copy by construction**: the result is a pure gather — pool
+    tensors are never aliased into the output, so materializing rows whose
+    blocks are shared (refcount > 1 under prefix reuse, DESIGN.md §14)
+    copies the shared content and can never mutate it.  The pool-
+    conservation regression test in tests/test_prefix.py pins this down.
     """
     L, N, bs, Dh = cache.k_pool.shape
     _, S, B, M = cache.block_table.shape
@@ -208,6 +214,7 @@ def paginate_rows(
     sub: SlotCache,
     rows: jnp.ndarray,  # (B_sub,) target global rows
     table_sub: np.ndarray,  # (L, S, B_sub, M) int32 freshly allocated ids
+    table_store: Optional[np.ndarray] = None,  # (L, S, B_sub, M) stored ids
 ) -> PagedCache:
     """Copy a prefilled slot sub-cache into freshly allocated blocks.
 
@@ -217,6 +224,13 @@ def paginate_rows(
     One global scatter per tensor; unallocated tail blocks are redirected
     into the null block.  The target rows' table/lengths/positions are fully
     replaced (they must have been released first).
+
+    ``table_store`` (optional) decouples the *stored* block table from the
+    write addressing: shared-prefix admission (DESIGN.md §14) stores the
+    full table (shared donor blocks + fresh tail) while passing a write
+    table whose shared entries are zeroed — the null-redirect then
+    guarantees refcount>1 blocks are never written, which is the
+    copy-on-write immutability rule.  Default: store ``table_sub`` itself.
     """
     L, N, bs, Dh = cache.k_pool.shape
     _, S, B_sub, C, _ = sub.k.shape
@@ -245,10 +259,11 @@ def paginate_rows(
                 .at[gids].set(p_sub.reshape(-1, bs))
                 .reshape(L, N, bs))
     rows = jnp.asarray(rows, jnp.int32)
+    stored = table_sub if table_store is None else table_store
     return PagedCache(
         k_pool=k_pool, v_pool=v_pool, pos_pool=pos_pool,
         block_table=cache.block_table.at[:, :, rows, :].set(
-            jnp.asarray(table_sub, jnp.int32)),
+            jnp.asarray(stored, jnp.int32)),
         lengths=cache.lengths.at[:, :, rows].set(sub.lengths),
         positions=cache.positions.at[rows].set(sub.positions),
     )

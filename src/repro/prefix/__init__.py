@@ -1,0 +1,5 @@
+"""repro.prefix: shared-prefix block reuse + chunked prefill (DESIGN.md §14)."""
+from repro.prefix.config import PrefixConfig
+from repro.prefix.index import PrefixEntry, PrefixIndex
+
+__all__ = ["PrefixConfig", "PrefixEntry", "PrefixIndex"]

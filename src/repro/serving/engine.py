@@ -31,6 +31,7 @@ import numpy as np
 from repro.cache.slot_cache import (
     PlanArrays,
     SlotCache,
+    append_selection,
     append_token,
     fill_from_selection,
     init_cache,
@@ -319,6 +320,208 @@ def _slot_o_proj(pl, attn_flat, cfg, plan, layer_idx, model_axis=None):
     wo = deq(_take0(_full_slots(pl["wo_s"], model_axis), fs))
     wo = wo.reshape(cfg.n_kv_heads * cfg.q_per_kv * cfg.head_dim, D)
     return jnp.einsum("bte,ed->btd", attn_flat, wo)
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+
+def _cache_head_view(cache, layer, plan, rows, n_heads, model_axis=None):
+    """Head-layout view of one layer's slot cache for the given rows.
+
+    Returns ``(k (B,H,C,Dh), v (B,H,C,Dh), len_h (B,H), pos_h (B,H,C))``.
+    Every (head, row) pair has exactly one owning slot, so a 0/1-weighted
+    einsum over slots recovers the head layout; under ``shard_map`` the slot
+    dim (cache slices *and* plan arrays) is all-gathered over ``model_axis``
+    first — chunk attention needs every head, like monolithic prefill's
+    weight recovery.
+    """
+    sh = plan.slot_head[layer]       # (S,)
+    ri = plan.replica_idx[layer]
+    rc = plan.replica_count[layer]
+    kl, vl = cache.k[layer], cache.v[layer]     # (S, B, C, Dh)
+    ln, ps = cache.lengths[layer], cache.pos[layer]
+    if model_axis is not None:
+        def ag(x):
+            return jax.lax.all_gather(x, model_axis, axis=0, tiled=True)
+        sh, ri, rc = ag(sh), ag(ri), ag(rc)
+        kl, vl, ln, ps = ag(kl), ag(vl), ag(ln), ag(ps)
+    rows = jnp.asarray(rows, jnp.int32)
+    own = (sh >= 0)[:, None] & ((rows[None, :] % rc[:, None]) == ri[:, None])
+    oh = sh[:, None] == jnp.arange(n_heads, dtype=sh.dtype)[None, :]  # (S, H)
+    w = (oh[:, None, :] & own[:, :, None]).astype(jnp.float32)  # (S, B, H)
+    k_h = jnp.einsum("sbh,sbcd->bhcd", w, kl.astype(jnp.float32))
+    v_h = jnp.einsum("sbh,sbcd->bhcd", w, vl.astype(jnp.float32))
+    len_h = jnp.einsum("sbh,sb->bh", w, ln.astype(jnp.float32))
+    pos_h = jnp.einsum("sbh,sbc->bhc", w, ps.astype(jnp.float32))
+    return (k_h.astype(cache.k.dtype), v_h.astype(cache.v.dtype),
+            len_h.astype(jnp.int32), jnp.round(pos_h).astype(jnp.int32))
+
+
+def _chunk_attention(pl, hn, positions, valid, cfg, layer_idx, cache, plan,
+                     ccfg, quota_l, head_importance, rows, model_axis=None):
+    """Attention over (retained cache ‖ current chunk) + boundary compression.
+
+    The cache is per-head (earlier chunks' keep-sets differ per head), so
+    attention runs with each (row, head) pair as its own batch element of
+    `dense_attention` — keys are the head's retained entries concatenated
+    with the chunk's fresh keys, masked by retained length / ``valid`` and
+    the standard causal+window rule over *absolute* positions (cache keys
+    are post-RoPE, so order never matters).  At the chunk boundary the
+    snapkv observation scores are computed over the chunk's keys only and
+    the policy's selection is appended after the existing entries
+    (`append_selection`), clamped to the per-chunk ``quota_l`` and the
+    remaining slot capacity.
+    """
+    B, Ck, D = hn.shape
+    Hkv, G, Dh = cfg.n_kv_heads, cfg.q_per_kv, cfg.head_dim
+    C = cache.k.shape[3]
+    fw = first_weights(pl, plan, layer_idx, model_axis)
+    q = jnp.einsum("btd,hdgx->bthgx", hn, fw["wq"])  # (B,Ck,Hkv,G,Dh)
+    k = jnp.einsum("btd,hdx->bthx", hn, fw["wk"])
+    v = jnp.einsum("btd,hdx->bthx", hn, fw["wv"])
+    if "bq" in fw:
+        q = q + fw["bq"]
+        k = k + fw["bk"]
+        v = v + fw["bv"]
+    q = q.reshape(B, Ck, Hkv * G, Dh)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    window = M.layer_window(cfg, layer_idx)
+
+    k_c, v_c, len_h, pos_h = _cache_head_view(cache, layer_idx, plan, rows,
+                                              Hkv, model_axis)
+    # (row, head) pairs as batch: per-head caches have distinct keys
+    qh = (q.reshape(B, Ck, Hkv, G, Dh).transpose(0, 2, 1, 3, 4)
+          .reshape(B * Hkv, Ck, G, Dh))
+    kx = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Ck, 1, Dh)
+    vx = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Ck, 1, Dh)
+    k_cat = jnp.concatenate([k_c.reshape(B * Hkv, C, 1, Dh).astype(kx.dtype),
+                             kx], axis=1)
+    v_cat = jnp.concatenate([v_c.reshape(B * Hkv, C, 1, Dh).astype(vx.dtype),
+                             vx], axis=1)
+    q_pos = jnp.broadcast_to(positions[:, None, :], (B, Hkv, Ck))
+    k_pos = jnp.concatenate([pos_h.reshape(B * Hkv, C),
+                             q_pos.reshape(B * Hkv, Ck)], axis=1)
+    in_cache = jnp.arange(C, dtype=jnp.int32)[None, None, :] < len_h[..., None]
+    in_chunk = jnp.arange(Ck, dtype=jnp.int32)[None, :] < valid[:, None]
+    kv_mask = jnp.concatenate(
+        [in_cache.reshape(B * Hkv, C),
+         jnp.broadcast_to(in_chunk[:, None, :], (B, Hkv, Ck))
+         .reshape(B * Hkv, Ck)], axis=1)
+    out = L.dense_attention(qh, k_cat, v_cat, q_pos.reshape(B * Hkv, Ck),
+                            k_pos, window=window, attn_cap=cfg.attn_softcap,
+                            kv_mask=kv_mask, causal=True)
+    out_flat = (out.reshape(B, Hkv, Ck, G, Dh).transpose(0, 2, 1, 3, 4)
+                .reshape(B, Ck, Hkv * G * Dh))
+
+    # --- chunk-boundary compression -------------------------------------
+    W = min(ccfg.obs_window, Ck)
+    obs_ix = jnp.clip(valid[:, None] - W + jnp.arange(W, dtype=jnp.int32),
+                      0, Ck - 1)  # (B, W): last W *valid* chunk queries
+    q_obs = jnp.take_along_axis(q, obs_ix[:, :, None, None], axis=1)
+    pos_obs = jnp.take_along_axis(positions, obs_ix, axis=1)
+    scores = K.snapkv_scores(q_obs, k, pos_obs, positions,
+                             attn_cap=cfg.attn_softcap)
+    t_ix = jnp.arange(Ck, dtype=jnp.int32)
+    scores = jnp.where(t_ix[None, None, :] < valid[:, None, None],
+                       scores, -jnp.inf)
+    from repro.compression.base import pool_scores
+    scores = pool_scores(scores, ccfg.pool)
+    if window > 0:
+        end = (jnp.asarray(valid, jnp.int32) + positions[:, 0])[:, None, None]
+        scores = jnp.where(positions[:, None, :] >= end - window,
+                           scores, -jnp.inf)
+    kw = {}
+    if ccfg.policy == "headkv" and head_importance is not None:
+        kw["head_importance"] = jnp.asarray(head_importance[layer_idx])
+    idx, keep = policy_select(ccfg.policy, scores, ccfg, layer_idx,
+                              cfg.n_layers, **kw)
+    keep = jnp.minimum(keep, valid[:, None])          # only real tokens
+    keep = jnp.minimum(keep, quota_l)                 # incremental budget
+    keep = jnp.minimum(keep, C - len_h)               # slot headroom
+    keep = jnp.maximum(keep, 0).astype(jnp.int32)
+    cache = append_selection(cache, layer_idx, k, v, idx, keep, plan,
+                             rows=rows, start=positions[:, 0])
+    return out_flat, cache, (len_h + keep).transpose(1, 0)  # (Hkv, B)
+
+
+def prefill_chunk(
+    serve_params: dict,
+    tokens: jnp.ndarray,  # (B, Ck) fixed-width chunk (padded past ``valid``)
+    cfg: ModelConfig,
+    plan: PlanArrays,
+    ccfg: CompressionConfig,
+    state: ServeState,
+    rows: jnp.ndarray,  # (B,) global row ids
+    start: jnp.ndarray,  # (B,) int32 absolute position of chunk token 0
+    valid: jnp.ndarray,  # (B,) int32 real tokens in this chunk (<= Ck)
+    quota: jnp.ndarray,  # (L,) int32 per-head keep cap for this chunk
+    head_importance: Optional[np.ndarray] = None,
+    model_axis: Optional[str] = None,
+) -> Tuple[ServeState, jnp.ndarray, jnp.ndarray]:
+    """Process one fixed-width prompt chunk against an accumulating cache.
+
+    The chunked twin of `prefill` (DESIGN.md §14): the prompt arrives
+    ``chunk_tokens`` at a time, each chunk attends over the *retained*
+    entries of earlier chunks plus its own keys, and the compression policy
+    runs at the chunk boundary so per-head keep-budgets accrue
+    incrementally.  ``tokens`` is always the same static width — the
+    scheduler pads the last chunk and passes ``valid`` — so local and mesh
+    executors trace this exactly once per shape.
+
+    Dense decoder-only families only: ssm/hybrid recurrences and enc-dec /
+    vlm inputs do not thread through a chunk boundary (the scheduler falls
+    back to monolithic prefill for them).
+
+    Returns (state, logits (B, V) at the last valid token, lengths
+    (L, Hkv, B) — *cumulative* retained lengths after this chunk).
+    """
+    if cfg.family != "dense" or cfg.attention_free:
+        raise ValueError(
+            f"chunked prefill supports dense attention families only, "
+            f"got family={cfg.family!r}")
+    if cfg.is_encoder_decoder or cfg.is_vlm:
+        raise ValueError("chunked prefill does not support enc-dec / vlm")
+    h = L.embed(tokens, serve_params["embed"])
+    if cfg.name.startswith("gemma2"):
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+    B, Ck, _ = h.shape
+    start = jnp.asarray(start, jnp.int32)
+    valid = jnp.asarray(valid, jnp.int32)
+    quota = jnp.asarray(quota, jnp.int32)
+    positions = start[:, None] + jnp.arange(Ck, dtype=jnp.int32)[None, :]
+    cache = state.cache
+    lengths_all = []
+    for i, pl in enumerate(serve_params["layers"]):
+        hn = L.rms_norm(h, pl["ln1"], cfg.rms_eps)
+        attn_flat, cache, lens = _chunk_attention(
+            pl, hn, positions, valid, cfg, i, cache, plan, ccfg, quota[i],
+            head_importance, rows, model_axis)
+        h = h + _slot_o_proj(pl, attn_flat, cfg, plan, i, model_axis)
+        lengths_all.append(lens)
+        if cfg.d_ff > 0 or cfg.moe.num_experts > 0:
+            hn2 = L.rms_norm(h, pl["ln2"], cfg.rms_eps)
+            mlp_out, _ = M.mlp_block(pl, hn2, cfg)
+            h = h + mlp_out
+        h = constrain(h, "batch", "seq", "d_model")
+
+    last_ix = jnp.maximum(valid - 1, 0)
+    h_last = jnp.take_along_axis(h, last_ix[:, None, None], axis=1)  # (B,1,D)
+    h_last = L.rms_norm(h_last, serve_params["final_norm"], cfg.rms_eps)
+    table = serve_params.get("head", serve_params["embed"])
+    logits = L.unembed(h_last, table, cfg.logit_softcap)[:, 0]
+    cache = dataclasses.replace(
+        cache, positions=(start + valid).astype(jnp.int32))
+    new_state = ServeState(
+        cache=cache, ssm_state=state.ssm_state, conv_state=state.conv_state,
+        cross_k=state.cross_k, cross_v=state.cross_v,
+        last_tokens=jnp.argmax(
+            logits[..., :cfg.vocab_size], axis=-1).astype(jnp.int32),
+        decode_steps=state.decode_steps)
+    lengths = jnp.stack(lengths_all)
+    return new_state, logits, lengths
 
 
 # ---------------------------------------------------------------------------

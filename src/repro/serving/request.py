@@ -61,6 +61,10 @@ class Request:
     finish_time: Optional[float] = None
     n_preemptions: int = 0  # times evicted back to QUEUED (paged backend)
     degraded_from: Optional[int] = None  # original max_new_tokens pre-degrade
+    # prefix cache (DESIGN.md §14): stamped on a hit — (L,) full blocks per
+    # layer reused from the index (admission charges only unshared blocks)
+    prefix_shared_blocks: Optional[np.ndarray] = None
+    prefix_hit_tokens: int = 0  # matched prefix length on admission (0 = miss)
 
     @property
     def prompt_len(self) -> int:
@@ -103,6 +107,8 @@ class Request:
         self.admit_step = None
         self.first_token_step = None
         self.first_token_time = None
+        self.prefix_shared_blocks = None  # re-stamped on re-admission
+        self.prefix_hit_tokens = 0
         self.n_preemptions += 1
 
     def queueing_steps(self) -> Optional[int]:
@@ -170,6 +176,9 @@ def synthesize_requests(
     seed: int = 0,
     tenant_mix: Optional[Dict[str, float]] = None,
     tenant_priorities: Optional[Dict[str, int]] = None,
+    prefix_templates: int = 0,
+    prefix_len: int = 0,
+    shared_fraction: float = 0.0,
 ) -> List[Request]:
     """A reproducible Poisson trace of random-token requests.
 
@@ -179,6 +188,14 @@ def synthesize_requests(
     pre-frontend callers see identical traces.  ``tenant_priorities`` maps
     tenant names to priority-class indices (missing tenants keep the
     `Request` default).
+
+    Shared-prefix traces (DESIGN.md §14): with ``prefix_templates > 0``,
+    ``shared_fraction`` of the requests start with one of the template
+    prefixes (``prefix_len`` tokens each, drawn once per template) followed
+    by a unique random suffix; the rest stay fully random at the same total
+    length, so sharing changes the cache topology but never the workload
+    size.  Tenants bind to templates round-robin when a tenant mix is
+    given, modeling per-tenant system prompts.
     """
     rng = np.random.default_rng(seed)
     arrivals = poisson_arrivals(n_requests, rate, rng)
@@ -190,16 +207,43 @@ def synthesize_requests(
             raise ValueError(f"tenant_mix weights must be non-negative with "
                              f"a positive sum, got {tenant_mix}")
         probs = w / w.sum()
+    templates = None
+    if prefix_templates > 0:
+        if prefix_len <= 0:
+            raise ValueError("prefix_templates > 0 requires prefix_len > 0")
+        if not 0.0 <= shared_fraction <= 1.0:
+            raise ValueError(f"shared_fraction must be in [0, 1], "
+                             f"got {shared_fraction}")
+        if prefix_len >= min_prompt:
+            raise ValueError(f"prefix_len ({prefix_len}) must leave room "
+                             f"for a unique suffix (min_prompt "
+                             f"{min_prompt})")
+        templates = [rng.integers(0, vocab_size, size=prefix_len)
+                     .astype(np.int32) for _ in range(prefix_templates)]
     reqs = []
     for i, step in enumerate(arrivals):
         T = int(rng.integers(min_prompt, max_prompt + 1))
-        prompt = rng.integers(0, vocab_size, size=T).astype(np.int32)
+        # legacy draw order (T, prompt, tenant) when no templates are in
+        # play, so pre-existing seeded traces stay bit-identical
+        prompt = (rng.integers(0, vocab_size, size=T).astype(np.int32)
+                  if templates is None else None)
         kw = {}
+        tenant = None
         if names is not None:
             tenant = names[int(rng.choice(len(names), p=probs))]
             kw["tenant"] = tenant
             if tenant_priorities and tenant in tenant_priorities:
                 kw["priority"] = int(tenant_priorities[tenant])
+        if templates is not None:
+            if rng.random() < shared_fraction:
+                t_ix = (names.index(tenant) % len(templates)
+                        if tenant is not None
+                        else int(rng.integers(len(templates))))
+                suffix = rng.integers(0, vocab_size,
+                                      size=T - prefix_len).astype(np.int32)
+                prompt = np.concatenate([templates[t_ix], suffix])
+            else:
+                prompt = rng.integers(0, vocab_size, size=T).astype(np.int32)
         reqs.append(Request(req_id=i, prompt=prompt, arrival_step=int(step),
                             max_new_tokens=max_new_tokens, **kw))
     return reqs

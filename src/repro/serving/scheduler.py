@@ -33,12 +33,15 @@ import numpy as np
 
 from repro.cache.slot_cache import PlanArrays
 from repro.compression.base import CompressionConfig
+from repro.compression.policies import layer_keep_bound
 from repro.configs.base import ModelConfig
 from repro.core.placement import HeadPlacement
 from repro.core.planner import PlannerConfig, build_plan
 from repro.exec.base import Executor, make_executor
 from repro.obs import NULL_OBS, Obs
 from repro.paging.block_pool import PoolExhausted
+from repro.prefix import PrefixConfig, PrefixEntry, PrefixIndex
+from repro.serving import engine as _serve
 from repro.serving.cache_backend import CacheBackend, make_cache_backend
 from repro.serving.engine import slotify_params
 from repro.serving.request import (Request, RequestState,
@@ -74,6 +77,32 @@ class RowFreelist:
             raise ValueError(f"row {row} double-freed")
         self._free.append(row)
         self._free.sort()
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill job (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _ChunkJob:
+    """One in-flight chunked prefill: the request sits in PREFILLING with a
+    row reserved while `Scheduler.step` advances its private B=1 sub-state
+    one chunk per tick.  No live-state blocks are held until the final
+    chunk splices (atomic on PoolExhausted), so aborting a job only
+    unwinds the row, the pin, and the request state."""
+
+    req: Request
+    row: int
+    prompt: np.ndarray
+    state: object  # B=1 ServeState accumulating retained chunks
+    next_pos: int = 0  # absolute position of the next chunk's first token
+    entry: Optional[PrefixEntry] = None  # pinned seed entry on a prefix hit
+    seed_tokens: int = 0  # tokens covered by the seed (0 = cold start)
+    # full-chunk boundary -> (L, H) cumulative retained lengths, snapshotted
+    # as each chunk lands (the donor-side input to index registration)
+    boundaries: Dict[int, np.ndarray] = field(default_factory=dict)
+    last_logits: Optional[np.ndarray] = None
 
 
 # ---------------------------------------------------------------------------
@@ -161,6 +190,7 @@ class Scheduler:
         head_importance: Optional[np.ndarray] = None,
         obs: Optional[Obs] = None,
         plan_profile: Optional[np.ndarray] = None,
+        prefix_cfg: Optional[PrefixConfig] = None,
     ):
         if cfg.is_encoder_decoder or cfg.is_vlm:
             raise NotImplementedError(
@@ -211,6 +241,27 @@ class Scheduler:
         # decode specs, so the cache never sits replicated on one device
         self.state = self.executor.shard_state(
             self.backend.init_state(self.pa, scfg.max_rows, dtype))
+
+        # prefix cache + chunked prefill (DESIGN.md §14).  Chunking needs
+        # only the dense-attention chunk StepFn; block *sharing* further
+        # needs the paged backend with a single-partition pool (shared
+        # blocks must be valid for any recipient row — a mesh pool pins
+        # blocks to the donor's (shard, row-partition) device).
+        self.prefix_cfg = prefix_cfg if prefix_cfg is not None \
+            else PrefixConfig()
+        self.prefilling: Dict[int, _ChunkJob] = {}  # row -> in-flight job
+        self._chunk_ok = (self.prefix_cfg.chunk_tokens > 0
+                          and cfg.family == "dense"
+                          and not cfg.attention_free)
+        self.prefix: Optional[PrefixIndex] = None
+        pool = getattr(self.backend, "pool", None)
+        if (self.prefix_cfg.enabled and self._chunk_ok
+                and self.backend.name == "paged" and pool is not None
+                and pool.n_partitions == 1):
+            self.prefix = PrefixIndex(self.prefix_cfg.chunk_tokens,
+                                      self.prefix_cfg.max_entries,
+                                      obs=self.obs)
+            self.prefix.pool = pool
 
         # persisted straggler speed factors (set by a speed-aware replan):
         # imbalance() and every later replan score/plan against them, so an
@@ -311,6 +362,30 @@ class Scheduler:
         m.gauge("sched_queue_depth",
                 help="requests waiting in the FCFS queue").set(
             len(self.queue))
+        m.gauge("sched_prefilling_rows",
+                help="rows held by in-flight chunked prefills "
+                     "(DESIGN.md §14)").set(len(self.prefilling))
+        if self.prefix is not None:
+            st = self.prefix.stats()
+            m.gauge("prefix_entries",
+                    help="prompt-prefix boundaries held by the index").set(
+                st["entries"])
+            m.gauge("prefix_shared_blocks",
+                    help="pool blocks referenced by prefix entries").set(
+                st["blocks_held"])
+            # bytes the pool did NOT have to duplicate: every reference
+            # beyond the first on an allocated block is a block of KV the
+            # sharing recipients would otherwise each hold privately
+            pool = self.backend.pool
+            extra = int(np.maximum(pool.refcount - 1, 0).sum())
+            c = self.state.cache
+            if c is not None and hasattr(c, "k_pool"):
+                blk_bytes = (2 * c.k_pool.shape[2] * c.k_pool.shape[3]
+                             * c.k_pool.dtype.itemsize)
+                m.gauge("prefix_bytes_saved",
+                        help="KV bytes deduplicated by prefix sharing "
+                             "(Σ (refcount−1) · block bytes)").set(
+                    extra * blk_bytes)
         self.backend.sample_metrics(self.state)
         pe = self.obs.cfg.print_every
         if pe > 0 and self.step_idx % pe == 0:
@@ -360,7 +435,11 @@ class Scheduler:
     def admissible(self, req: Request) -> bool:
         if len(self.freelist) == 0:
             return False
-        return self.backend.admissible(self.state, req)
+        # in-flight chunked prefills hold rows but no blocks until their
+        # final-chunk splice: charge them as pending so admission does not
+        # promise the same free blocks twice (DESIGN.md §14)
+        pending = [j.req for j in self.prefilling.values()]
+        return self.backend.admissible(self.state, req, pending=pending)
 
     def _admit(self, req: Request) -> Optional[int]:
         """Prefill + splice; returns the row, or None when the cache
@@ -413,6 +492,240 @@ class Scheduler:
             return True
         return req.eos_id is not None and req.generated[-1] == req.eos_id
 
+    # ---- chunked prefill + prefix sharing (DESIGN.md §14) ------------------
+
+    def _should_chunk(self, req: Request) -> bool:
+        """Prompts longer than one chunk go through the chunked path; a
+        prompt that fits in a single chunk gains nothing from it."""
+        return (self._chunk_ok
+                and req.prompt_len > self.prefix_cfg.chunk_tokens)
+
+    def _stamp_prefix_hit(self, req: Request) -> Optional[PrefixEntry]:
+        """Look up the longest shared prefix and stamp the request's
+        admission discount (`prefix_shared_blocks`); returns the entry so
+        the admission loop can seed from it without a second lookup."""
+        if self.prefix is None or not self._should_chunk(req):
+            req.prefix_shared_blocks = None
+            return None
+        entry = self.prefix.lookup(np.asarray(req.prompt, np.int32))
+        if entry is None:
+            req.prefix_shared_blocks = None
+            req.prefix_hit_tokens = 0
+            return None
+        req.prefix_hit_tokens = entry.tokens
+        bs = self.backend.block_size
+        full = np.asarray(entry.lengths) // bs  # (L, H) full blocks per head
+        req.prefix_shared_blocks = full.sum(axis=1).astype(np.int64)
+        return entry
+
+    def _head_slot_table(self, entry: PrefixEntry, row: int):
+        """Map an entry's head-indexed blocks onto the slots owning each
+        head *for this row* → ((L, S, 1, M) ids, (L, S, 1) lengths).
+        Replicas of one head serve disjoint rows, so donor and recipient
+        may home the same head in different slots; block content is
+        head-level, so rehoming is purely a table rewrite."""
+        sh = np.asarray(self.pa.slot_head)
+        ri = np.asarray(self.pa.replica_idx)
+        rc = np.asarray(self.pa.replica_count)
+        own = (sh >= 0) & ((row % np.maximum(rc, 1)) == ri)  # (L, S)
+        L, S = sh.shape
+        M = self.backend.max_blocks
+        tbl = np.zeros((L, S, 1, M), np.int32)
+        lens = np.zeros((L, S, 1), np.int32)
+        n = min(entry.table.shape[2], M)
+        for l, s in zip(*np.nonzero(own)):
+            h = int(sh[l, s])
+            tbl[l, s, 0, :n] = entry.table[l, h, :n]
+            lens[l, s, 0] = entry.lengths[l, h]
+        return tbl, lens
+
+    def _seed_from_entry(self, entry: PrefixEntry, row: int):
+        """Materialize a matched prefix into a fresh B=1 sub-state.
+
+        The entry's blocks are viewed through a synthetic one-row table and
+        gathered with `paged_to_slot` — a deep copy, so the shared blocks
+        are read, never aliased; the final splice maps the same full blocks
+        back into the row's stored table without rewriting them."""
+        from repro.paging.paged_cache import PagedCache, paged_to_slot
+        live = self.state.cache
+        tbl, lens = self._head_slot_table(entry, row)
+        view = PagedCache(k_pool=live.k_pool, v_pool=live.v_pool,
+                          pos_pool=live.pos_pool,
+                          block_table=jnp.asarray(tbl),
+                          lengths=jnp.asarray(lens),
+                          positions=jnp.full((1,), entry.tokens, jnp.int32))
+        slot = paged_to_slot(view, self.backend.capacity)
+        return _serve.init_serve_state(self.cfg, self.pa, 1, self.ccfg,
+                                       dtype=self.dtype, cache=slot)
+
+    def _start_chunked(self, req: Request,
+                       entry: Optional[PrefixEntry]) -> int:
+        """Begin a chunked prefill: reserve the row, seed from the matched
+        prefix boundary (if any), and leave the job in ``prefilling`` —
+        `step` advances it one chunk per tick, so decode ticks for live
+        rows interleave instead of stalling behind a long prompt."""
+        row = self.freelist.acquire()
+        assert row is not None
+        req.state = RequestState.PREFILLING
+        req.row = row
+        req.admit_step = self.step_idx
+        prompt = np.asarray(req.prompt, np.int32)
+        if entry is not None:
+            sub = self._seed_from_entry(entry, row)
+            self.prefix.pin(entry)  # immune to eviction while we read it
+            start = entry.tokens
+        else:
+            sub = _serve.init_serve_state(self.cfg, self.pa, 1, self.ccfg,
+                                          dtype=self.dtype)
+            start = 0
+        self.prefilling[row] = _ChunkJob(req=req, row=row, prompt=prompt,
+                                         state=sub, next_pos=start,
+                                         entry=entry, seed_tokens=start)
+        return row
+
+    def _chunk_quota(self, T: int, n: int) -> np.ndarray:
+        """(L,) per-head keep cap for an ``n``-token chunk of a ``T``-token
+        prompt: the monolithic per-head bound prorated by the chunk's share
+        of the prompt (floor 1, so every chunk may retain something).  The
+        union over chunks then tracks the monolithic budget to within one
+        block of ceil slack per chunk — exact for policy "none"."""
+        H, L = self.cfg.n_kv_heads, self.cfg.n_layers
+        full = np.asarray([layer_keep_bound(self.ccfg.policy, self.ccfg,
+                                            T, H, l, L) // H
+                           for l in range(L)], np.int64)
+        return np.maximum(1, np.ceil(full * n / T)).astype(np.int32)
+
+    def _run_chunks(self, events: dict) -> None:
+        """Advance every in-flight chunked prefill by exactly one chunk —
+        the §14 interleaving contract: live-row decode latency is bounded
+        by one chunk plus one decode step, never a whole prefill."""
+        Ck = self.prefix_cfg.chunk_tokens
+        for row in sorted(self.prefilling):
+            job = self.prefilling[row]
+            T = int(job.prompt.shape[0])
+            n = min(Ck, T - job.next_pos)
+            chunk = np.zeros((1, Ck), np.int32)
+            chunk[0, :n] = job.prompt[job.next_pos:job.next_pos + n]
+            with self.obs.trace.span("prefill_chunk", req=job.req.req_id,
+                                     start=job.next_pos, tokens=n):
+                job.state, logits, lens = self.executor.prefill_chunk(
+                    self.sp, chunk, self.pa, job.state,
+                    rows=np.asarray([row], np.int32),
+                    start=np.asarray([job.next_pos], np.int32),
+                    valid=np.asarray([n], np.int32),
+                    quota=self._chunk_quota(T, n),
+                    head_importance=self.head_importance)
+            job.next_pos += n
+            if n == Ck:  # full-chunk boundary: snapshot for registration
+                job.boundaries[job.next_pos] = np.asarray(lens)[:, :, 0]
+            if job.next_pos >= T:
+                job.last_logits = np.asarray(logits)
+                self._finish_chunked(job, events)
+
+    def _finish_chunked(self, job: _ChunkJob, events: dict) -> None:
+        """Final chunk landed: splice the sub-state into the live batch
+        (sharing the seed's full blocks), stamp the first token — TTFT
+        spans submit → here, across every chunk — and register this
+        prompt's boundaries as new prefix entries."""
+        req, row = job.req, job.row
+        shared = None
+        if job.entry is not None:
+            shared, _ = self._head_slot_table(job.entry, row)
+        while True:
+            try:
+                if shared is not None:
+                    self.state = self.backend.splice(
+                        self.state, job.state, jnp.asarray([row]),
+                        shared_blocks=shared)
+                else:
+                    self.state = self.backend.splice(self.state, job.state,
+                                                     jnp.asarray([row]))
+                break
+            except PoolExhausted:
+                # cheapest memory first: entries held only by the index
+                if self.prefix is not None and self.prefix.evict_lru():
+                    continue
+                self._abort_job(job, requeue=True)
+                return
+        del self.prefilling[row]
+        if job.entry is not None:
+            self.prefix.unpin(job.entry)
+        first = int(np.asarray(job.state.last_tokens)[0])
+        req.generated.append(first)
+        req.first_token_step = self.step_idx
+        req.first_token_time = time.time()
+        self.obs.metrics.counter(
+            "sched_admissions_total",
+            help="requests admitted (prefilled + spliced)").inc()
+        ttft = req.ttft_seconds()
+        if ttft is not None:
+            self.obs.metrics.histogram(
+                "ttft_s", help="time to first token (queue wait + prefill "
+                               "wall time)").observe(ttft)
+        if self.scfg.collect_logits:
+            req.logits = [job.last_logits[0]]
+        req.state = RequestState.DECODING
+        self.active[row] = req
+        # register before any retirement: entries take their own refs off
+        # the row's table, which release_rows would zero
+        self._register_boundaries(job)
+        if self._done(req):
+            self._retire(req)
+            events["finished"].append(req.req_id)
+
+    def _abort_job(self, job: _ChunkJob, requeue: bool) -> None:
+        """Unwind a job whose splice never landed: no blocks are held, so
+        only the row, the pin, and the request state roll back."""
+        del self.prefilling[job.row]
+        if job.entry is not None:
+            self.prefix.unpin(job.entry)
+        self.freelist.release(job.row)
+        req = job.req
+        req.row = None
+        if requeue:
+            req.state = RequestState.QUEUED
+            req.admit_step = None
+            req.generated = []
+            req.prefix_shared_blocks = None
+            req.prefix_hit_tokens = 0
+            self.queue.appendleft(req)
+
+    def _register_boundaries(self, job: _ChunkJob) -> None:
+        """Donor side of the index: adopt this prompt's full-chunk
+        boundaries.  Each entry stores *full blocks only* with lengths
+        truncated to the block-aligned prefix — the partial tail block is
+        private to the row (its later appends would leak into sharers);
+        the dropped remainder is re-copied from the seed gather for future
+        hits, trading a few tokens of retained context for safe sharing."""
+        if self.prefix is None:
+            return
+        bs = self.backend.block_size
+        sh = np.asarray(self.pa.slot_head)
+        ri = np.asarray(self.pa.replica_idx)
+        rc = np.asarray(self.pa.replica_count)
+        row = job.row
+        own = (sh >= 0) & ((row % np.maximum(rc, 1)) == ri)
+        L, S = sh.shape
+        H, M = self.cfg.n_kv_heads, self.backend.max_blocks
+        for t_j, key in self.prefix.chain_keys(job.prompt):
+            if t_j <= job.seed_tokens or t_j not in job.boundaries:
+                continue
+            lens_h = job.boundaries[t_j]  # (L, H) retained at the boundary
+            full = (lens_h // bs) * bs  # block-aligned shareable prefix
+            if not full.any():
+                continue
+            table = np.zeros((L, H, M), np.int32)
+            for l, s in zip(*np.nonzero(own)):
+                h = int(sh[l, s])
+                nb = int(full[l, h]) // bs
+                if nb:
+                    table[l, h, :nb] = self.backend.table[l, s, row, :nb]
+            self.prefix.register(key, t_j, table, full.astype(np.int32))
+
+    def prefix_stats(self) -> dict:
+        """Index counters + entry census (empty dict when sharing is off)."""
+        return {} if self.prefix is None else self.prefix.stats()
+
     def _release_row(self, req: Request) -> None:
         """Free a live request's row and its backing storage (blocks /
         slot state) — shared by retirement, cancellation, and preemption."""
@@ -461,10 +774,17 @@ class Scheduler:
         if req is not None:
             self._release_row(req)
         else:
-            req = next((r for r in self.queue if r.req_id == req_id), None)
-            if req is None:
-                return False
-            self.queue.remove(req)
+            job = next((j for j in self.prefilling.values()
+                        if j.req.req_id == req_id), None)
+            if job is not None:  # mid-chunked-prefill: no blocks held yet
+                req = job.req
+                self._abort_job(job, requeue=False)
+            else:
+                req = next((r for r in self.queue
+                            if r.req_id == req_id), None)
+                if req is None:
+                    return False
+                self.queue.remove(req)
         req.state = RequestState.CANCELLED
         req.finish_step = self.step_idx
         req.finish_time = time.time()
@@ -538,6 +858,11 @@ class Scheduler:
                     self.state, sorted(self.active))
                 return
             except PoolExhausted as e:
+                # reclaim index-only prefix entries before evicting live
+                # work — dropping a cache entry costs a future recompute,
+                # preempting a request costs a guaranteed one (§14)
+                if self.prefix is not None and self.prefix.evict_lru():
+                    continue
                 if not self._preempt_one():
                     raise RuntimeError(
                         "cache pool exhausted with nothing left to preempt "
@@ -551,6 +876,7 @@ class Scheduler:
         enough live rows for the realized profile to be meaningful."""
         return (self.scfg.enable_replan
                 and len(self.active) >= self.scfg.replan_min_rows
+                and not self.prefilling  # sub-states pin the current plan
                 and self.trigger.ready(self.step_idx))
 
     @staticmethod
@@ -598,6 +924,17 @@ class Scheduler:
         if shard_speeds is not None:
             self.shard_speeds = np.asarray(shard_speeds, float)
         speeds = self.shard_speeds
+        if self.prefilling:
+            # chunked sub-states are laid out under the current plan and
+            # prefix seeds reference the current pool: migrating under them
+            # would corrupt both.  Reject; the trigger path never gets here
+            # (should_replan), only direct Engine.replan calls can.
+            before = self.imbalance()
+            event = {"step": self.step_idx, "imbalance_before": before,
+                     "imbalance_after": before, "accepted": False,
+                     "rejected_reason": "chunked prefills in flight"}
+            self.replan_log.append(event)
+            return event
         # before/after under the same metric: speed-normalized when planning
         # against heterogeneous shards, raw otherwise
         before = self._imbalance_of(np.asarray(self.state.cache.lengths),
@@ -632,6 +969,13 @@ class Scheduler:
         self.state = dataclasses.replace(self.state, cache=commit())
         self.plan, self.pa = new_plan, new_pa
         self.sp = slotify_params(self.params, new_plan, self.cfg)
+        if self.prefix is not None:
+            # the backend rebuilt its pool from live tables only (shared
+            # rows were deep-copied private): the index's references died
+            # with the old pool, so drop entries without decref'ing and
+            # rebind to the new pool — sharing re-warms from new admits
+            self.prefix.flush(decref=False)
+            self.prefix.pool = self.backend.pool
         # no StepFn rebuild: sp/pa are executor arguments, shapes unchanged
         self.n_replans += 1
         self.replan_log.append(event)
@@ -665,9 +1009,17 @@ class Scheduler:
             i = min(range(len(self.queue)),
                     key=lambda j: (self.queue[j].priority, j))
             req = self.queue[i]
+            # prefix lookup before the admissibility check: a hit discounts
+            # the shared blocks from the request's charge (DESIGN.md §14)
+            entry = self._stamp_prefix_hit(req)
             if not self.admissible(req):
                 break
             del self.queue[i]
+            if self._should_chunk(req):
+                with self.obs.trace.span("admit_chunked", req=req.req_id):
+                    row = self._start_chunked(req, entry)
+                events["admitted"].append((req.req_id, row))
+                continue
             with self.obs.trace.span("admit", req=req.req_id):
                 row = self._admit(req)
             if row is None:  # backend memory dry even after preemption
@@ -676,6 +1028,10 @@ class Scheduler:
             events["admitted"].append((req.req_id, row))
             if req.is_finished:  # max_new_tokens == 1 or instant EOS
                 events["finished"].append(req.req_id)
+        # one chunk for each in-flight chunked prefill, then one decode
+        # tick: long prompts never head-of-line-block live rows (§14)
+        if self.prefilling:
+            self._run_chunks(events)
         # one interleaved decode tick for every live row
         if self.active:
             self._prepare_decode()  # may preempt (paged pool dry)
@@ -734,7 +1090,7 @@ class Scheduler:
                     self.finished.append(req)
                     self.n_cancellations += 1
                     i += 1
-                if not self.active:
+                if not self.active and not self.prefilling:
                     break
             while (not self.draining and i < len(pending)
                    and pending[i].arrival_step <= self.step_idx):
