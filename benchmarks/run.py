@@ -53,6 +53,7 @@ SUITES = {
     "fig9": "benchmarks.fig9_paged_kernel",
     "fig10": "benchmarks.fig10_goodput",
     "fig11": "benchmarks.fig11_prefix_reuse",
+    "fig12": "benchmarks.fig12_quantized_kv",
     "table3": "benchmarks.table3_quality_proxy",
 }
 
@@ -113,14 +114,19 @@ def main(argv=None) -> None:
     for name in names:
         t0 = time.time()
         metrics = None
+        kv_dtype = "fp32"
         try:
-            metrics = importlib.import_module(SUITES[name]).main()
+            module = importlib.import_module(SUITES[name])
+            # storage dtype the suite measures (PR 9); fp32 unless declared
+            kv_dtype = getattr(module, "KV_DTYPE", "fp32")
+            metrics = module.main()
         except Exception:
             traceback.print_exc()
             failed.append(name)
         wall_us = (time.time() - t0) * 1e6
         print(f"{name}/_suite,{wall_us:.0f},ok={name not in failed}")
-        entry = {"ok": name not in failed, "wall_us": wall_us}
+        entry = {"ok": name not in failed, "wall_us": wall_us,
+                 "kv_dtype": kv_dtype}
         if isinstance(metrics, dict):
             entry["metrics"] = metrics
         report["suites"][name] = entry

@@ -66,6 +66,7 @@ _LAZY = {
     "list_archs": "repro.configs.base:list_archs",
     # planning building blocks (planner-level studies, no model needed)
     "build_plan": "repro.core.planner:build_plan",
+    "plan_kv_dtypes": "repro.core.planner:plan_kv_dtypes",
     "replan_for_stragglers": "repro.core.planner:replan_for_stragglers",
     "assign_items": "repro.core.assignment:assign_items",
     "HeadPlacement": "repro.core.placement:HeadPlacement",

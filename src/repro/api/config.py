@@ -130,6 +130,23 @@ class EngineConfig:
             raise TypeError(
                 f"paging must be a PagingConfig, got "
                 f"{type(self.paging).__name__}")
+        # quantized KV pools (DESIGN.md §15) exist only on the paged
+        # backend, and per-head overrides must address real (layer, head)
+        # cells of this model — catch both at construction, not in-trace
+        if self.paging.kv_dtype != "fp32":
+            if self.cache_backend != "paged":
+                raise ValueError(
+                    f"paging.kv_dtype={self.paging.kv_dtype!r} (quantized "
+                    f"KV pools) requires cache_backend='paged', got "
+                    f"{self.cache_backend!r}; the slot backend stores KV "
+                    f"in the engine dtype only")
+            L, H = self.model.n_layers, self.model.n_kv_heads
+            for lyr, hd, dt in self.paging.kv_dtype_overrides:
+                if lyr >= L or hd >= H:
+                    raise ValueError(
+                        f"paging.kv_dtype override ({lyr}, {hd}) -> {dt!r} "
+                        f"out of range for model {self.model.name!r} with "
+                        f"{L} layers x {H} kv heads")
         if self.executor not in list_executors():
             raise ValueError(
                 f"unknown executor {self.executor!r}; registered: "

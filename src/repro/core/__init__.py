@@ -19,6 +19,7 @@ from repro.core.planner import (  # noqa: F401
     PLANNER_MODES,
     PlannerConfig,
     build_plan,
+    plan_kv_dtypes,
     plan_layer,
     replan_for_stragglers,
 )

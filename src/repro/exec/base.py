@@ -88,6 +88,18 @@ class Executor:
         self.mesh = mesh
         self.paging = paging
         self.paged_impl = "auto" if paging is None else paging.decode_impl
+        # static per-(layer, head) KV storage-kind grid (DESIGN.md §15):
+        # resolved once from the paging config, closed over by the decode
+        # StepFns, and indexed by the *traced* plan's slot_head in-trace —
+        # so a replan that moves heads across slots changes dequant kinds
+        # without retracing.  None on the fp32 path.
+        if paging is not None and getattr(paging, "kv_dtype", "fp32") != "fp32":
+            from repro.paging import kvquant
+            spec = kvquant.spec_from_paging(paging)
+            self.kv_kinds = kvquant.kind_grid(
+                spec, model_cfg.n_layers, model_cfg.n_kv_heads)
+        else:
+            self.kv_kinds = None
         # observability handle (DESIGN.md §12): StepFn wall-time histograms
         # + compile instant events; NULL_OBS (no-op) unless the Engine
         # facade threads its live Obs through

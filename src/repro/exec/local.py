@@ -60,12 +60,13 @@ class LocalExecutor(Executor):
 
     def _build_decode(self):
         cfg, ccfg, impl = self.cfg, self.ccfg, self.paged_impl
+        kinds = self.kv_kinds
 
         def fn(sp, state, pa, tokens, active, rows):
             self.decode_traces += 1  # runs at trace time only
             return _serve.decode_step(sp, state, cfg, pa, ccfg,
                                       tokens=tokens, active=active, rows=rows,
-                                      paged_impl=impl)
+                                      paged_impl=impl, kv_kinds=kinds)
 
         donate = (1,) if self.exec_cfg.donate_state else ()
         return jax.jit(fn, donate_argnums=donate)

@@ -137,11 +137,16 @@ class MeshExecutor(Executor):
                     f"split over model x data = {n_dev} devices; the "
                     f"backend must be built with pool_partitions="
                     f"{self.model_size}, row_partitions={self.data_size}")
+            # quantized pools carry (L, N) per-block scale arrays that shard
+            # over the same (model, data) split of the block axis as the
+            # payload pools (DESIGN.md §15); None on the fp32 path keeps the
+            # pytree structure matching
+            scale = P(None, (m, d)) if cache.k_scale is not None else None
             return PagedCache(
                 k_pool=P(None, (m, d)), v_pool=P(None, (m, d)),
                 pos_pool=P(None, (m, d)),
                 block_table=P(None, m, d), lengths=P(None, m, d),
-                positions=P(d))
+                positions=P(d), k_scale=scale, v_scale=scale)
         return SlotCache(k=P(None, m, d), v=P(None, m, d),
                          lengths=P(None, m, d), pos=P(None, m, d),
                          positions=P(d))
@@ -305,6 +310,7 @@ class MeshExecutor(Executor):
     def _build_decode(self, sp_specs, state_specs):
         cfg, ccfg, impl = self.cfg, self.ccfg, self.paged_impl
         ec = self.exec_cfg
+        kinds = self.kv_kinds
 
         def inner(sp, state, pa, tokens, active, rows):
             self.decode_traces += 1  # runs at trace time only
@@ -312,7 +318,7 @@ class MeshExecutor(Executor):
                                       tokens=tokens, active=active, rows=rows,
                                       model_axis=ec.model_axis,
                                       data_axis=ec.data_axis,
-                                      paged_impl=impl)
+                                      paged_impl=impl, kv_kinds=kinds)
 
         d = ec.data_axis
         # the static replication checker stays on for XLA-only decode; a

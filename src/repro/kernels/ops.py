@@ -80,7 +80,8 @@ def paged_fairkv_decode(q, k_pool, v_pool, pos_pool, block_table, lengths,
                         capacity: int, attn_cap: float = 0.0, q_pos=None,
                         window: int = 0, impl: str = "auto",
                         block_c: int = 128,
-                        interpret: Optional[bool] = None):
+                        interpret: Optional[bool] = None,
+                        k_scale=None, v_scale=None, kinds=None):
     """Paged decode attention (see ref.paged_fairkv_decode_ref).
 
     Same contract as ``fairkv_decode`` with (k, v, k_pos) replaced by one
@@ -88,6 +89,11 @@ def paged_fairkv_decode(q, k_pool, v_pool, pos_pool, block_table, lengths,
     docstring).  All impls agree on the valid prefix — the native kernel is
     validated against the oracle in tests/test_paged_kernel.py and holds
     token parity with the gather and slot paths through `Engine.generate`.
+
+    ``k_scale``/``v_scale`` ((N,) fp32) and ``kinds`` ((S,) int32) carry the
+    quantized-pool dequant state (DESIGN.md §15); every impl applies the
+    identical dequant semantics, so quantized parity tests compare real
+    implementations rather than a shared helper against itself.
     """
     if impl not in PAGED_DECODE_IMPLS:
         raise ValueError(
@@ -98,18 +104,21 @@ def paged_fairkv_decode(q, k_pool, v_pool, pos_pool, block_table, lengths,
     if impl == "jnp":
         return _ref.paged_fairkv_decode_ref(
             q, k_pool, v_pool, pos_pool, block_table, lengths, capacity,
-            attn_cap, q_pos=q_pos, window=window)
+            attn_cap, q_pos=q_pos, window=window,
+            k_scale=k_scale, v_scale=v_scale, kinds=kinds)
     if impl == "gather":
         from repro.kernels.paged_decode import paged_fairkv_decode_gather
         return paged_fairkv_decode_gather(
             q, k_pool, v_pool, pos_pool, block_table, lengths, capacity,
             attn_cap=attn_cap, q_pos=q_pos, window=window, backend="auto",
-            block_c=block_c, interpret=interpret)
+            block_c=block_c, interpret=interpret,
+            k_scale=k_scale, v_scale=v_scale, kinds=kinds)
     from repro.kernels.paged_fairkv_decode import paged_fairkv_decode_pallas
     ipret = (not _on_tpu()) if interpret is None else interpret
     return paged_fairkv_decode_pallas(
         q, k_pool, v_pool, pos_pool, block_table, lengths, capacity,
-        attn_cap=attn_cap, q_pos=q_pos, window=window, interpret=ipret)
+        attn_cap=attn_cap, q_pos=q_pos, window=window, interpret=ipret,
+        k_scale=k_scale, v_scale=v_scale, kinds=kinds)
 
 
 def snapkv_scores(q_obs, k, obs_positions, k_positions, attn_cap: float = 0.0,

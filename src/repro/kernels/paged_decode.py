@@ -29,6 +29,7 @@ from typing import Optional
 import jax.numpy as jnp
 
 from repro.kernels import ops as K
+from repro.kernels.ref import dequant_block_codes
 
 
 def paged_gather_views(
@@ -37,17 +38,30 @@ def paged_gather_views(
     pos_pool: jnp.ndarray,  # (N, bs) int32
     block_table: jnp.ndarray,  # (S, B, M) int32; 0 = null block
     capacity: int,
+    k_scale: Optional[jnp.ndarray] = None,  # (N,) fp32 per-block scales
+    v_scale: Optional[jnp.ndarray] = None,  # (N,)
+    kinds: Optional[jnp.ndarray] = None,  # (S,) int32 per-slot kind codes
 ):
     """(S, B, C, Dh) / (S, B, C) contiguous views of one layer's paged KV.
 
     Null-backed columns hold garbage; callers must mask by lengths (the
-    decode kernel does).
+    decode kernel does).  Quantized pools dequantize through the per-block
+    scale pools on the way out (DESIGN.md §15), so the views hold real
+    values regardless of the storage format.
     """
     ids = jnp.maximum(block_table, 0)
     S, B, M = ids.shape
     bs, Dh = k_pool.shape[1], k_pool.shape[2]
-    k = k_pool[ids].reshape(S, B, M * bs, Dh)[:, :, :capacity]
-    v = v_pool[ids].reshape(S, B, M * bs, Dh)[:, :, :capacity]
+    k = k_pool[ids]  # (S, B, M, bs, Dh)
+    v = v_pool[ids]
+    if k_scale is not None:
+        kind = (jnp.zeros((S,), jnp.int32) if kinds is None
+                else jnp.asarray(kinds, jnp.int32))
+        kind = kind[:, None, None, None, None]
+        k = dequant_block_codes(k, k_scale[ids][..., None, None], kind)
+        v = dequant_block_codes(v, v_scale[ids][..., None, None], kind)
+    k = k.reshape(S, B, M * bs, Dh)[:, :, :capacity]
+    v = v.reshape(S, B, M * bs, Dh)[:, :, :capacity]
     pos = pos_pool[ids].reshape(S, B, M * bs)[:, :, :capacity]
     return k, v, pos
 
@@ -66,11 +80,15 @@ def paged_fairkv_decode_gather(
     backend: str = "auto",
     block_c: int = 128,
     interpret: Optional[bool] = None,
+    k_scale: Optional[jnp.ndarray] = None,
+    v_scale: Optional[jnp.ndarray] = None,
+    kinds: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Gather-based paged decode — same contract as
     ``ops.paged_fairkv_decode`` (which dispatches here for ``impl="gather"``)."""
     k, v, k_pos = paged_gather_views(k_pool, v_pool, pos_pool, block_table,
-                                     capacity)
+                                     capacity, k_scale=k_scale,
+                                     v_scale=v_scale, kinds=kinds)
     return K.fairkv_decode(q, k, v, lengths, attn_cap=attn_cap, k_pos=k_pos,
                            q_pos=q_pos, window=window, backend=backend,
                            block_c=block_c, interpret=interpret)

@@ -26,6 +26,17 @@ Design (TPU-adapted flash-decoding over block tables):
   (gemma2 local layers / hymba) and gemma2's attention softcap is applied
   before masking, matching the slot kernel bit-for-bit on the same math.
 
+Quantized pools (DESIGN.md §15): when the backend stores int8 codes the
+kernel takes two extra ``(N, 1)`` fp32 scale operands whose BlockSpecs ride
+the *same* block-id index map as K/V — each grid step's HBM→VMEM copy is
+then ``2·bs·Dh`` bytes of codes plus 8 bytes of scale instead of
+``2·bs·Dh·itemsize`` bytes of floats, and the dequant
+(``codes → fp32 · scale``) happens in-register inside the online-softmax
+loop.  A fourth scalar-prefetch operand carries the (S,) per-slot kind
+codes (0 = int8, 1 = fp8-bitcast) selecting the dequant interpretation per
+program.  The fp32 path takes the original operand list — the quantized
+knob off compiles a byte-identical kernel.
+
 Validated in interpret mode against ``ref.paged_fairkv_decode_ref``
 (tests/test_paged_kernel.py); dispatched via ``ops.paged_fairkv_decode``.
 """
@@ -44,30 +55,48 @@ from repro.kernels.pallas_compat import compiler_params
 
 NEG_INF = -1e30
 
+# kernels stay self-contained (no repro.paging import): local fp8 probe,
+# matching kvquant.fp8_supported / ref._HAS_FP8
+_HAS_FP8 = hasattr(jnp, "float8_e4m3fn")
+
+
+def _dequant(codes, scale, kind):
+    """In-kernel block dequant: int8 codes → fp32 at the block's scale.
+
+    ``kind`` selects int8 (codes are signed integers) vs fp8 (codes are
+    bitcast float8_e4m3fn); fp8 NaN bit patterns — possible only in
+    never-written garbage the length mask will discard — flush to 0 so they
+    cannot poison ``p·v`` through 0·NaN.
+    """
+    f = codes.astype(jnp.float32)
+    if _HAS_FP8:
+        f8 = jax.lax.bitcast_convert_type(
+            codes, jnp.float8_e4m3fn).astype(jnp.float32)
+        f8 = jnp.where(f8 == f8, f8, 0.0)
+        f = jnp.where(kind == 1, f8, f)
+    return f * scale
+
 
 def _kernel(
-    # scalar prefetch
-    table_ref,  # (S, B, M) int32 pool block ids; <=0 = null
-    lengths_ref,  # (S, B) int32
-    q_pos_ref,  # (B,) int32
-    # inputs
-    q_ref,  # (1, 1, G, Dh)
-    k_ref,  # (1, bs, Dh) — one pool block
-    v_ref,  # (1, bs, Dh)
-    kpos_ref,  # (1, bs) int32
-    # output
-    o_ref,  # (1, 1, G, Dh)
-    # scratch
-    acc_ref,  # (G, Dh) f32
-    m_ref,  # (G, 1) f32
-    l_ref,  # (G, 1) f32
-    *,
+    *refs,
     bs: int,
     n_blocks: int,
     scale: float,
     attn_cap: float,
     window: int,
+    quantized: bool,
 ):
+    # operand order mirrors the two pallas_call signatures below: scalar
+    # prefetch (table, lengths, q_pos[, kinds]), then inputs
+    # (q, k, v, kpos[, k_scale, v_scale]), output, scratch
+    if quantized:
+        (table_ref, lengths_ref, q_pos_ref, kinds_ref,
+         q_ref, k_ref, v_ref, kpos_ref, ksc_ref, vsc_ref,
+         o_ref, acc_ref, m_ref, l_ref) = refs
+    else:
+        (table_ref, lengths_ref, q_pos_ref,
+         q_ref, k_ref, v_ref, kpos_ref,
+         o_ref, acc_ref, m_ref, l_ref) = refs
     s, b, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
     ln = lengths_ref[s, b]
     n_valid = (ln + bs - 1) // bs
@@ -81,7 +110,11 @@ def _kernel(
     @pl.when(j < n_valid)
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32)  # (G, Dh)
-        k = k_ref[0].astype(jnp.float32)  # (bs, Dh)
+        if quantized:
+            kind = kinds_ref[s]
+            k = _dequant(k_ref[0], ksc_ref[0, 0], kind)  # (bs, Dh)
+        else:
+            k = k_ref[0].astype(jnp.float32)  # (bs, Dh)
         scores = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale  # (G, bs)
@@ -102,7 +135,10 @@ def _kernel(
         corr = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
         m_ref[...] = m_new
-        v = v_ref[0].astype(jnp.float32)  # (bs, Dh)
+        if quantized:
+            v = _dequant(v_ref[0], vsc_ref[0, 0], kinds_ref[s])  # (bs, Dh)
+        else:
+            v = v_ref[0].astype(jnp.float32)  # (bs, Dh)
         pv = jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
@@ -128,6 +164,9 @@ def paged_fairkv_decode_pallas(
     q_pos: Optional[jnp.ndarray] = None,  # (B,) int32
     window: int = 0,
     interpret: bool = False,
+    k_scale: Optional[jnp.ndarray] = None,  # (N,) fp32 per-block scales
+    v_scale: Optional[jnp.ndarray] = None,  # (N,)
+    kinds: Optional[jnp.ndarray] = None,  # (S,) int32 per-slot kind codes
 ) -> jnp.ndarray:
     """Decode attention over one paged layer — same contract as
     ``ref.paged_fairkv_decode_ref``, consuming pools + table directly."""
@@ -141,8 +180,11 @@ def paged_fairkv_decode_pallas(
     lengths = jnp.asarray(lengths, jnp.int32)
     if q_pos is None:
         q_pos = jnp.zeros((B,), jnp.int32)
+    quantized = k_scale is not None
 
-    def q_map(s, b, j, tbl, lens, qp):
+    # *rest absorbs the extra (kinds) scalar-prefetch ref on the quantized
+    # path so one set of index maps serves both operand lists
+    def q_map(s, b, j, tbl, lens, *rest):
         return (b, s, 0, 0)
 
     def block_id(s, b, j, tbl, lens):
@@ -154,24 +196,41 @@ def paged_fairkv_decode_pallas(
         jj = jnp.minimum(j, last_valid)
         return jnp.maximum(tbl[s, b, jj], 0)
 
-    def kv_map(s, b, j, tbl, lens, qp):
+    def kv_map(s, b, j, tbl, lens, *rest):
         return (block_id(s, b, j, tbl, lens), 0, 0)
 
-    def kpos_map(s, b, j, tbl, lens, qp):
+    def kpos_map(s, b, j, tbl, lens, *rest):
         return (block_id(s, b, j, tbl, lens), 0)
 
-    def o_map(s, b, j, tbl, lens, qp):
+    def scale_map(s, b, j, tbl, lens, *rest):
+        return (block_id(s, b, j, tbl, lens), 0)
+
+    def o_map(s, b, j, tbl, lens, *rest):
         return (b, s, 0, 0)
 
+    in_specs = [
+        pl.BlockSpec((1, 1, G, Dh), q_map),
+        pl.BlockSpec((1, bs, Dh), kv_map),
+        pl.BlockSpec((1, bs, Dh), kv_map),
+        pl.BlockSpec((1, bs), kpos_map),
+    ]
+    num_prefetch = 3
+    args = [table, lengths, q_pos, q, k_pool, v_pool, pos_pool]
+    if quantized:
+        kind = (jnp.zeros((S,), jnp.int32) if kinds is None
+                else jnp.asarray(kinds, jnp.int32))
+        num_prefetch = 4
+        args = [table, lengths, q_pos, kind, q, k_pool, v_pool, pos_pool,
+                jnp.asarray(k_scale, jnp.float32).reshape(N, 1),
+                jnp.asarray(v_scale, jnp.float32).reshape(N, 1)]
+        in_specs = in_specs + [
+            pl.BlockSpec((1, 1), scale_map),
+            pl.BlockSpec((1, 1), scale_map),
+        ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
+        num_scalar_prefetch=num_prefetch,
         grid=(S, B, M),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, Dh), q_map),
-            pl.BlockSpec((1, bs, Dh), kv_map),
-            pl.BlockSpec((1, bs, Dh), kv_map),
-            pl.BlockSpec((1, bs), kpos_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, Dh), o_map),
         scratch_shapes=[
             pltpu.VMEM((G, Dh), jnp.float32),
@@ -181,7 +240,7 @@ def paged_fairkv_decode_pallas(
     )
     kernel = functools.partial(
         _kernel, bs=bs, n_blocks=M, scale=1.0 / math.sqrt(Dh),
-        attn_cap=attn_cap, window=window)
+        attn_cap=attn_cap, window=window, quantized=quantized)
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -189,5 +248,5 @@ def paged_fairkv_decode_pallas(
         interpret=interpret,
         compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
-    )(table, lengths, q_pos, q, k_pool, v_pool, pos_pool)
+    )(*args)
     return out

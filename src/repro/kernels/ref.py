@@ -14,6 +14,26 @@ import jax.numpy as jnp
 
 NEG_INF = -1e30
 
+# fp8 availability probe — deliberately duplicated from repro.paging.kvquant:
+# oracles stay self-contained (no imports from the subsystems they validate)
+_HAS_FP8 = hasattr(jnp, "float8_e4m3fn")
+
+
+def dequant_block_codes(codes, scale, kind):
+    """int8 block codes → fp32 under per-block ``scale`` and kind
+    (0 = int8, 1 = fp8-bitcast) — the oracle's own copy of the paged-pool
+    dequant semantics (DESIGN.md §15).  fp8 NaN bit patterns (possible in
+    never-written pool garbage) flush to 0 so masked positions cannot
+    poison the probability-weighted sum through 0·NaN.
+    """
+    f = codes.astype(jnp.float32)
+    if _HAS_FP8:
+        f8 = jax.lax.bitcast_convert_type(
+            codes, jnp.float8_e4m3fn).astype(jnp.float32)
+        f8 = jnp.where(f8 == f8, f8, 0.0)
+        f = jnp.where(kind == 1, f8, f)
+    return f * scale
+
 
 def fairkv_decode_ref(
     q: jnp.ndarray,  # (B, S, G, Dh) — one new query per row per slot group
@@ -62,6 +82,9 @@ def paged_fairkv_decode_ref(
     attn_cap: float = 0.0,
     q_pos: Optional[jnp.ndarray] = None,
     window: int = 0,
+    k_scale: Optional[jnp.ndarray] = None,  # (N,) fp32 per-block scales
+    v_scale: Optional[jnp.ndarray] = None,  # (N,)
+    kinds: Optional[jnp.ndarray] = None,  # (S,) int32 per-slot kind codes
 ) -> jnp.ndarray:
     """Oracle for the paged decode path (`kernels.paged_decode`).
 
@@ -69,13 +92,23 @@ def paged_fairkv_decode_ref(
     cache would hold — column ``c`` at offset ``c % bs`` of block
     ``table[c // bs]`` — then applies `fairkv_decode_ref` unchanged, so the
     paged path's semantics are *defined* as slot-path semantics over the
-    gathered view.
+    gathered view.  Quantized pools (``k_scale is not None``) dequantize
+    the gathered blocks first (`dequant_block_codes`) — all-int8 kinds
+    assumed when ``kinds`` is omitted.
     """
     ids = jnp.maximum(block_table, 0)
     S, B, M = ids.shape
     bs, Dh = k_pool.shape[1], k_pool.shape[2]
-    k = k_pool[ids].reshape(S, B, M * bs, Dh)[:, :, :capacity]
-    v = v_pool[ids].reshape(S, B, M * bs, Dh)[:, :, :capacity]
+    k = k_pool[ids]  # (S, B, M, bs, Dh)
+    v = v_pool[ids]
+    if k_scale is not None:
+        kind = (jnp.zeros((S,), jnp.int32) if kinds is None
+                else jnp.asarray(kinds, jnp.int32))
+        kind = kind[:, None, None, None, None]
+        k = dequant_block_codes(k, k_scale[ids][..., None, None], kind)
+        v = dequant_block_codes(v, v_scale[ids][..., None, None], kind)
+    k = k.reshape(S, B, M * bs, Dh)[:, :, :capacity]
+    v = v.reshape(S, B, M * bs, Dh)[:, :, :capacity]
     pos = pos_pool[ids].reshape(S, B, M * bs)[:, :, :capacity]
     return fairkv_decode_ref(q, k, v, lengths, attn_cap, k_pos=pos,
                              q_pos=q_pos, window=window)

@@ -74,16 +74,21 @@ def _engine_config(args, max_seq_len: int, batch_cap: int,
         planner=PlannerConfig(mode=args.planner, engine=args.engine,
                               extra_copies=args.copies, batch_cap=batch_cap),
         scheduler=scheduler,
-        # --prefix-cache needs block refcounts, which only the paged
-        # backend has; promote slot (the default) rather than erroring on
-        # the common invocation — any other backend choice still errors
-        # through EngineConfig validation
-        cache_backend=("paged" if (getattr(args, "prefix_cache", False)
-                                   and args.cache_backend == "slot")
+        # --prefix-cache needs block refcounts and --kv-dtype needs block
+        # storage, which only the paged backend has; promote slot (the
+        # default) rather than erroring on the common invocation — any
+        # other backend choice still errors through EngineConfig validation
+        cache_backend=("paged"
+                       if ((getattr(args, "prefix_cache", False)
+                            or getattr(args, "kv_dtype", "fp32") != "fp32")
+                           and args.cache_backend == "slot")
                        else args.cache_backend),
         paging=PagingConfig(block_size=args.block_size,
                             n_blocks=args.pool_blocks,
-                            decode_impl=args.paged_impl),
+                            decode_impl=args.paged_impl,
+                            kv_dtype=getattr(args, "kv_dtype", "fp32"),
+                            pool_hbm_bytes=getattr(args, "pool_hbm_bytes",
+                                                   0)),
         prefix=PrefixConfig(
             enabled=getattr(args, "prefix_cache", False),
             chunk_tokens=(getattr(args, "prefill_chunk", 0)
@@ -373,6 +378,16 @@ def main() -> None:
                     help="paged backend: decode-attention implementation "
                          "(DESIGN.md §11; auto = native pallas kernel on "
                          "TPU, jnp oracle elsewhere)")
+    ap.add_argument("--kv-dtype", default="fp32",
+                    choices=["fp32", "int8", "fp8"],
+                    help="paged backend: KV block storage format "
+                         "(DESIGN.md §15; quantized pools carry per-block "
+                         "scales and dequantize in the decode kernel)")
+    ap.add_argument("--pool-hbm-bytes", type=int, default=0,
+                    help="paged backend: size the per-layer pool from an "
+                         "HBM byte budget instead of --pool-blocks "
+                         "(bytes-aware admission: int8 pools hold ~4x the "
+                         "blocks of fp32 at the same budget)")
     # --- shared-prefix reuse + chunked prefill (DESIGN.md §14) ---------------
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="split prompt prefill into chunks of this many "

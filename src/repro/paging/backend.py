@@ -28,9 +28,11 @@ from repro.api.registry import register_cache_backend
 from repro.cache.slot_cache import PlanArrays
 from repro.cache.slot_cache import migrate_cache as migrate_slot_cache
 from repro.compression.policies import layer_keep_bound
+from repro.paging import kvquant
 from repro.paging.block_pool import BlockPool
 from repro.paging.paged_cache import (
     PagedCache,
+    block_hbm_bytes,
     build_table,
     init_paged_cache,
     max_blocks_per_row,
@@ -77,6 +79,19 @@ class PagedBackend(CacheBackend):
         # (the old block's content stays live — someone still holds a ref).
         self._pending_cow: list = []
         self.cow_copies = 0  # lifetime count of privatized blocks
+        # quantized storage (DESIGN.md §15): resolved spec, the static
+        # (L, H) kind grid, and the scale-reset backlog — freshly allocated
+        # growth blocks reuse pool slots whose scale entries are stale, so
+        # their scales must reset to 0 before the first quantize-on-write
+        # append (the running max would otherwise inherit a huge stale
+        # scale and flush small tokens to code 0).  Same PoolExhausted
+        # retry semantics as the CoW queue.
+        self.kv_quant = kvquant.spec_from_paging(self.paging)
+        self.kv_kinds = (kvquant.kind_grid(self.kv_quant, self.cfg.n_layers,
+                                           self.cfg.n_kv_heads)
+                         if self.kv_quant is not None else None)
+        self.model_dtype = None  # stashed by init_state (the logical dtype)
+        self._pending_scale_reset: list = []  # (layer, [block ids])
 
     @property
     def partitions(self):
@@ -85,16 +100,25 @@ class PagedBackend(CacheBackend):
 
     # ---- state lifecycle ---------------------------------------------------
 
+    def _slot_kinds(self, pa) -> Optional[np.ndarray]:
+        """(L, S) per-slot kind codes under ``pa``'s head placement (None on
+        the fp32 path) — the host-side twin of the decode step's in-trace
+        ``slot_head`` → kind lookup."""
+        if self.kv_kinds is None:
+            return None
+        return kvquant.slot_kinds(self.kv_kinds, np.asarray(pa.slot_head))
+
     def init_state(self, pa, batch, dtype):
         self.pa = pa
         self.n_rows = int(batch)
+        self.model_dtype = dtype
         if self.cfg.attention_free:
             return _serve.init_serve_state(self.cfg, pa, batch, self.ccfg,
                                            dtype=dtype)
         cache, self.pool = init_paged_cache(
             self.cfg.n_layers, int(pa.slot_head.shape[1]), batch,
             self.capacity, self.cfg.head_dim, self.paging, dtype=dtype,
-            partitions=self.partitions)
+            partitions=self.partitions, kv_quant=self.kv_quant)
         self.pool.obs = self.obs  # alloc/free/exhaustion counters (§12)
         self.table = np.zeros(cache.block_table.shape, np.int32)
         return _serve.init_serve_state(self.cfg, pa, batch, self.ccfg,
@@ -118,7 +142,8 @@ class PagedBackend(CacheBackend):
                             partitions=self.partitions, n_rows=B)
         self.table = table.copy()
         cache = paginate_rows(empty.cache, slot, jnp.arange(B, dtype=jnp.int32),
-                              table)
+                              table, kinds=self._slot_kinds(pa))
+        self._observe_quant_error(slot)
         return dataclasses.replace(state, cache=cache)
 
     def splice(self, state, sub, rows, shared_blocks=None):
@@ -150,7 +175,9 @@ class PagedBackend(CacheBackend):
                                     n_rows=self.n_rows)
             self.table[:, :, rows_np, :] = table_sub
             cache = paginate_rows(state.cache, sub.cache,
-                                  jnp.asarray(rows_np, jnp.int32), table_sub)
+                                  jnp.asarray(rows_np, jnp.int32), table_sub,
+                                  kinds=self._slot_kinds(self.pa))
+            self._observe_quant_error(sub.cache)
             return _serve.splice_state(state, sub, rows, cache=cache)
         shared = np.asarray(shared_blocks, np.int32)
         n_sh = (shared > 0).sum(axis=-1)  # (L, S, R) full shared blocks
@@ -184,8 +211,34 @@ class PagedBackend(CacheBackend):
         table_write = np.where(col < n_sh[..., None], 0, table_full)
         cache = paginate_rows(state.cache, sub.cache,
                               jnp.asarray(rows_np, jnp.int32), table_write,
-                              table_store=table_full)
+                              table_store=table_full,
+                              kinds=self._slot_kinds(self.pa))
+        self._observe_quant_error(sub.cache)
         return _serve.splice_state(state, sub, rows, cache=cache)
+
+    def _observe_quant_error(self, slot) -> None:
+        """Quantization-error observability (DESIGN.md §15): on each
+        admission, roundtrip the spliced sub-cache through the codec and
+        record the relative error — the live quality signal for the
+        kv_dtype / override-map knobs.  Skipped when obs is off (the
+        roundtrip costs a second encode pass)."""
+        if self.kv_kinds is None or not self.obs.enabled:
+            return
+        # (L, S, 1, 1): broadcasts over the (L, S, B, M) block axes
+        kinds = jnp.asarray(self._slot_kinds(self.pa))[:, :, None, None]
+        err_k, den_k = kvquant.roundtrip_error(slot.k, slot.pos,
+                                               self.block_size, kinds)
+        err_v, den_v = kvquant.roundtrip_error(slot.v, slot.pos,
+                                               self.block_size, kinds)
+        tokens = int(np.asarray(slot.lengths).sum())
+        self.obs.metrics.counter(
+            "kv_quant_tokens_total",
+            help="KV tokens quantized into the paged pools").inc(tokens)
+        self.obs.metrics.gauge(
+            "kv_quant_rel_err",
+            help="mean relative KV quantization error over the last "
+                 "admitted sub-cache (Σ|deq(q(x))−x| / Σ|x|)"
+        ).set(float((err_k + err_v) / max(den_k + den_v, 1e-9)))
 
     def release_rows(self, state, rows):
         if state.cache is None:
@@ -250,6 +303,10 @@ class PagedBackend(CacheBackend):
                             continue
                         ids = self.pool.alloc(l, n_lp,
                                               partition=sp * row_parts + rp)
+                        if self.kv_kinds is not None:
+                            # reused pool slots carry stale scales; zero
+                            # them before the first quantize-on-write
+                            self._pending_scale_reset.append((l, list(ids)))
                         hv = have[l, sl][:, cols]
                         at = 0
                         for s, c in zip(*np.nonzero(miss > 0)):
@@ -271,7 +328,8 @@ class PagedBackend(CacheBackend):
                     f"{rows[r]}) targets shared block "
                     f"{int(bid[l, s, r])} (refcount > 1); copy-on-write "
                     f"failed to privatize it")
-        if not dirty and not self._pending_cow:
+        if (not dirty and not self._pending_cow
+                and not self._pending_scale_reset):
             return state
         cache = self._apply_pending_cow(cache)
         return dataclasses.replace(state, cache=dataclasses.replace(
@@ -314,16 +372,36 @@ class PagedBackend(CacheBackend):
         Applied strictly in queue order: a freed-then-reallocated id can
         appear as a copy *destination* only after all entries reading it
         as a *source* (they were queued while it was still shared), so
-        sequential application never reads clobbered content."""
-        if not self._pending_cow:
+        sequential application never reads clobbered content.
+
+        Quantized pools (DESIGN.md §15): a privatized block copies codes
+        AND scale verbatim — bit-exact, never a second quantization — and
+        queued scale resets (fresh growth blocks) flush here too, before
+        the first append can run a quantize-on-write against them.
+        """
+        if not self._pending_cow and not self._pending_scale_reset:
             return cache
         kp, vp, pp = cache.k_pool, cache.v_pool, cache.pos_pool
+        ks, vs = cache.k_scale, cache.v_scale
+        if ks is not None:
+            # resets before copies: a reset-queued id freed by preemption
+            # and re-handed-out as a CoW destination must end with the
+            # donor's copied scale, not a zero
+            for l, ids in self._pending_scale_reset:
+                idx = jnp.asarray(ids, jnp.int32)
+                ks = ks.at[l, idx].set(0.0)
+                vs = vs.at[l, idx].set(0.0)
         for l, old, new in self._pending_cow:
             kp = kp.at[l, new].set(kp[l, old])
             vp = vp.at[l, new].set(vp[l, old])
             pp = pp.at[l, new].set(pp[l, old])
+            if ks is not None:
+                ks = ks.at[l, new].set(ks[l, old])
+                vs = vs.at[l, new].set(vs[l, old])
         self._pending_cow.clear()
-        return dataclasses.replace(cache, k_pool=kp, v_pool=vp, pos_pool=pp)
+        self._pending_scale_reset.clear()
+        return dataclasses.replace(cache, k_pool=kp, v_pool=vp, pos_pool=pp,
+                                   k_scale=ks, v_scale=vs)
 
     def migrate_cache(self, cache, old_pa, new_pa, active_rows=None):
         """Trial re-layout for a replan: materialize → migrate → allocate
@@ -336,7 +414,13 @@ class PagedBackend(CacheBackend):
         leaves the backend untouched — the scheduler records the replan as
         rejected.
         """
-        slot = paged_to_slot(cache, self.capacity)
+        # dequantize through the live scale pools (same scale/kind lookup as
+        # the decode kernel) so the trial sees real values, and back in the
+        # model dtype so re-pagination re-quantizes from full precision —
+        # the slot↔paged bit-consistency rule (DESIGN.md §15)
+        slot = paged_to_slot(cache, self.capacity,
+                             kinds=self._slot_kinds(old_pa),
+                             out_dtype=self.model_dtype)
         slot2 = migrate_slot_cache(slot, old_pa, new_pa)
         B = int(cache.positions.shape[0])
         rows = np.arange(B) if active_rows is None else np.asarray(
@@ -352,14 +436,23 @@ class PagedBackend(CacheBackend):
                             partitions=self.partitions, n_rows=B)
 
         def commit():
+            # pin the pool size to the live cache's (pool_hbm_bytes and
+            # n_blocks are mutually exclusive sizing modes, and the byte
+            # budget already resolved to this block count); dtype is the
+            # *logical* model dtype — the storage dtype falls out of
+            # kv_quant (the pre-fix code passed cache.k_pool.dtype, which
+            # under quantization is int8 and would have desugared the
+            # re-paginated pools into int8-as-model-dtype garbage)
             empty, _ = init_paged_cache(
                 self.cfg.n_layers, int(new_pa.slot_head.shape[1]), B,
                 self.capacity, self.cfg.head_dim,
-                dataclasses.replace(self.paging, n_blocks=cache.n_blocks),
-                dtype=cache.k_pool.dtype,
-                partitions=self.partitions)
+                dataclasses.replace(self.paging, n_blocks=cache.n_blocks,
+                                    pool_hbm_bytes=0),
+                dtype=self.model_dtype or cache.k_pool.dtype,
+                partitions=self.partitions, kv_quant=self.kv_quant)
             cand = paginate_rows(empty, slot2,
-                                 jnp.arange(B, dtype=jnp.int32), table)
+                                 jnp.arange(B, dtype=jnp.int32), table,
+                                 kinds=self._slot_kinds(new_pa))
             self.pool, self.table, self.pa = trial, table, new_pa
             return cand
 
@@ -492,10 +585,22 @@ class PagedBackend(CacheBackend):
             return
         self.pool.sample_gauges(self.obs.metrics)
         if state.cache is not None:
+            live = int(np.asarray(state.cache.lengths).sum())
             self.obs.metrics.gauge(
                 "cache_live_tokens",
                 help="Σ retained KV tokens across the live cache"
-            ).set(int(np.asarray(state.cache.lengths).sum()))
+            ).set(live)
+            if isinstance(state.cache, PagedCache):
+                per_block = block_hbm_bytes(
+                    self.block_size, self.cfg.head_dim,
+                    state.cache.k_pool.dtype, self.kv_kinds is not None)
+                self.obs.metrics.gauge(
+                    "kv_bytes_per_token",
+                    help="HBM bytes pinned per live KV token (allocated "
+                         "blocks x per-block footprint incl. scales / "
+                         "live tokens) — the decode-bandwidth unit the "
+                         "kv_dtype knob halves (DESIGN.md §15)"
+                ).set(self.pool.blocks_in_use() * per_block / max(live, 1))
 
     def memory_stats(self, state) -> dict:
         if (state.cache is not None
@@ -519,18 +624,24 @@ class PagedBackend(CacheBackend):
         c = state.cache
         L, N, bs, Dh = c.k_pool.shape
         _, S, B, M = c.block_table.shape
-        item = c.k_pool.dtype.itemsize
-        block_bytes = 2 * bs * Dh * item  # K + V
+        quantized = c.k_scale is not None
+        # K + V payload + (quantized) the two fp32 scale entries; the
+        # slot-equivalent baseline stays in the *model* dtype — that is the
+        # dense cache this pool replaces, and the ratio between the two is
+        # the bytes-aware capacity win (DESIGN.md §15)
+        block_bytes = block_hbm_bytes(bs, Dh, c.k_pool.dtype, quantized)
+        model_item = jnp.dtype(self.model_dtype or c.k_pool.dtype).itemsize
         in_use = self.pool.blocks_in_use()
         usable = self.pool.usable_blocks
         return {
             "backend": self.name,
             "block_size": bs,
+            "kv_dtype": self.paging.kv_dtype,
             "blocks_in_use": in_use,
             "blocks_total": L * usable,
             "cache_bytes": in_use * block_bytes,
             "pool_bytes": L * usable * block_bytes,
             "slot_equivalent_bytes": int(2 * L * S * B * self.capacity
-                                         * Dh * item),
+                                         * Dh * model_item),
             "live_tokens": int(np.asarray(c.lengths).sum()),
         }

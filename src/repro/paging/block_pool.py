@@ -55,11 +55,28 @@ class PagingConfig:
     picks pallas on TPU and jnp elsewhere.  Validated here at construction
     (`EngineConfig` composes this config), so a typo fails before any
     StepFn traces.
+    ``kv_dtype``: KV pool storage format (DESIGN.md §15) — "fp32" (the
+    default: pools in the engine dtype, no quantization, bit-identical to
+    pre-quantization behavior), "int8", or "fp8" (requires a jax with
+    float8_e4m3fn).  Quantized pools carry parallel per-block scale pools
+    and dequantize in the decode inner loop.
+    ``kv_dtype_overrides``: per-(layer, head) format overrides — a mapping
+    ``{(layer, head): "int8"|"fp8"}`` (or the equivalent tuple of triples),
+    the planner's per-head precision axis; only meaningful when
+    ``kv_dtype`` is quantized.
+    ``pool_hbm_bytes``: size the per-layer pool from an HBM byte budget
+    instead of a block count (mutually exclusive with ``n_blocks > 0``) —
+    the bytes-aware admission knob: at the same byte budget an int8 pool
+    holds ~2x the blocks of an fp32-equivalent pool, so admission
+    (block-count based) automatically admits ~2x the tokens.
     """
 
     block_size: int = 16
     n_blocks: int = 0
     decode_impl: str = "auto"
+    kv_dtype: str = "fp32"
+    kv_dtype_overrides: tuple = ()
+    pool_hbm_bytes: int = 0
 
     def __post_init__(self):
         if self.block_size < 1:
@@ -71,6 +88,43 @@ class PagingConfig:
             raise ValueError(
                 f"unknown decode_impl {self.decode_impl!r}; known: "
                 f"{list(PAGED_DECODE_IMPLS)}")
+        from repro.paging import kvquant
+        if self.kv_dtype not in kvquant.KV_DTYPES:
+            raise ValueError(
+                f"unknown kv_dtype {self.kv_dtype!r}; known: "
+                f"{list(kvquant.KV_DTYPES)}")
+        if self.kv_dtype == "fp8" and not kvquant.fp8_supported():
+            raise ValueError(
+                "kv_dtype='fp8' requires a jax with float8_e4m3fn support")
+        # canonicalize the override map to a sorted hashable tuple (the
+        # frozen dataclass must stay usable as a static jit argument)
+        ov = self.kv_dtype_overrides
+        if isinstance(ov, dict):
+            ov = tuple((lh[0], lh[1], dt) for lh, dt in ov.items())
+        ov = tuple(sorted((int(l), int(h), str(dt)) for l, h, dt in ov))
+        object.__setattr__(self, "kv_dtype_overrides", ov)
+        if ov and self.kv_dtype == "fp32":
+            raise ValueError(
+                "kv_dtype_overrides require a quantized base kv_dtype")
+        for l, h, dt in ov:
+            if dt not in kvquant.QUANT_DTYPES:
+                raise ValueError(
+                    f"kv_dtype override ({l}, {h}) -> {dt!r}: must be one "
+                    f"of {list(kvquant.QUANT_DTYPES)}")
+            if dt == "fp8" and not kvquant.fp8_supported():
+                raise ValueError(
+                    f"kv_dtype override ({l}, {h}) -> 'fp8' requires a jax "
+                    "with float8_e4m3fn support")
+            if l < 0 or h < 0:
+                raise ValueError(
+                    f"kv_dtype override ({l}, {h}): indices must be >= 0")
+        if self.pool_hbm_bytes < 0:
+            raise ValueError(
+                f"pool_hbm_bytes must be >= 0, got {self.pool_hbm_bytes}")
+        if self.pool_hbm_bytes and self.n_blocks:
+            raise ValueError(
+                "pool_hbm_bytes and n_blocks are mutually exclusive pool "
+                "sizing modes; set exactly one (or neither for worst-case)")
 
 
 def blocks_for_tokens(tokens: int, block_size: int) -> int:

@@ -1,0 +1,179 @@
+"""Per-block KV quantization for the paged cache (DESIGN.md §15).
+
+Decode on the paged path is HBM-bound: the native kernel (§11) already made
+traffic proportional to allocated blocks, and the remaining factor sits in
+the *bytes per block*.  This module defines the storage codec the paged
+backend uses when ``PagingConfig.kv_dtype`` is quantized:
+
+- the K/V pools physically store **int8 codes** (1 byte/value); values
+  quantized as fp8 (``float8_e4m3fn``) are bitcast into the same int8 pool,
+  so per-head format mixing never changes the pool's dtype or itemsize;
+- a parallel ``(L, N)`` fp32 **scale pool** per tensor (one scale per
+  block — a block belongs to exactly one (slot, row), hence one head)
+  carries the per-block symmetric scale: ``value = decode(code) * scale``;
+- a static per-``(layer, head)`` **kind grid** (0 = int8, 1 = fp8) selects
+  the dequant interpretation.  Per-*slot* kinds are derived from the plan's
+  ``slot_head`` — in-trace on the decode path (so one StepFn trace serves
+  every replan) and on the host for pagination.
+
+The codec is symmetric per block: ``scale = amax / qmax`` over the block's
+*valid* entries, codes are ``round(x / scale)`` clipped to ±127 for int8
+and ``cast(x / scale)`` (then bitcast to int8) for fp8.  Scales only ever
+grow on append (running max), so previously written codes are rescaled by
+``old/new`` — never re-quantized from already-lossy values twice unless the
+scale actually grew.  Copy-on-write privatization copies codes and scale
+verbatim (bit-exact, no second quantization — DESIGN.md §14/§15).
+
+Stored fp8 bit patterns always come from a genuine fp8 cast; arbitrary
+garbage interpreted as fp8 could decode to NaN, so ``decode`` flushes NaN
+to 0 defensively — such entries are always masked by length before they
+can reach an output, but 0·NaN would still poison a masked-out
+probability-weighted sum.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# kv_dtype values accepted by PagingConfig ("fp32" = no quantization: pools
+# stay in the engine dtype and no scale pools exist)
+KV_DTYPES = ("fp32", "int8", "fp8")
+QUANT_DTYPES = ("int8", "fp8")
+
+INT8_QMAX = 127.0
+FP8_QMAX = 448.0  # max finite magnitude of float8_e4m3fn
+
+KIND_INT8 = 0
+KIND_FP8 = 1
+_KIND_OF = {"int8": KIND_INT8, "fp8": KIND_FP8}
+
+
+def fp8_supported() -> bool:
+    """True when this jax exposes float8_e4m3fn (the fp8 storage format)."""
+    return hasattr(jnp, "float8_e4m3fn")
+
+
+@dataclass(frozen=True)
+class KVQuantSpec:
+    """Resolved KV quantization: base format + per-(layer, head) overrides.
+
+    ``base`` is "int8" or "fp8"; ``overrides`` is a canonical sorted tuple
+    of ``(layer, head, dtype)`` triples (the hashable form
+    ``PagingConfig.kv_dtype_overrides`` normalizes to).  Physical storage
+    is int8 either way; the spec only decides each head's *interpretation*.
+    """
+
+    base: str
+    overrides: Tuple[Tuple[int, int, str], ...] = ()
+
+
+def spec_from_paging(paging) -> Optional[KVQuantSpec]:
+    """The quantization spec a PagingConfig implies (None = fp32 path)."""
+    if paging is None or getattr(paging, "kv_dtype", "fp32") == "fp32":
+        return None
+    return KVQuantSpec(base=paging.kv_dtype,
+                       overrides=tuple(paging.kv_dtype_overrides))
+
+
+def kind_grid(spec: KVQuantSpec, n_layers: int, n_heads: int) -> np.ndarray:
+    """(L, H) int32 kind codes — the static dequant-interpretation grid."""
+    grid = np.full((n_layers, n_heads), _KIND_OF[spec.base], np.int32)
+    for layer, head, dt in spec.overrides:
+        if layer >= n_layers or head >= n_heads:
+            raise ValueError(
+                f"kv_dtype override ({layer}, {head}) out of range for "
+                f"{n_layers} layers x {n_heads} kv heads")
+        grid[layer, head] = _KIND_OF[dt]
+    return grid
+
+
+def slot_kinds(grid: np.ndarray, slot_head: np.ndarray) -> np.ndarray:
+    """(L, S) int32 per-slot kinds from the plan's ``slot_head`` (host side;
+    empty slots (head −1) borrow head 0's kind — they own nothing, so the
+    interpretation is never read)."""
+    sh = np.maximum(np.asarray(slot_head, np.int64), 0)
+    return np.take_along_axis(np.asarray(grid, np.int32), sh, axis=1)
+
+
+def qmax_of(kind):
+    """Per-kind quantization range (broadcasts over a kind array)."""
+    return jnp.where(kind == KIND_FP8, FP8_QMAX, INT8_QMAX)
+
+
+def encode(x, scale, kind) -> jnp.ndarray:
+    """float → int8 codes under per-block ``scale`` and per-slot ``kind``.
+
+    ``scale``/``kind`` broadcast against ``x``; a zero scale (empty block)
+    encodes everything to 0.
+    """
+    safe = jnp.where(scale > 0, scale, 1.0)
+    y = x.astype(jnp.float32) / safe
+    codes = jnp.clip(jnp.round(y), -INT8_QMAX, INT8_QMAX).astype(jnp.int8)
+    if fp8_supported():
+        y8 = jnp.clip(y, -FP8_QMAX, FP8_QMAX).astype(jnp.float8_e4m3fn)
+        codes = jnp.where(kind == KIND_FP8,
+                          jax.lax.bitcast_convert_type(y8, jnp.int8), codes)
+    return codes
+
+
+def decode(codes, scale, kind) -> jnp.ndarray:
+    """int8 codes → fp32 values (inverse of `encode`; NaN-flushing — module
+    docstring)."""
+    f = codes.astype(jnp.float32)
+    if fp8_supported():
+        f8 = jax.lax.bitcast_convert_type(
+            codes, jnp.float8_e4m3fn).astype(jnp.float32)
+        f8 = jnp.where(f8 == f8, f8, 0.0)
+        f = jnp.where(kind == KIND_FP8, f8, f)
+    return f * scale
+
+
+def quantize_blocks(x, pos, block_size: int, kind):
+    """Block-quantize a contiguous slot-layout tensor → (codes, scales).
+
+    ``x`` is (..., C, Dh) with per-entry positions ``pos`` (..., C); C must
+    be a multiple of ``block_size`` (callers pad).  Entries with ``pos < 0``
+    are invalid: they are excluded from each block's amax and their codes
+    are zeroed, so slot-cache garbage can neither blow up a block's scale
+    nor survive as decodable content.  ``kind`` broadcasts against the
+    block axes (e.g. (L, S, 1, 1) against (L, S, B, M) blocks).
+    Returns codes shaped like ``x`` (int8) and scales (..., C//bs) fp32.
+    """
+    bs = int(block_size)
+    *lead, C, Dh = x.shape
+    if C % bs:
+        raise ValueError(f"capacity {C} not a multiple of block size {bs}")
+    M = C // bs
+    xb = x.reshape(*lead, M, bs, Dh).astype(jnp.float32)
+    valid = (jnp.asarray(pos) >= 0).reshape(*lead, M, bs)
+    amax = jnp.max(jnp.abs(xb) * valid[..., None], axis=(-2, -1))
+    scales = amax / qmax_of(kind)
+    codes = encode(xb, scales[..., None, None], kind[..., None, None])
+    codes = jnp.where(valid[..., None], codes, jnp.int8(0))
+    return codes.reshape(*lead, C, Dh), scales
+
+
+def roundtrip_error(x, pos, block_size: int, kind) -> Tuple[float, float]:
+    """(Σ|deq(q(x)) − x|, Σ|x|) over valid entries — the backend's
+    quantization-error observability sample (DESIGN.md §15)."""
+    C = x.shape[-2]
+    bs = int(block_size)
+    pad = (-C) % bs
+    if pad:
+        x = jnp.pad(x, ((0, 0),) * (x.ndim - 2) + ((0, pad), (0, 0)))
+        pos = jnp.pad(pos, ((0, 0),) * (pos.ndim - 1) + ((0, pad),),
+                      constant_values=-1)
+    M = x.shape[-2] // bs
+    codes, scales = quantize_blocks(x, pos, bs, kind)
+    *lead, C2, Dh = codes.shape
+    deq = decode(codes.reshape(*lead, M, bs, Dh),
+                 scales[..., None, None],
+                 kind[..., None, None]).reshape(*lead, C2, Dh)
+    valid = (jnp.asarray(pos) >= 0)[..., None]
+    err = jnp.abs(deq - x.astype(jnp.float32)) * valid
+    den = jnp.abs(x.astype(jnp.float32)) * valid
+    return float(err.sum()), float(den.sum())

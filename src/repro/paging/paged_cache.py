@@ -11,6 +11,9 @@ allocated proportional to each (slot, row)'s *realized* retained length:
                                          0 = the reserved null block
     lengths        : (L, S, B) int32  same semantics as the slot cache
     positions      : (B,) int32       next absolute position per row
+    k_scale, v_scale : (L, N) fp32    per-block dequant scales, present only
+                                      under a quantized ``kv_dtype``
+                                      (None on the fp32 path — DESIGN.md §15)
 
 ``M = ceil(C / bs)`` so a fully-retained row is still representable; the win
 is that *partially* retained rows (the common case under imbalanced
@@ -34,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.cache.slot_cache import SlotCache, ring_write_index, rows_to_mask
+from repro.paging import kvquant
 from repro.paging.block_pool import BlockPool, PagingConfig, blocks_for_tokens
 
 
@@ -46,6 +50,8 @@ class PagedCache:
     block_table: jnp.ndarray  # (L, S, B, M) int32; 0 = null block
     lengths: jnp.ndarray  # (L, S, B) int32
     positions: jnp.ndarray  # (B,) int32
+    k_scale: Optional[jnp.ndarray] = None  # (L, N) fp32 per-block scales
+    v_scale: Optional[jnp.ndarray] = None  # (L, N) fp32 per-block scales
 
     @property
     def block_size(self) -> int:
@@ -68,17 +74,30 @@ def max_blocks_per_row(capacity: int, block_size: int) -> int:
     return blocks_for_tokens(capacity, block_size)
 
 
+def block_hbm_bytes(block_size: int, head_dim: int, dtype,
+                    quantized: bool) -> int:
+    """HBM bytes one K+V block pins: payload plus, when quantized, the two
+    fp32 scale-pool entries (the bytes-aware admission unit, DESIGN.md §15)."""
+    item = jnp.dtype(dtype).itemsize
+    return 2 * block_size * head_dim * item + (8 if quantized else 0)
+
+
 def init_paged_cache(
     n_layers: int, n_slots: int, batch: int, capacity: int, head_dim: int,
     paging: PagingConfig, dtype=jnp.bfloat16,
     partitions: Tuple[int, int] = (1, 1),
+    kv_quant: Optional[kvquant.KVQuantSpec] = None,
 ) -> Tuple[PagedCache, BlockPool]:
     """Empty paged cache + its allocator.
 
     ``paging.n_blocks == 0`` sizes the pool to the slot-cache worst case
     (``S·B·M + 1`` per layer-partition): every (slot, row) can be fully
     allocated, so this mode can never preempt — it trades no memory but
-    validates the paged data path end to end.
+    validates the paged data path end to end.  ``paging.pool_hbm_bytes``
+    instead sizes the pool from a byte budget using the *actual* storage
+    dtype's block footprint — the bytes-aware admission mode (§15): a
+    quantized pool fits ~itemsize-ratio more blocks in the same budget, and
+    the downstream block-count admission needs no other change.
 
     ``partitions = (slot_parts, row_parts)`` (the mesh executor,
     DESIGN.md §10) splits each layer's pool into equal partitions indexed
@@ -87,6 +106,11 @@ def init_paged_cache(
     pool array shards cleanly over ``(model, data)`` and every append and
     gather stays device-local.  A configured ``paging.n_blocks`` is
     rounded up to a multiple of the partition count.
+
+    ``kv_quant`` (from ``kvquant.spec_from_paging``) switches the pools to
+    int8 code storage with zero-initialized (L, N) scale pools; ``dtype``
+    then only enters the worst-case/byte pool sizing as the *logical* model
+    dtype, not the storage dtype.
     """
     bs = paging.block_size
     M = max_blocks_per_row(capacity, bs)
@@ -98,18 +122,27 @@ def init_paged_cache(
         raise ValueError(
             f"{batch} rows do not split into {row_parts} partitions")
     n_partitions = slot_parts * row_parts
+    pool_dtype = jnp.int8 if kv_quant is not None else dtype
     if paging.n_blocks:
         part = -(-paging.n_blocks // n_partitions)  # ceil: round up
+    elif paging.pool_hbm_bytes:
+        per_block = block_hbm_bytes(bs, head_dim, pool_dtype,
+                                    kv_quant is not None)
+        total = paging.pool_hbm_bytes // (n_layers * per_block)
+        part = max(2, total // n_partitions)  # floor: budget is a cap
     else:
         part = (n_slots // slot_parts) * (batch // row_parts) * M + 1
     n_blocks = part * n_partitions
+    scale = (jnp.zeros((n_layers, n_blocks), jnp.float32)
+             if kv_quant is not None else None)
     cache = PagedCache(
-        k_pool=jnp.zeros((n_layers, n_blocks, bs, head_dim), dtype),
-        v_pool=jnp.zeros((n_layers, n_blocks, bs, head_dim), dtype),
+        k_pool=jnp.zeros((n_layers, n_blocks, bs, head_dim), pool_dtype),
+        v_pool=jnp.zeros((n_layers, n_blocks, bs, head_dim), pool_dtype),
         pos_pool=jnp.full((n_layers, n_blocks, bs), -1, jnp.int32),
         block_table=jnp.zeros((n_layers, n_slots, batch, M), jnp.int32),
         lengths=jnp.zeros((n_layers, n_slots, batch), jnp.int32),
         positions=jnp.zeros((batch,), jnp.int32),
+        k_scale=scale, v_scale=scale,
     )
     return cache, BlockPool(n_layers, n_blocks, n_partitions=n_partitions)
 
@@ -123,7 +156,9 @@ def init_paged_cache(
 # the parity test cannot compare a bug against itself).
 
 
-def paged_to_slot(cache: PagedCache, capacity: int) -> SlotCache:
+def paged_to_slot(cache: PagedCache, capacity: int,
+                  kinds: Optional[jnp.ndarray] = None,
+                  out_dtype=None) -> SlotCache:
     """Full materialization into a SlotCache (migration / debugging).
 
     Entries outside each (slot, row)'s valid prefix are zeroed (pos −1) so
@@ -135,13 +170,32 @@ def paged_to_slot(cache: PagedCache, capacity: int) -> SlotCache:
     blocks are shared (refcount > 1 under prefix reuse, DESIGN.md §14)
     copies the shared content and can never mutate it.  The pool-
     conservation regression test in tests/test_prefix.py pins this down.
+
+    Quantized pools dequantize through the scale pools — the *same*
+    scale/kind interpretation the decode kernel applies (DESIGN.md §15), so
+    slot↔paged migration stays bit-consistent with the decode path.
+    ``kinds`` is the (L, S) per-slot kind grid (``kvquant.slot_kinds``;
+    all-int8 assumed when omitted); ``out_dtype`` casts the dequantized
+    values (the model dtype — default fp32).
     """
     L, N, bs, Dh = cache.k_pool.shape
     _, S, B, M = cache.block_table.shape
     gids = (jnp.arange(L, dtype=jnp.int32)[:, None, None, None] * N
             + jnp.maximum(cache.block_table, 0))  # (L, S, B, M)
-    k = cache.k_pool.reshape(L * N, bs, Dh)[gids].reshape(L, S, B, M * bs, Dh)
-    v = cache.v_pool.reshape(L * N, bs, Dh)[gids].reshape(L, S, B, M * bs, Dh)
+    k = cache.k_pool.reshape(L * N, bs, Dh)[gids]  # (L, S, B, M, bs, Dh)
+    v = cache.v_pool.reshape(L * N, bs, Dh)[gids]
+    if cache.k_scale is not None:
+        kind = (jnp.zeros((L, S), jnp.int32) if kinds is None
+                else jnp.asarray(kinds, jnp.int32))
+        kind = kind[:, :, None, None, None, None]
+        ksc = cache.k_scale.reshape(-1)[gids][..., None, None]
+        vsc = cache.v_scale.reshape(-1)[gids][..., None, None]
+        k = kvquant.decode(k, ksc, kind)
+        v = kvquant.decode(v, vsc, kind)
+        if out_dtype is not None:
+            k, v = k.astype(out_dtype), v.astype(out_dtype)
+    k = k.reshape(L, S, B, M * bs, Dh)
+    v = v.reshape(L, S, B, M * bs, Dh)
     pos = cache.pos_pool.reshape(L * N, bs)[gids].reshape(L, S, B, M * bs)
     k, v, pos = k[..., :capacity, :], v[..., :capacity, :], pos[..., :capacity]
     valid = (jnp.arange(capacity, dtype=jnp.int32)[None, None, None, :]
@@ -170,6 +224,7 @@ def paged_append_token(
     capacity: int,
     ring: int = 128,
     table_layer: Optional[jnp.ndarray] = None,  # (S, B, M) addressing override
+    kinds: Optional[jnp.ndarray] = None,  # (S,) per-slot kind codes
 ) -> PagedCache:
     """Append one token for owned (slot, row) pairs — `append_token` parity.
 
@@ -184,6 +239,17 @@ def paged_append_token(
     stored ``block_table`` is untouched): the mesh executor passes a
     partition-localized view when pool ids in the stored table are global
     but the pool array in scope is one shard's partition (DESIGN.md §10).
+
+    Quantized pools (``cache.k_scale is not None``) quantize on write
+    (DESIGN.md §15): the target block's scale grows monotonically
+    (``max(old, amax(|token|)/qmax)``), the whole block is dequantized at
+    the old scale, the token inserted, and the block re-encoded at the new
+    scale.  When the scale did not grow the re-encode is an exact identity
+    on the untouched entries (codes round-trip), so repeated appends into
+    one block never compound error.  ``kinds`` carries the (S,) per-slot
+    interpretation (``kvquant.slot_kinds`` row — all-int8 when omitted);
+    invalid pairs rewrite their gathered null-block values unchanged, so
+    duplicate null-redirected scatters stay write-idempotent.
     """
     bs = cache.block_size
     lengths = cache.lengths[layer]  # (S, B)
@@ -195,17 +261,56 @@ def paged_append_token(
     bid = jnp.where(valid, bid, 0)
     kl, vl, pl = cache.k_pool[layer], cache.v_pool[layer], cache.pos_pool[layer]
     p_new = jnp.broadcast_to(cache.positions[None, :], own.shape)
-    k_upd = jnp.where(valid[..., None], k_new.astype(kl.dtype), kl[bid, off])
-    v_upd = jnp.where(valid[..., None], v_new.astype(vl.dtype), vl[bid, off])
     p_upd = jnp.where(valid, p_new, pl[bid, off]).astype(jnp.int32)
     new_len = jnp.where(own, jnp.minimum(lengths + 1, capacity), lengths)
+    if cache.k_scale is None:
+        k_upd = jnp.where(valid[..., None], k_new.astype(kl.dtype),
+                          kl[bid, off])
+        v_upd = jnp.where(valid[..., None], v_new.astype(vl.dtype),
+                          vl[bid, off])
+        k_pool = cache.k_pool.at[layer].set(kl.at[bid, off].set(k_upd))
+        v_pool = cache.v_pool.at[layer].set(vl.at[bid, off].set(v_upd))
+        k_scale = v_scale = None
+    else:
+        kind = (jnp.zeros((own.shape[0],), jnp.int32) if kinds is None
+                else jnp.asarray(kinds, jnp.int32))
+        kind_sb = jnp.broadcast_to(kind[:, None], own.shape)  # (S, B)
+        qmax = kvquant.qmax_of(kind_sb)
+        ksc, vsc = cache.k_scale[layer], cache.v_scale[layer]  # (N,)
+        onehot = (jnp.arange(bs, dtype=jnp.int32)[None, None, :]
+                  == off[..., None])  # (S, B, bs)
+        ins = valid[..., None] & onehot  # entries receiving the new token
+
+        def requant(pool_l, scale_l, token):
+            token = token.astype(jnp.float32)
+            old_s = scale_l[bid]  # (S, B)
+            new_s = jnp.where(
+                valid,
+                jnp.maximum(old_s, jnp.max(jnp.abs(token), axis=-1) / qmax),
+                old_s)
+            block = kvquant.decode(pool_l[bid], old_s[..., None, None],
+                                   kind_sb[..., None, None])  # (S, B, bs, Dh)
+            block = jnp.where(ins[..., None], token[:, :, None, :], block)
+            codes = kvquant.encode(block, new_s[..., None, None],
+                                   kind_sb[..., None, None])
+            codes = jnp.where(valid[..., None, None], codes, pool_l[bid])
+            return (pool_l.at[bid].set(codes),
+                    scale_l.at[bid].set(jnp.where(valid, new_s, old_s)))
+
+        kl_new, ksc_new = requant(kl, ksc, k_new)
+        vl_new, vsc_new = requant(vl, vsc, v_new)
+        k_pool = cache.k_pool.at[layer].set(kl_new)
+        v_pool = cache.v_pool.at[layer].set(vl_new)
+        k_scale = cache.k_scale.at[layer].set(ksc_new)
+        v_scale = cache.v_scale.at[layer].set(vsc_new)
     return PagedCache(
-        k_pool=cache.k_pool.at[layer].set(kl.at[bid, off].set(k_upd)),
-        v_pool=cache.v_pool.at[layer].set(vl.at[bid, off].set(v_upd)),
+        k_pool=k_pool,
+        v_pool=v_pool,
         pos_pool=cache.pos_pool.at[layer].set(pl.at[bid, off].set(p_upd)),
         block_table=cache.block_table,
         lengths=cache.lengths.at[layer].set(new_len.astype(jnp.int32)),
         positions=cache.positions,
+        k_scale=k_scale, v_scale=v_scale,
     )
 
 
@@ -215,6 +320,7 @@ def paginate_rows(
     rows: jnp.ndarray,  # (B_sub,) target global rows
     table_sub: np.ndarray,  # (L, S, B_sub, M) int32 freshly allocated ids
     table_store: Optional[np.ndarray] = None,  # (L, S, B_sub, M) stored ids
+    kinds: Optional[np.ndarray] = None,  # (L, S) per-slot kind codes
 ) -> PagedCache:
     """Copy a prefilled slot sub-cache into freshly allocated blocks.
 
@@ -231,6 +337,12 @@ def paginate_rows(
     table whose shared entries are zeroed — the null-redirect then
     guarantees refcount>1 blocks are never written, which is the
     copy-on-write immutability rule.  Default: store ``table_sub`` itself.
+
+    Quantized pools block-quantize the sub-cache on the way in
+    (``kvquant.quantize_blocks``): per-block scales from the valid-entry
+    amax, invalid entries zero-coded, scales scattered through the same
+    null-redirected gids as the payload (DESIGN.md §15).  ``kinds`` is the
+    (L, S) per-slot interpretation grid (all-int8 when omitted).
     """
     L, N, bs, Dh = cache.k_pool.shape
     _, S, B_sub, C, _ = sub.k.shape
@@ -241,6 +353,13 @@ def paginate_rows(
     k_sub = jnp.pad(sub.k, ((0, 0),) * 3 + ((0, pad), (0, 0)))
     v_sub = jnp.pad(sub.v, ((0, 0),) * 3 + ((0, pad), (0, 0)))
     p_sub = jnp.pad(sub.pos, ((0, 0),) * 3 + ((0, pad),), constant_values=-1)
+    k_scales = v_scales = None
+    if cache.k_scale is not None:
+        kind = (jnp.zeros((L, S), jnp.int32) if kinds is None
+                else jnp.asarray(kinds, jnp.int32))
+        kind = kind[:, :, None, None]  # broadcasts over (L, S, B_sub, M)
+        k_sub, k_scales = kvquant.quantize_blocks(k_sub, p_sub, bs, kind)
+        v_sub, v_scales = kvquant.quantize_blocks(v_sub, p_sub, bs, kind)
     k_sub = k_sub.reshape(L, S, B_sub, M, bs, Dh)
     v_sub = v_sub.reshape(L, S, B_sub, M, bs, Dh)
     p_sub = p_sub.reshape(L, S, B_sub, M, bs)
@@ -258,6 +377,12 @@ def paginate_rows(
     pos_pool = (cache.pos_pool.reshape(L * N, bs)
                 .at[gids].set(p_sub.reshape(-1, bs))
                 .reshape(L, N, bs))
+    k_scale, v_scale = cache.k_scale, cache.v_scale
+    if k_scales is not None:
+        k_scale = (k_scale.reshape(-1).at[gids].set(k_scales.reshape(-1))
+                   .reshape(L, N))
+        v_scale = (v_scale.reshape(-1).at[gids].set(v_scales.reshape(-1))
+                   .reshape(L, N))
     rows = jnp.asarray(rows, jnp.int32)
     stored = table_sub if table_store is None else table_store
     return PagedCache(
@@ -266,6 +391,7 @@ def paginate_rows(
             jnp.asarray(stored, jnp.int32)),
         lengths=cache.lengths.at[:, :, rows].set(sub.lengths),
         positions=cache.positions.at[rows].set(sub.positions),
+        k_scale=k_scale, v_scale=v_scale,
     )
 
 
@@ -283,6 +409,7 @@ def release_rows(cache: PagedCache, rows) -> PagedCache:
         block_table=jnp.where(m[None, None, :, None], 0, cache.block_table),
         lengths=jnp.where(m[None, None, :], 0, cache.lengths),
         positions=jnp.where(m, 0, cache.positions),
+        k_scale=cache.k_scale, v_scale=cache.v_scale,
     )
 
 

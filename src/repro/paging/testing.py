@@ -45,3 +45,41 @@ def make_paged_layer(rng, S, B, C, bs, Dh, empty_frac=0.3, dtype=np.float32,
                 pos_pool[blocks[c // bs], c % bs] = c  # absolute positions
     return (jnp.asarray(k_pool), jnp.asarray(v_pool), jnp.asarray(pos_pool),
             jnp.asarray(table), jnp.asarray(lengths))
+
+
+def quantize_paged_layer(k_pool, v_pool, block_table, kinds):
+    """Quantize a `make_paged_layer` fp32 pool pair into the storage the
+    quantized decode path consumes (DESIGN.md §15).
+
+    Each block is encoded whole (garbage tail entries included — they are
+    the same magnitude as real data in this fixture, so they exercise the
+    masking without distorting scales) at its owning slot's ``kinds`` entry,
+    resolved through ``block_table``; unowned blocks (the null block and
+    spares) encode as int8.  Returns
+    ``(k_codes, v_codes, k_scale, v_scale)`` with codes shaped like the
+    pools (int8) and (N,) fp32 per-block scales.
+    """
+    from repro.paging import kvquant
+
+    N = k_pool.shape[0]
+    tbl = np.asarray(block_table)
+    kinds = np.asarray(kinds, np.int32)
+    block_kind = np.zeros((N,), np.int32)
+    for s in range(tbl.shape[0]):
+        owned = np.unique(tbl[s][tbl[s] > 0])
+        block_kind[owned] = kinds[s]
+    qmax = np.where(block_kind == kvquant.KIND_FP8,
+                    kvquant.FP8_QMAX, kvquant.INT8_QMAX)
+    k = np.asarray(k_pool, np.float32)
+    v = np.asarray(v_pool, np.float32)
+    k_scale = np.abs(k).max(axis=(1, 2)) / qmax
+    v_scale = np.abs(v).max(axis=(1, 2)) / qmax
+    kb = jnp.asarray(block_kind)[:, None, None]
+    k_codes = kvquant.encode(jnp.asarray(k),
+                             jnp.asarray(k_scale, np.float32)[:, None, None],
+                             kb)
+    v_codes = kvquant.encode(jnp.asarray(v),
+                             jnp.asarray(v_scale, np.float32)[:, None, None],
+                             kb)
+    return (k_codes, v_codes, jnp.asarray(k_scale, jnp.float32),
+            jnp.asarray(v_scale, jnp.float32))

@@ -541,6 +541,7 @@ def decode_step(
     model_axis: Optional[str] = None,
     data_axis: Optional[str] = None,
     paged_impl: str = "auto",
+    kv_kinds=None,
 ) -> Tuple[ServeState, jnp.ndarray]:
     """One decode step for the whole batch.  Returns (state, logits (B, V)).
 
@@ -570,6 +571,12 @@ def decode_step(
     "gather", "jnp" oracle, or "auto" — DESIGN.md §11).  It is *static*
     configuration (the executors close over ``PagingConfig.decode_impl``),
     so it never affects the StepFn's trace signature.
+
+    ``kv_kinds`` ((L, H) int numpy, static like ``paged_impl``) is the
+    per-(layer, head) quantized-storage kind grid (DESIGN.md §15).  The
+    per-*slot* kinds the kernel needs are derived in-trace from the traced
+    plan's ``slot_head``, so one compiled StepFn serves every replan even
+    under a per-head dtype override map.
     """
     tokens = state.last_tokens if tokens is None else tokens
     B = tokens.shape[0]
@@ -588,7 +595,7 @@ def decode_step(
             attn_flat, cache = _decode_attention(pl, hn, positions, cfg, i,
                                                  cache, plan, state.decode_steps,
                                                  ccfg, active, rows, model_axis,
-                                                 data_axis, paged_impl)
+                                                 data_axis, paged_impl, kv_kinds)
             a = _slot_rms_norm(attn_flat, pl["attn_out_norm_s"],
                                cfg.n_heads * cfg.head_dim, cfg.rms_eps,
                                model_axis)
@@ -604,7 +611,7 @@ def decode_step(
             attn_flat, cache = _decode_attention(pl, hn, positions, cfg, i,
                                                  cache, plan, state.decode_steps,
                                                  ccfg, active, rows, model_axis,
-                                                 data_axis, paged_impl)
+                                                 data_axis, paged_impl, kv_kinds)
             h = h + _decode_slot_o(pl, attn_flat, cfg, model_axis)
         if cfg.is_encoder_decoder:
             hc = L.rms_norm(h, pl["ln_cross"], cfg.rms_eps)
@@ -635,7 +642,8 @@ def decode_step(
 
 def _decode_attention(pl, hn, positions, cfg, layer_idx, cache, plan,
                       decode_steps, ccfg, active=None, rows=None,
-                      model_axis=None, data_axis=None, paged_impl="auto"):
+                      model_axis=None, data_axis=None, paged_impl="auto",
+                      kv_kinds=None):
     """Slot-layout attention for one new token; appends to the cache."""
     B = hn.shape[0]
     G, Dh = cfg.q_per_kv, cfg.head_dim
@@ -682,15 +690,30 @@ def _decode_attention(pl, hn, positions, cfg, layer_idx, cache, plan,
                             + jax.lax.axis_index(data_axis))
             loc = table_l - part_idx * n_part
             table_l = jnp.where((loc > 0) & (loc < n_part), loc, 0)
+        kinds = None
+        if cache.k_scale is not None:
+            # per-slot dequant kinds from the *traced* plan: the static
+            # (L, H) kind grid indexed by slot_head, so a replan that moves
+            # heads across slots reuses the same compiled step (§15)
+            grid_l = (jnp.zeros((cfg.n_kv_heads,), jnp.int32)
+                      if kv_kinds is None
+                      else jnp.asarray(kv_kinds[layer_idx], jnp.int32))
+            kinds = jnp.take(grid_l,
+                             jnp.maximum(plan.slot_head[layer_idx], 0))
         cache = paged_append_token(cache, layer_idx, k_new.swapaxes(0, 1),
                                    v_new.swapaxes(0, 1), own, decode_steps,
                                    capacity, ring=max(1, ccfg.decode_margin),
-                                   table_layer=table_l)
+                                   table_layer=table_l, kinds=kinds)
         out = K.paged_fairkv_decode(
             q, cache.k_pool[layer_idx], cache.v_pool[layer_idx],
             cache.pos_pool[layer_idx], table_l,
             cache.lengths[layer_idx], capacity, attn_cap=cfg.attn_softcap,
-            q_pos=positions, window=window, impl=paged_impl)
+            q_pos=positions, window=window, impl=paged_impl,
+            k_scale=(None if cache.k_scale is None
+                     else cache.k_scale[layer_idx]),
+            v_scale=(None if cache.v_scale is None
+                     else cache.v_scale[layer_idx]),
+            kinds=kinds)
         return out, cache
     cache = append_token(cache, layer_idx, k_new.swapaxes(0, 1),
                          v_new.swapaxes(0, 1), own, decode_steps,

@@ -17,7 +17,8 @@ import pytest
 from repro.kernels import ops as K
 from repro.kernels.paged_fairkv_decode import paged_fairkv_decode_pallas
 from repro.kernels.ref import paged_fairkv_decode_ref
-from repro.paging.testing import make_paged_layer
+from repro.paging.kvquant import KIND_FP8, KIND_INT8, fp8_supported
+from repro.paging.testing import make_paged_layer, quantize_paged_layer
 
 from tests._hypothesis_compat import given, settings, st
 
@@ -130,6 +131,107 @@ def test_paged_kernel_rejects_short_table():
 
 
 # ---------------------------------------------------------------------------
+# quantized pools (DESIGN.md §15): kernel vs oracle vs fp32
+# ---------------------------------------------------------------------------
+
+# dequantized output vs the fp32 reference on the same values: int8 keeps
+# ~2 decimal digits per block, fp8 (e4m3) ~1; attention averaging keeps the
+# output error well under one quantization step of the inputs
+QUANT_TOL = {KIND_INT8: 0.05, KIND_FP8: 0.2}
+
+needs_fp8 = pytest.mark.skipif(not fp8_supported(),
+                               reason="jax lacks float8_e4m3fn")
+
+
+def _compare_quant(rng, S, B, G, Dh, C, bs, kinds, window=0, cap=0.0,
+                   lengths=None):
+    """(pallas-vs-ref, gather-vs-ref, quantized-ref-vs-fp32-ref) max errors
+    for one random quantized layer; ``kinds`` is the (S,) per-slot grid."""
+    kp, vp, pp, tbl, lens = make_paged_layer(rng, S, B, C, bs, Dh,
+                                             lengths=lengths)
+    kinds = jnp.asarray(np.broadcast_to(kinds, (S,)), jnp.int32)
+    kq, vq, ks, vs = quantize_paged_layer(kp, vp, tbl, kinds)
+    q = jnp.asarray(rng.normal(size=(B, S, G, Dh)), jnp.float32)
+    qpos = jnp.full((B,), C + 7, jnp.int32)
+    fp32 = paged_fairkv_decode_ref(q, kp, vp, pp, tbl, lens, C, cap,
+                                   q_pos=qpos, window=window)
+    quant_kw = dict(k_scale=ks, v_scale=vs, kinds=kinds)
+    ref = paged_fairkv_decode_ref(q, kq, vq, pp, tbl, lens, C, cap,
+                                  q_pos=qpos, window=window, **quant_kw)
+    out = paged_fairkv_decode_pallas(q, kq, vq, pp, tbl, lens, C,
+                                     attn_cap=cap, q_pos=qpos, window=window,
+                                     interpret=True, **quant_kw)
+    gat = K.paged_fairkv_decode(q, kq, vq, pp, tbl, lens, C, attn_cap=cap,
+                                q_pos=qpos, window=window, impl="gather",
+                                **quant_kw)
+
+    def err(a, b):
+        return float(jnp.abs(a - b).max())
+
+    return err(out, ref), err(gat, ref), err(ref, fp32)
+
+
+@settings(max_examples=8)
+@given(S=st.integers(2, 5), B=st.integers(1, 4), G=st.integers(1, 8),
+       C=st.integers(6, 200), bs=st.sampled_from([2, 8, 16, 32, 64]),
+       kind=st.sampled_from([KIND_INT8, KIND_FP8]), seed=st.integers(0, 10))
+def test_paged_kernel_quantized_ragged(S, B, G, C, bs, kind, seed):
+    """Quantized kernel parity over the same adversarial space as the fp32
+    sweep: ragged lengths, shuffled blocks, null rows, partial last blocks.
+    All three impls dequantize identically (tight bound vs the quantized
+    oracle) and the codec error vs fp32 stays inside the per-dtype bound."""
+    if kind == KIND_FP8 and not fp8_supported():
+        return
+    rng = np.random.default_rng(seed)
+    pallas_err, gather_err, quant_err = _compare_quant(
+        rng, S, B, G, 32, C, bs, kind)
+    assert pallas_err < 1e-5
+    assert gather_err < 1e-5
+    assert quant_err < QUANT_TOL[kind]
+
+
+@pytest.mark.parametrize("kind", [KIND_INT8,
+                                  pytest.param(KIND_FP8, marks=needs_fp8)])
+def test_paged_kernel_quantized_window_softcap(kind):
+    rng = np.random.default_rng(21)
+    pallas_err, gather_err, quant_err = _compare_quant(
+        rng, 3, 2, 4, 32, 96, 16, kind, window=40, cap=30.0)
+    assert pallas_err < 1e-5 and gather_err < 1e-5
+    assert quant_err < QUANT_TOL[kind]
+
+
+@needs_fp8
+def test_paged_kernel_quantized_mixed_kinds():
+    """int8 and fp8 slots in one grid: the per-slot kind prefetch operand
+    must select the right dequant interpretation per program."""
+    rng = np.random.default_rng(22)
+    kinds = np.arange(4) % 2  # alternating int8 / fp8
+    pallas_err, gather_err, quant_err = _compare_quant(
+        rng, 4, 3, 4, 32, 96, 16, kinds)
+    assert pallas_err < 1e-5 and gather_err < 1e-5
+    assert quant_err < QUANT_TOL[KIND_FP8]
+
+
+def test_paged_kernel_quantized_null_block_tables():
+    """All-null quantized rows still output exactly 0 — garbage codes and
+    zero scales never leak past the length mask (and fp8 NaN bit patterns
+    are flushed, not propagated, in the masked tail)."""
+    rng = np.random.default_rng(23)
+    S, B, G, Dh, C, bs = 3, 2, 4, 32, 96, 16
+    lengths = np.zeros((S, B), np.int32)
+    kp, vp, pp, tbl, lens = make_paged_layer(rng, S, B, C, bs, Dh,
+                                             lengths=lengths)
+    kinds = jnp.ones((S,), jnp.int32) if fp8_supported() \
+        else jnp.zeros((S,), jnp.int32)
+    kq, vq, ks, vs = quantize_paged_layer(kp, vp, tbl, kinds)
+    q = jnp.asarray(rng.normal(size=(B, S, G, Dh)), jnp.float32)
+    out = paged_fairkv_decode_pallas(q, kq, vq, pp, tbl, lens, C,
+                                     interpret=True, k_scale=ks, v_scale=vs,
+                                     kinds=kinds)
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
 # ops dispatch
 # ---------------------------------------------------------------------------
 
@@ -188,7 +290,7 @@ def test_paging_config_validates_decode_impl():
 # ---------------------------------------------------------------------------
 
 
-def _engine_cfg(backend, impl="auto", rows=2, T=16, gen=3):
+def _engine_cfg(backend, impl="auto", rows=2, T=16, gen=3, kv_dtype="fp32"):
     from repro.api import (CompressionConfig, EngineConfig, PagingConfig,
                            PlannerConfig, SchedulerConfig)
     return EngineConfig.smoke(
@@ -200,7 +302,8 @@ def _engine_cfg(backend, impl="auto", rows=2, T=16, gen=3):
                               batch_cap=rows),
         scheduler=SchedulerConfig(max_rows=rows, enable_replan=False),
         cache_backend=backend,
-        paging=PagingConfig(block_size=8, decode_impl=impl))
+        paging=PagingConfig(block_size=8, decode_impl=impl,
+                            kv_dtype=kv_dtype))
 
 
 def test_engine_generate_three_way_token_parity_local():
@@ -218,6 +321,30 @@ def test_engine_generate_three_way_token_parity_local():
         assert np.array_equal(base.lengths, res.lengths), impl
         # one decode trace per engine: the impl knob is static config
         assert eng.executor.decode_traces == 1, impl
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8",
+                                      pytest.param("fp8", marks=needs_fp8)])
+def test_engine_generate_quantized_impl_agreement(kv_dtype):
+    """Quantized end-to-end: all three paged decode impls see the identical
+    codes/scales, so their tokens must agree with each other; lengths match
+    the fp32 slot baseline; and the kv_dtype knob is static StepFn config —
+    exactly one decode trace per engine (compile-once per dtype)."""
+    from repro.api import Engine
+    B, T, GEN = 2, 16, 3
+    prompts = np.random.default_rng(0).integers(0, 256, (B, T))
+    slot_eng = Engine.build(_engine_cfg("slot"))
+    base = slot_eng.generate(prompts, GEN)
+    results = {}
+    for impl in ("jnp", "gather", "pallas"):
+        eng = Engine.build(_engine_cfg("paged", impl, kv_dtype=kv_dtype),
+                           params=slot_eng.params)
+        res = eng.generate(prompts, GEN)
+        assert np.array_equal(base.lengths, res.lengths), impl
+        assert eng.executor.decode_traces == 1, impl
+        results[impl] = res.tokens
+    assert np.array_equal(results["jnp"], results["gather"])
+    assert np.array_equal(results["jnp"], results["pallas"])
 
 
 # ---------------------------------------------------------------------------

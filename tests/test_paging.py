@@ -207,3 +207,115 @@ def test_unowned_rows_gather_zero_output():
         q, paged.k_pool[0], paged.v_pool[0], paged.pos_pool[0],
         paged.block_table[0], paged.lengths[0], C)
     assert float(np.abs(np.asarray(out)[:, 0]).max()) == 0.0  # slot 0 unowned
+
+
+# ---------------------------------------------------------------------------
+# quantized pools (DESIGN.md §15): slot↔paged bit-consistency + migration
+# ---------------------------------------------------------------------------
+
+
+def _paginate_quant(slot, bs, kinds):
+    """Quantized variant of `_paginate`: int8 pools + per-block scales,
+    per-slot ``kinds`` ((L, S) int32) selecting int8 vs fp8 encoding."""
+    from repro.paging.kvquant import KVQuantSpec
+    L, S, B, C, Dh = slot.k.shape
+    M = max_blocks_per_row(C, bs)
+    paged, pool = init_paged_cache(
+        L, S, B, C, Dh, PagingConfig(block_size=bs, kv_dtype="int8"),
+        dtype=slot.k.dtype, kv_quant=KVQuantSpec(base="int8"))
+    lens = np.asarray(slot.lengths)
+    table = build_table(lens, pool, bs, M, own=lens > 0)
+    paged = paginate_rows(paged, slot, jnp.arange(B, dtype=jnp.int32), table,
+                          kinds=np.asarray(kinds, np.int32))
+    return paged, pool
+
+
+def test_quantized_paged_to_slot_matches_decode_bitwise():
+    """`paged_to_slot` must dequantize through the same scale pool as the
+    decode path: slot-ref attention over the materialized values equals
+    paged-ref attention over the codes bit for bit — the invariant that
+    keeps slot↔paged migration consistent with what decode saw (§15)."""
+    rng = np.random.default_rng(11)
+    S, B, C, Dh, bs, L = 4, 3, 20, 8, 8, 2
+    slot = _random_slot_layer(rng, S, B, C, Dh, L=L)
+    # mixed kinds: alternate int8 / fp8 per slot, varied per layer
+    kinds = (np.add.outer(np.arange(L), np.arange(S)) % 2).astype(np.int32)
+    paged, _ = _paginate_quant(slot, bs, kinds)
+    assert paged.k_pool.dtype == jnp.int8 and paged.k_scale is not None
+    back = paged_to_slot(paged, C, kinds=kinds)
+    q = jnp.asarray(rng.normal(size=(B, S, 2, Dh)), jnp.float32)
+    qpos = jnp.full((B,), C + 3, jnp.int32)
+    for layer in range(L):
+        ref = fairkv_decode_ref(q, back.k[layer], back.v[layer],
+                                back.lengths[layer], k_pos=back.pos[layer],
+                                q_pos=qpos)
+        out = paged_fairkv_decode_ref(
+            q, paged.k_pool[layer], paged.v_pool[layer],
+            paged.pos_pool[layer], paged.block_table[layer],
+            paged.lengths[layer], C, q_pos=qpos,
+            k_scale=paged.k_scale[layer], v_scale=paged.v_scale[layer],
+            kinds=jnp.asarray(kinds[layer]))
+        assert np.array_equal(np.asarray(ref), np.asarray(out)), layer
+    # dequantized values approximate the originals within codec tolerance
+    lens = np.asarray(slot.lengths)
+    valid = np.arange(C)[None, None, None, :] < lens[..., None]
+    err = np.abs(np.where(valid[..., None], np.asarray(slot.k), 0)
+                 - np.asarray(back.k))
+    assert float(err.max()) < 0.35  # fp8 e4m3 worst-case block step
+
+
+def test_migrate_quantized_cache_decode_parity():
+    """Migrating a quantized cache (trial-commit through `migrate_cache`)
+    re-paginates via full precision: the committed pools decode within
+    codec tolerance of the originals — never double-quantized garbage,
+    never int8 codes reinterpreted as model values (§15)."""
+    from repro.api import (CompressionConfig, Engine, EngineConfig,
+                           PagingConfig as PC, PlannerConfig, SchedulerConfig)
+    from repro.serving.request import Request
+    cfg = EngineConfig.smoke(
+        "minitron-8b", n_shards=4, max_seq_len=64,
+        compression=CompressionConfig(policy="none", budget=32, capacity=32,
+                                      decode_margin=8, obs_window=8),
+        planner=PlannerConfig(batch_cap=2),
+        scheduler=SchedulerConfig(max_rows=2, enable_replan=False),
+        cache_backend="paged",
+        paging=PC(block_size=8, kv_dtype="int8"))
+    eng = Engine.build(cfg)
+    rng = np.random.default_rng(5)
+    reqs = [Request(req_id=i,
+                    prompt=rng.integers(1, cfg.model.vocab_size,
+                                        size=24).astype(np.int32),
+                    arrival_step=i, max_new_tokens=20) for i in range(2)]
+    # stop mid-generation: finished rows are released (blocks freed), and
+    # migrating an empty cache would make the parity check vacuous
+    eng.run_trace(reqs, max_steps=8)
+    backend = eng.scheduler.backend
+    cache = eng.scheduler.state.cache
+    assert cache.k_pool.dtype == jnp.int8
+    assert int(np.asarray(cache.lengths).max()) > 0  # live quantized rows
+    _, commit = backend.migrate_cache(cache, backend.pa, backend.pa)
+    cand = commit()
+    assert cand.k_pool.dtype == jnp.int8  # storage format survives
+    kinds = np.asarray(
+        np.take_along_axis(np.asarray(backend.kv_kinds, np.int32),
+                           np.maximum(np.asarray(backend.pa.slot_head), 0),
+                           axis=1))
+    q = jnp.asarray(rng.normal(size=(2, cache.block_table.shape[1], 2,
+                                     cfg.model.head_dim)), jnp.float32)
+    qpos = jnp.full((2,), 60, jnp.int32)
+    for layer in (0, cache.k_pool.shape[0] - 1):
+        a = paged_fairkv_decode_ref(
+            q, cache.k_pool[layer], cache.v_pool[layer],
+            cache.pos_pool[layer], cache.block_table[layer],
+            cache.lengths[layer], backend.capacity, q_pos=qpos,
+            k_scale=cache.k_scale[layer], v_scale=cache.v_scale[layer],
+            kinds=jnp.asarray(kinds[layer]))
+        b = paged_fairkv_decode_ref(
+            q, cand.k_pool[layer], cand.v_pool[layer],
+            cand.pos_pool[layer], cand.block_table[layer],
+            cand.lengths[layer], backend.capacity, q_pos=qpos,
+            k_scale=cand.k_scale[layer], v_scale=cand.v_scale[layer],
+            kinds=jnp.asarray(kinds[layer]))
+        assert np.array_equal(np.asarray(cache.lengths[layer]),
+                              np.asarray(cand.lengths[layer]))
+        assert float(jnp.abs(a - b).max()) < 0.05, layer

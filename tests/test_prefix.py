@@ -17,6 +17,7 @@ import json
 import subprocess
 import sys
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -41,7 +42,7 @@ BS = 16  # block size used by every engine-level test here
 
 
 def _cfg(enabled=False, chunk=0, budget=128, margin=8, n_blocks=256,
-         rows=3, max_seq=256, entries=256, **sched_kw):
+         rows=3, max_seq=256, entries=256, kv_dtype="fp32", **sched_kw):
     scfg = dict(max_rows=rows, enable_replan=False, collect_logits=True)
     scfg.update(sched_kw)
     return EngineConfig.smoke(
@@ -52,7 +53,8 @@ def _cfg(enabled=False, chunk=0, budget=128, margin=8, n_blocks=256,
         planner=PlannerConfig(batch_cap=rows),
         scheduler=SchedulerConfig(**scfg),
         cache_backend="paged",
-        paging=PagingConfig(block_size=BS, n_blocks=n_blocks),
+        paging=PagingConfig(block_size=BS, n_blocks=n_blocks,
+                            kv_dtype=kv_dtype),
         prefix=PrefixConfig(enabled=enabled, chunk_tokens=chunk,
                             max_entries=entries))
 
@@ -379,6 +381,69 @@ def test_cow_privatizes_ring_wrap_writes(params):
     plain.run_trace(_clone(reqs), max_steps=400)
     assert _tokens(eng) == _tokens(plain)
     assert plain.scheduler.backend.cow_copies == 0  # nothing shared there
+
+
+def test_cow_privatizes_quantized_scales(params):
+    """The ring-wrap CoW scenario above with ``kv_dtype='int8'``: a shared
+    quantized block privatized before a wrap append must copy the per-block
+    *scale* entries along with the payload (DESIGN.md §15).
+
+    Exact no-sharing parity (the fp32 oracle above) does not transfer: a
+    seeded row shares the donor's codes and scales bit-for-bit, while a
+    self-prefilled row quantizes its own block layout — same values,
+    different grain, legitimately different rounding.  Two sharing-specific
+    oracles replace it:
+
+    - the *donor* still matches a quantized no-sharing engine token-for-
+      token (its grain is self-prefilled in both) — so the privatized
+      copies it decodes through carry the right codes AND scales;
+    - the late sharer's tokens are invariant to whether the donor wrapped:
+      a second sharing run whose donor stops before wrapping (no CoW at
+      all) seeds the identical entry, so any divergence would mean the
+      wrap run's CoW let the donor corrupt the registered codes or scales.
+    """
+    def sharing_run(donor_gen):
+        cfg = _cfg(enabled=True, chunk=16, budget=32, margin=32, max_seq=128,
+                   kv_dtype="int8")
+        vocab = cfg.model.vocab_size
+        rng = np.random.default_rng(7)
+        shared = rng.integers(1, vocab, size=48).astype(np.int32)
+        sfx = [rng.integers(1, vocab, size=8).astype(np.int32)
+               for _ in range(2)]
+        reqs = [
+            Request(req_id=0, prompt=np.concatenate([shared, sfx[0]]),
+                    arrival_step=0, max_new_tokens=donor_gen),
+            Request(req_id=1, prompt=np.concatenate([shared, sfx[1]]),
+                    arrival_step=40, max_new_tokens=6),
+        ]
+        eng = Engine.build(cfg, params=params)
+        out = eng.run_trace(reqs, max_steps=400)
+        assert out["finished"] == out["total"]
+        assert reqs[1].prefix_hit_tokens == 48
+        return eng, reqs
+
+    wrap, wrap_reqs = sharing_run(donor_gen=24)  # 56 + 24 > 64: ring wraps
+    backend = wrap.scheduler.backend
+    assert backend.cow_copies > 0, "trace never exercised copy-on-write"
+    assert not backend._pending_cow
+    assert not backend._pending_scale_reset  # flushed with the copies
+    # the state really is quantized storage with live scale pools
+    cache = wrap.scheduler.state.cache
+    assert cache.k_pool.dtype == jnp.int8
+    assert cache.k_scale is not None and float(cache.k_scale.max()) > 0
+    backend.pool.check_invariants()
+
+    # donor oracle: same grain as a quantized no-sharing engine
+    plain = Engine.build(_cfg(chunk=16, budget=32, margin=32, max_seq=128,
+                              kv_dtype="int8"), params=params)
+    plain.run_trace(_clone(wrap_reqs), max_steps=400)
+    assert plain.scheduler.backend.cow_copies == 0
+    assert _tokens(wrap)[0] == _tokens(plain)[0]
+
+    # sharer oracle: identical seeded entry, donor never wraps
+    nowrap, _ = sharing_run(donor_gen=2)
+    assert nowrap.scheduler.backend.cow_copies == 0
+    assert _tokens(wrap)[1] == _tokens(nowrap)[1]
 
 
 def test_admission_discounts_shared_blocks():
