@@ -126,15 +126,15 @@ def run_capacity(enabled: bool) -> dict:
         steps = sched.step_idx
     assert all(r.is_finished for r in sched.finished), "trace did not drain"
     sched.backend.pool.check_invariants()
-    pst = eng.prefix_stats()
+    pst = eng.stats().prefix  # consolidated typed snapshot (DESIGN.md §8)
     snap = eng.metrics()
     saved = 0
     if "prefix_bytes_saved" in snap:  # peak gauge over the run is not kept;
         saved = snap["prefix_bytes_saved"]["series"][0]["value"]
     return {
         "peak_concurrent": peak, "steps": steps, "n_blocks": n_blocks,
-        "pool_blocks_per_layer": n_blocks, "hits": pst.get("hits", 0),
-        "misses": pst.get("misses", 0),
+        "pool_blocks_per_layer": n_blocks, "hits": pst.hits or 0,
+        "misses": pst.misses or 0,
         "final_bytes_saved": saved,
         "preemptions": sum(r.n_preemptions for r in sched.finished),
     }

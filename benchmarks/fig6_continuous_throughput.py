@@ -53,13 +53,12 @@ def run_one(planner: str, base_cfg: EngineConfig, params: dict) -> dict:
     out = eng.run_trace(reqs, max_steps=2000)
     out["wall_s"] = time.time() - t0
     out["pct"] = latency_percentiles(eng.finished_requests)
-    out["imbalance"] = eng.imbalance()
+    st = eng.stats()  # consolidated typed snapshot (DESIGN.md §8)
+    out["imbalance"] = st.scheduler.imbalance
     # replan counts come from the obs registry — the same counter the
     # scheduler increments — not a re-tally of replan_log
-    out["replans_accepted"] = eng.obs.metrics.counter_value(
-        "sched_replans_total", outcome="accepted")
-    out["replans_rejected"] = eng.obs.metrics.counter_value(
-        "sched_replans_total", outcome="rejected")
+    out["replans_accepted"] = st.scheduler.replans_accepted
+    out["replans_rejected"] = st.scheduler.replans_rejected
     assert out["finished"] == out["total"], out
     assert out["replans_accepted"] == out["replans"], out
     return out

@@ -139,13 +139,11 @@ def run_shards(model, params, profile, head_imp, n_shards: int) -> dict:
             "efficiency_E": float(eng.plan.efficiency(profile)),
             "makespan": float(load.max()),
             "replication_overhead": eng.plan.replication_overhead(),
-            # from the obs registry (the scheduler's own counters), not a
-            # re-tally of replan_log — replans are off here, so both
-            # outcomes reading 0 is itself part of the check
-            "replans": eng.obs.metrics.counter_value(
-                "sched_replans_total", outcome="accepted"),
-            "replans_rejected": eng.obs.metrics.counter_value(
-                "sched_replans_total", outcome="rejected"),
+            # from the consolidated stats snapshot (the scheduler's own
+            # counters), not a re-tally of replan_log — replans are off
+            # here, so both outcomes reading 0 is itself part of the check
+            "replans": eng.stats().scheduler.replans_accepted,
+            "replans_rejected": eng.stats().scheduler.replans_rejected,
         }
         assert out[arm]["replans"] == trace["replans"], trace
     out["tokens_per_step_gain"] = (out["fairkv"]["tokens_per_step"]

@@ -54,6 +54,7 @@ SUITES = {
     "fig10": "benchmarks.fig10_goodput",
     "fig11": "benchmarks.fig11_prefix_reuse",
     "fig12": "benchmarks.fig12_quantized_kv",
+    "fig13": "benchmarks.fig13_speculative",
     "table3": "benchmarks.table3_quality_proxy",
 }
 

@@ -54,11 +54,19 @@ _LAZY = {
     "Engine": "repro.api.engine:Engine",
     "GenerationResult": "repro.api.engine:GenerationResult",
     "StreamEvent": "repro.api.engine:StreamEvent",
+    # consolidated stats snapshot (DESIGN.md §8)
+    "EngineStats": "repro.api.stats:EngineStats",
+    "SchedulerStats": "repro.api.stats:SchedulerStats",
+    "PoolStats": "repro.api.stats:PoolStats",
+    "PrefixStats": "repro.api.stats:PrefixStats",
+    "PlanStats": "repro.api.stats:PlanStats",
+    "SpeculationStats": "repro.api.stats:SpeculationStats",
     # sub-configs
     "ModelConfig": "repro.configs.base:ModelConfig",
     "CompressionConfig": "repro.compression.base:CompressionConfig",
     "PlannerConfig": "repro.core.planner:PlannerConfig",
     "SchedulerConfig": "repro.serving.scheduler:SchedulerConfig",
+    "SpeculationConfig": "repro.serving.speculation:SpeculationConfig",
     "PLANNER_MODES": "repro.core.planner:PLANNER_MODES",
     # arch registry
     "get_config": "repro.configs.base:get_config",

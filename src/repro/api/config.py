@@ -28,7 +28,7 @@ from repro.api.registry import (
 )
 from repro.compression.base import CompressionConfig
 from repro.configs import get_config, get_smoke_config
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig
 from repro.core.planner import PLANNER_MODES, PlannerConfig
 from repro.exec.base import ExecutorConfig
 from repro.frontend.config import FrontendConfig
@@ -36,6 +36,7 @@ from repro.obs import ObsConfig
 from repro.paging.block_pool import PagingConfig
 from repro.prefix import PrefixConfig
 from repro.serving.scheduler import SchedulerConfig
+from repro.serving.speculation import SpeculationConfig
 
 # the one dtype-name table: validation and Engine's resolution both read it
 DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
@@ -85,6 +86,9 @@ class EngineConfig:
     # additionally needs the paged backend on a single-partition pool —
     # the scheduler degrades gracefully when a piece is missing
     prefix: PrefixConfig = field(default_factory=PrefixConfig)
+    # speculative decoding (DESIGN.md §16): draft-propose + multi-query
+    # verify on the paged executor; disabled by default (zero-cost)
+    speculation: SpeculationConfig = field(default_factory=SpeculationConfig)
 
     def __post_init__(self):
         if not isinstance(self.model, ModelConfig):
@@ -173,6 +177,27 @@ class EngineConfig:
                 f"cache_backend='paged', got {self.cache_backend!r}; "
                 "chunked prefill alone (prefix.chunk_tokens > 0, "
                 "enabled=False) works on any backend")
+        if not isinstance(self.speculation, SpeculationConfig):
+            raise TypeError(
+                f"speculation must be a SpeculationConfig, got "
+                f"{type(self.speculation).__name__}")
+        if self.speculation.enabled:
+            if self.cache_backend != "paged":
+                raise ValueError(
+                    "speculation.enabled requires cache_backend='paged' "
+                    "(provisional blocks + rollback-on-reject), got "
+                    f"{self.cache_backend!r}")
+            if (self.model.family != "dense" or self.model.attention_free
+                    or self.model.is_encoder_decoder or self.model.is_vlm):
+                raise ValueError(
+                    "speculative decoding supports dense decoder-only "
+                    f"models; got family={self.model.family!r} for "
+                    f"{self.model.name!r}")
+            if self.speculation.draft_layers > self.model.n_layers:
+                raise ValueError(
+                    f"speculation.draft_layers="
+                    f"{self.speculation.draft_layers} exceeds the model's "
+                    f"{self.model.n_layers} layers")
 
     # ---- constructors ------------------------------------------------------
 
@@ -195,3 +220,95 @@ class EngineConfig:
     def replace(self, **changes) -> "EngineConfig":
         """`dataclasses.replace` that re-runs validation."""
         return dataclasses.replace(self, **changes)
+
+    # ---- JSON round-trip ---------------------------------------------------
+
+    def to_dict(self) -> dict:
+        """JSON-serializable nested dict; `from_dict` round-trips it.
+
+        Tuples serialize as JSON lists — `from_dict` re-tuples them, and
+        every sub-config's own ``__post_init__`` re-validates on rebuild,
+        so ``EngineConfig.from_dict(json.loads(json.dumps(cfg.to_dict())))
+        == cfg`` for any constructible config."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, data: dict) -> "EngineConfig":
+        """Rebuild from a `to_dict()` / JSON-file dict.
+
+        Strict: unknown keys raise ``ValueError`` naming the offending
+        path and the valid field names for that (sub-)config — a typo'd
+        key in a config file fails loudly instead of being ignored.
+        Missing keys fall back to the field defaults (``model`` is the one
+        required section)."""
+        return _config_from_dict(cls, data, "engine")
+
+
+# nested rebuild targets for fields whose *type annotation* names a config
+# class but whose default gives no instance to sniff (e.g. the required
+# ``model`` field); default-factory fields are detected structurally
+_CONFIG_TYPES = {c.__name__: c for c in (
+    ModelConfig, MoEConfig, SSMConfig, CompressionConfig, PlannerConfig,
+    SchedulerConfig, PagingConfig, ExecutorConfig, ObsConfig,
+    FrontendConfig, PrefixConfig)}
+_CONFIG_TYPES["SpeculationConfig"] = SpeculationConfig
+
+
+def _field_default(f):
+    if f.default_factory is not dataclasses.MISSING:  # type: ignore[misc]
+        return f.default_factory()
+    if f.default is not dataclasses.MISSING:
+        return f.default
+    return None
+
+
+def _nested_type(f):
+    """The dataclass type a dict value of this field rebuilds into."""
+    proto = _field_default(f)
+    if dataclasses.is_dataclass(proto):
+        return type(proto)
+    name = f.type if isinstance(f.type, str) else getattr(
+        f.type, "__name__", None)
+    return _CONFIG_TYPES.get(name)
+
+
+def _element_type(f):
+    """For tuple-of-dataclass fields (e.g. ``FrontendConfig.classes``)."""
+    proto = _field_default(f)
+    if (isinstance(proto, tuple) and proto
+            and dataclasses.is_dataclass(proto[0])):
+        return type(proto[0])
+    return None
+
+
+def _config_from_dict(dc_cls, data, path):
+    if not isinstance(data, dict):
+        raise TypeError(
+            f"{path}: expected an object/dict for {dc_cls.__name__}, got "
+            f"{type(data).__name__}")
+    fields = dataclasses.fields(dc_cls)
+    names = [f.name for f in fields]
+    unknown = sorted(set(data) - set(names))
+    if unknown:
+        raise ValueError(
+            f"unknown key(s) {unknown} at {path!r} for {dc_cls.__name__}; "
+            f"valid keys: {names}")
+    kwargs = {}
+    for f in fields:
+        if f.name not in data:
+            continue
+        v = data[f.name]
+        sub = _nested_type(f)
+        elem = _element_type(f)
+        if sub is not None and isinstance(v, dict):
+            v = _config_from_dict(sub, v, f"{path}.{f.name}")
+        elif elem is not None and isinstance(v, (list, tuple)):
+            v = tuple(
+                _config_from_dict(elem, e, f"{path}.{f.name}[{i}]")
+                if isinstance(e, dict) else e
+                for i, e in enumerate(v))
+        elif isinstance(v, list):
+            # JSON has no tuples; frozen-config validators expect them
+            v = tuple(tuple(e) if isinstance(e, list) else e for e in v)
+        kwargs[f.name] = v
+    return dc_cls(**kwargs)

@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.api.config import DTYPES as _DTYPES
 from repro.api.config import EngineConfig
+from repro.api.stats import EngineStats, collect_stats
 from repro.cache.slot_cache import PlanArrays
 from repro.core.placement import HeadPlacement
 from repro.core.planner import PlannerConfig, build_plan
@@ -396,7 +397,8 @@ class Engine:
                 executor=self.executor,
                 head_importance=self.head_importance,
                 obs=self.obs, plan_profile=self.profile,
-                prefix_cfg=self.cfg.prefix)
+                prefix_cfg=self.cfg.prefix,
+                spec_cfg=self.cfg.speculation)
             # inherit any one-shot straggler mitigation
             self._scheduler.shard_speeds = self._shard_speeds
             if self._drain_pending:
@@ -520,13 +522,21 @@ class Engine:
 
     # ---- observability (DESIGN.md §12) -------------------------------------
 
+    def stats(self) -> EngineStats:
+        """One typed snapshot of the engine's operational state: nested
+        ``scheduler`` / ``pool`` / ``prefix`` / ``plan`` / ``speculation``
+        sections (`repro.api.stats.EngineStats`).  Always constructible —
+        sections without a live source come back with ``None`` fields and
+        an empty ``detail`` instead of raising.  Supersedes the loose
+        `memory_stats` / `prefix_stats` / `imbalance` / `replan_log`
+        accessors, which remain as thin delegates (DESIGN.md §8)."""
+        return collect_stats(self)
+
     def prefix_stats(self) -> dict:
-        """Prefix-cache census (entries, pinned, blocks held, hit/miss/
-        eviction counters — DESIGN.md §14).  Empty dict until a continuous
-        scheduler with sharing enabled exists."""
-        if self._scheduler is None:
-            return {}
-        return self._scheduler.prefix_stats()
+        """Deprecated: use ``stats().prefix`` (typed) — this returns its
+        raw ``detail`` dict (empty until a continuous scheduler with
+        sharing enabled exists)."""
+        return self.stats().prefix.detail
 
     def metrics(self) -> dict:
         """Deterministic snapshot of every metric family (counters, gauges,
@@ -554,26 +564,27 @@ class Engine:
 
     @property
     def replan_log(self) -> List[dict]:
-        return [] if self._scheduler is None else self._scheduler.replan_log
+        """Deprecated: use ``stats().scheduler.replan_log``."""
+        return self.stats().scheduler.replan_log
 
     def imbalance(self) -> float:
-        """max/mean realized per-shard KV load (continuous mode)."""
-        if self._scheduler is None:
+        """Deprecated: use ``stats().scheduler.imbalance``.  max/mean
+        realized per-shard KV load (continuous mode); raises until the
+        continuous scheduler exists (the typed field is None instead)."""
+        v = self.stats().scheduler.imbalance
+        if v is None:
             raise RuntimeError("imbalance() requires the continuous "
                                "scheduler; call submit/stream first")
-        return self._scheduler.imbalance()
+        return v
 
     def memory_stats(self) -> dict:
-        """Realized cache-memory footprint from the active backend —
-        for "paged", blocks in use vs the dense slot-cache equivalent.
-        Reports whichever mode (one-shot / continuous) ran most recently,
-        so interleaved use never returns a stale idle cache."""
-        if self._mode == "continuous" and self._scheduler is not None:
-            return self._scheduler.backend.memory_stats(self._scheduler.state)
-        if self.state is None:
-            if self._scheduler is not None:
-                return self._scheduler.backend.memory_stats(
-                    self._scheduler.state)
+        """Deprecated: use ``stats().pool`` (typed) — this returns its raw
+        ``detail`` dict.  Reports whichever mode (one-shot / continuous)
+        ran most recently, so interleaved use never returns a stale idle
+        cache; raises with no live cache (the typed section is empty
+        instead)."""
+        pool = self.stats().pool
+        if not pool.detail:
             raise RuntimeError("memory_stats() needs a live cache; call "
                                "generate/prefill or submit/stream first")
-        return self.backend.memory_stats(self.state)
+        return pool.detail

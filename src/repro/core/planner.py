@@ -278,3 +278,28 @@ def plan_kv_dtypes(
         cold = np.argsort(profile[li], kind="stable")[:n_low]
         overrides.extend((li, int(h), low_dtype) for h in cold)
     return tuple(sorted(overrides))
+
+
+def draft_plan(plan, n_layers: int):
+    """Head placement for the layer-truncated draft model (DESIGN.md §16).
+
+    Self-speculative decoding's draft is the target's first ``n_layers``
+    blocks, so its placement *rides* the target plan: the draft plan is
+    literally the leading per-layer slice of the target's — same slot grid,
+    same replica/owner rule, no separate planning pass — and every target
+    replan re-plans the draft for free (the propose step re-slices whatever
+    plan the executor holds).  Accepts the planning-time `HeadPlacement`
+    or any runtime plan container whose fields are (L, ...)-leading stacked
+    arrays (e.g. ``cache.slot_cache.PlanArrays``); returns the same type.
+    """
+    import dataclasses
+
+    if isinstance(plan, HeadPlacement):
+        if not 0 < n_layers <= plan.n_layers:
+            raise ValueError(
+                f"draft n_layers must be in [1, {plan.n_layers}], "
+                f"got {n_layers}")
+        return dataclasses.replace(plan, layers=plan.layers[:n_layers])
+    return dataclasses.replace(plan, **{
+        f.name: getattr(plan, f.name)[:n_layers]
+        for f in dataclasses.fields(plan)})

@@ -25,8 +25,13 @@ forcing, and continuous batching alike.  The decode ``state`` argument is
 donated by default (``ExecutorConfig.donate_state``) so the cache updates
 in place across the hot loop.
 
-``decode_traces`` / ``prefill_traces`` count actual (re)traces — the
-regression observable for "replans must not recompile".
+StepFns come in the named kinds of the ``STEP_KINDS`` table — prefill,
+prefill_chunk, decode, propose, verify (the last two are the speculative-
+decoding pair, DESIGN.md §16).  ``step_traces[kind]`` counts actual
+(re)traces per kind — the regression observable for "replans must not
+recompile" — and the ``stepfn_compiles_total{kind=}`` metric keys off the
+same table; the legacy ``decode_traces`` / ``prefill_traces`` /
+``prefill_chunk_traces`` attributes remain as views into it.
 """
 from __future__ import annotations
 
@@ -42,6 +47,12 @@ from repro.api.registry import get_executor
 from repro.compression.base import CompressionConfig
 from repro.configs.base import ModelConfig
 from repro.obs import NULL_OBS
+
+# the StepFn kind table: every compiled step an executor owns is one of
+# these, and everything keyed per-kind — trace counters, the
+# `stepfn_compiles_total{kind=}` / `stepfn_wall_s{kind=}` metrics, trace
+# spans — derives from this tuple rather than hand-written attribute pairs.
+STEP_KINDS = ("prefill", "prefill_chunk", "decode", "propose", "verify")
 
 
 @dataclass(frozen=True)
@@ -104,11 +115,53 @@ class Executor:
         # + compile instant events; NULL_OBS (no-op) unless the Engine
         # facade threads its live Obs through
         self.obs = obs if obs is not None else NULL_OBS
-        # actual (re)trace counts, incremented from inside the traced fns —
-        # the no-retrace regression observable (a replan must not bump them)
-        self.prefill_traces = 0
-        self.prefill_chunk_traces = 0
-        self.decode_traces = 0
+        # actual (re)trace counts per StepFn kind, incremented from inside
+        # the traced fns — the no-retrace regression observable (a replan
+        # must not bump them).  One entry per STEP_KINDS row.
+        self.step_traces = {k: 0 for k in STEP_KINDS}
+
+    # legacy per-kind trace attributes — views into the STEP_KINDS table
+    # (kept so existing zero-recompile assertions read unchanged)
+
+    @property
+    def prefill_traces(self) -> int:
+        return self.step_traces["prefill"]
+
+    @prefill_traces.setter
+    def prefill_traces(self, v: int) -> None:
+        self.step_traces["prefill"] = v
+
+    @property
+    def prefill_chunk_traces(self) -> int:
+        return self.step_traces["prefill_chunk"]
+
+    @prefill_chunk_traces.setter
+    def prefill_chunk_traces(self, v: int) -> None:
+        self.step_traces["prefill_chunk"] = v
+
+    @property
+    def decode_traces(self) -> int:
+        return self.step_traces["decode"]
+
+    @decode_traces.setter
+    def decode_traces(self, v: int) -> None:
+        self.step_traces["decode"] = v
+
+    @property
+    def propose_traces(self) -> int:
+        return self.step_traces["propose"]
+
+    @propose_traces.setter
+    def propose_traces(self, v: int) -> None:
+        self.step_traces["propose"] = v
+
+    @property
+    def verify_traces(self) -> int:
+        return self.step_traces["verify"]
+
+    @verify_traces.setter
+    def verify_traces(self, v: int) -> None:
+        self.step_traces["verify"] = v
 
     # ---- geometry ----------------------------------------------------------
 
@@ -166,6 +219,30 @@ class Executor:
         materialized before the call so every mode shares one trace."""
         raise NotImplementedError
 
+    def propose(self, sp: dict, state, pa, depths: jnp.ndarray,
+                active: Optional[jnp.ndarray] = None,
+                rows: Optional[jnp.ndarray] = None, *,
+                draft_layers: int, max_k: int) -> Tuple:
+        """Compiled speculative propose step (DESIGN.md §16) →
+        (ServeState, proposals (B, max_k)).
+
+        ``depths`` ((B,) int32) is the per-row speculation depth — a traced
+        argument, so adaptive depth changes reuse the compiled step;
+        ``draft_layers``/``max_k`` are static (one trace per pair)."""
+        raise NotImplementedError
+
+    def verify(self, sp: dict, state, pa, tokens: jnp.ndarray,
+               q_lens: jnp.ndarray, active: Optional[jnp.ndarray] = None,
+               rows: Optional[jnp.ndarray] = None, *,
+               draft_layers: int) -> Tuple:
+        """Compiled speculative verify step (DESIGN.md §16) →
+        (ServeState, g (B, Q), n_commit (B,), logits (B, Q, V)).
+
+        ``tokens`` is the fixed-width (B, max_k + 1) window [t0, p1..pk]
+        (one trace per width), ``q_lens`` ((B,) int32) the per-row valid
+        window — traced, so depth changes never recompile."""
+        raise NotImplementedError
+
     # ---- observability -----------------------------------------------------
 
     def _observe_step(self, kind: str, fn, args) -> Tuple:
@@ -181,8 +258,10 @@ class Executor:
         lost.  Collection is host-side only — nothing here runs inside the
         trace.  Callers skip this entirely when obs is disabled.
         """
-        attr = f"{kind}_traces"
-        before = getattr(self, attr)
+        if kind not in STEP_KINDS:
+            raise ValueError(
+                f"unknown StepFn kind {kind!r}; known: {list(STEP_KINDS)}")
+        before = self.step_traces[kind]
         t0 = time.perf_counter()
         out = fn(*args)
         jax.block_until_ready(out)
@@ -190,7 +269,7 @@ class Executor:
         obs = self.obs
         m = obs.metrics
         obs.trace.complete(f"stepfn_{kind}", t0, dt, executor=self.name)
-        if getattr(self, attr) > before:
+        if self.step_traces[kind] > before:
             m.counter(
                 "stepfn_compiles_total",
                 help="StepFn (re)traces; decode must stay at one per "

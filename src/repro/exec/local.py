@@ -32,6 +32,10 @@ class LocalExecutor(Executor):
         self._prefill_jit = None
         self._prefill_chunk_jit = None
         self._decode_jit = None
+        # speculative StepFns memoized per static (draft_layers, max_k) —
+        # per-row depths are traced, so adaptive depth reuses these
+        self._propose_jits = {}
+        self._verify_jits = {}
 
     # ---- StepFn construction ----------------------------------------------
 
@@ -67,6 +71,34 @@ class LocalExecutor(Executor):
             return _serve.decode_step(sp, state, cfg, pa, ccfg,
                                       tokens=tokens, active=active, rows=rows,
                                       paged_impl=impl, kv_kinds=kinds)
+
+        donate = (1,) if self.exec_cfg.donate_state else ()
+        return jax.jit(fn, donate_argnums=donate)
+
+    def _build_propose(self, draft_layers, max_k):
+        cfg, ccfg, impl = self.cfg, self.ccfg, self.paged_impl
+        kinds = self.kv_kinds
+
+        def fn(sp, state, pa, depths, active, rows):
+            self.propose_traces += 1  # runs at trace time only
+            return _serve.propose_step(sp, state, cfg, pa, ccfg, depths,
+                                       active=active, rows=rows,
+                                       paged_impl=impl, kv_kinds=kinds,
+                                       draft_layers=draft_layers, max_k=max_k)
+
+        donate = (1,) if self.exec_cfg.donate_state else ()
+        return jax.jit(fn, donate_argnums=donate)
+
+    def _build_verify(self, draft_layers):
+        cfg, ccfg, impl = self.cfg, self.ccfg, self.paged_impl
+        kinds = self.kv_kinds
+
+        def fn(sp, state, pa, tokens, q_lens, active, rows):
+            self.verify_traces += 1  # runs at trace time only
+            return _serve.verify_step(sp, state, cfg, pa, ccfg, tokens,
+                                      q_lens, active=active, rows=rows,
+                                      paged_impl=impl, kv_kinds=kinds,
+                                      draft_layers=draft_layers)
 
         donate = (1,) if self.exec_cfg.donate_state else ()
         return jax.jit(fn, donate_argnums=donate)
@@ -107,6 +139,31 @@ class LocalExecutor(Executor):
         if not self.obs.enabled:
             return self._decode_jit(*args)
         return self._observe_step("decode", self._decode_jit, args)
+
+    def propose(self, sp, state, pa, depths, active=None, rows=None, *,
+                draft_layers, max_k):
+        key = (draft_layers, max_k)
+        if key not in self._propose_jits:
+            self._propose_jits[key] = self._build_propose(draft_layers, max_k)
+        _, active, rows = self._norm_decode_args(state.last_tokens, active,
+                                                 rows)
+        args = (sp, state, pa, jnp.asarray(depths, jnp.int32), active, rows)
+        if not self.obs.enabled:
+            return self._propose_jits[key](*args)
+        return self._observe_step("propose", self._propose_jits[key], args)
+
+    def verify(self, sp, state, pa, tokens, q_lens, active=None, rows=None, *,
+               draft_layers):
+        if draft_layers not in self._verify_jits:
+            self._verify_jits[draft_layers] = self._build_verify(draft_layers)
+        tokens = jnp.asarray(tokens, jnp.int32)
+        _, active, rows = self._norm_decode_args(tokens[:, 0], active, rows)
+        args = (sp, state, pa, tokens, jnp.asarray(q_lens, jnp.int32),
+                active, rows)
+        if not self.obs.enabled:
+            return self._verify_jits[draft_layers](*args)
+        return self._observe_step("verify", self._verify_jits[draft_layers],
+                                  args)
 
     def decode_hlo(self, sp, state, pa, tokens):
         if self._decode_jit is None:

@@ -84,6 +84,8 @@ class MeshExecutor(Executor):
         self._prefill_jits = {}
         self._prefill_chunk_jits = {}
         self._decode_jits = {}
+        self._propose_jits = {}
+        self._verify_jits = {}
 
     @property
     def pool_partitions(self) -> int:
@@ -358,6 +360,104 @@ class MeshExecutor(Executor):
         if not self.obs.enabled:
             return jit(*args)
         return self._observe_step("decode", jit, args)
+
+    # ---- speculative propose / verify (DESIGN.md §16) ----------------------
+
+    def _build_propose(self, sp_specs, state_specs, draft_layers, max_k):
+        cfg, ccfg, impl = self.cfg, self.ccfg, self.paged_impl
+        ec = self.exec_cfg
+        kinds = self.kv_kinds
+
+        def inner(sp, state, pa, depths, active, rows):
+            self.propose_traces += 1  # runs at trace time only
+            return _serve.propose_step(sp, state, cfg, pa, ccfg, depths,
+                                       active=active, rows=rows,
+                                       model_axis=ec.model_axis,
+                                       data_axis=ec.data_axis,
+                                       paged_impl=impl, kv_kinds=kinds,
+                                       draft_layers=draft_layers, max_k=max_k)
+
+        d = ec.data_axis
+        from repro.kernels.ops import pallas_in_decode
+        fn = shard_map(
+            inner, mesh=self.mesh,
+            in_specs=(sp_specs, state_specs, self._pa_specs(), P(d), P(d),
+                      P(d)),
+            out_specs=(state_specs, P(d, None)),
+            check_rep=not pallas_in_decode(self.paged_impl))
+        donate = (1,) if ec.donate_state else ()
+        return jax.jit(fn, donate_argnums=donate)
+
+    def _build_verify(self, sp_specs, state_specs, draft_layers):
+        cfg, ccfg, impl = self.cfg, self.ccfg, self.paged_impl
+        ec = self.exec_cfg
+        kinds = self.kv_kinds
+
+        def inner(sp, state, pa, tokens, q_lens, active, rows):
+            self.verify_traces += 1  # runs at trace time only
+            return _serve.verify_step(sp, state, cfg, pa, ccfg, tokens,
+                                      q_lens, active=active, rows=rows,
+                                      model_axis=ec.model_axis,
+                                      data_axis=ec.data_axis,
+                                      paged_impl=impl, kv_kinds=kinds,
+                                      draft_layers=draft_layers)
+
+        d = ec.data_axis
+        from repro.kernels.ops import pallas_in_decode
+        fn = shard_map(
+            inner, mesh=self.mesh,
+            in_specs=(sp_specs, state_specs, self._pa_specs(), P(d, None),
+                      P(d), P(d), P(d)),
+            out_specs=(state_specs, P(d, None), P(d), P(d, None, None)),
+            check_rep=not pallas_in_decode(self.paged_impl))
+        donate = (1,) if ec.donate_state else ()
+        return jax.jit(fn, donate_argnums=donate)
+
+    def _check_spec_batch(self, B):
+        if B % self.data_size:
+            raise ValueError(
+                f"speculative batch {B} does not split over data="
+                f"{self.data_size}; size the batch as a multiple of the "
+                f"data-axis width")
+
+    def propose(self, sp, state, pa, depths, active=None, rows=None, *,
+                draft_layers, max_k):
+        self._check_grid(pa)
+        _, active, rows = self._norm_decode_args(state.last_tokens, active,
+                                                 rows)
+        B = int(active.shape[0])
+        self._check_spec_batch(B)
+        self._check_quant(sp)
+        sp_specs = self._sp_specs(sp)
+        key = (type(state.cache).__name__, jax.tree.structure(sp_specs),
+               draft_layers, max_k)
+        if key not in self._propose_jits:
+            self._propose_jits[key] = self._build_propose(
+                sp_specs, self._state_specs(state), draft_layers, max_k)
+        args = (sp, state, pa, jnp.asarray(depths, jnp.int32), active, rows)
+        if not self.obs.enabled:
+            return self._propose_jits[key](*args)
+        return self._observe_step("propose", self._propose_jits[key], args)
+
+    def verify(self, sp, state, pa, tokens, q_lens, active=None, rows=None, *,
+               draft_layers):
+        self._check_grid(pa)
+        tokens = jnp.asarray(tokens, jnp.int32)
+        _, active, rows = self._norm_decode_args(tokens[:, 0], active, rows)
+        B = int(tokens.shape[0])
+        self._check_spec_batch(B)
+        self._check_quant(sp)
+        sp_specs = self._sp_specs(sp)
+        key = (type(state.cache).__name__, jax.tree.structure(sp_specs),
+               draft_layers)
+        if key not in self._verify_jits:
+            self._verify_jits[key] = self._build_verify(
+                sp_specs, self._state_specs(state), draft_layers)
+        args = (sp, state, pa, tokens, jnp.asarray(q_lens, jnp.int32),
+                active, rows)
+        if not self.obs.enabled:
+            return self._verify_jits[key](*args)
+        return self._observe_step("verify", self._verify_jits[key], args)
 
     def shard_state(self, state):
         from jax.sharding import NamedSharding

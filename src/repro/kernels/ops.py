@@ -81,7 +81,8 @@ def paged_fairkv_decode(q, k_pool, v_pool, pos_pool, block_table, lengths,
                         window: int = 0, impl: str = "auto",
                         block_c: int = 128,
                         interpret: Optional[bool] = None,
-                        k_scale=None, v_scale=None, kinds=None):
+                        k_scale=None, v_scale=None, kinds=None,
+                        q_lens=None):
     """Paged decode attention (see ref.paged_fairkv_decode_ref).
 
     Same contract as ``fairkv_decode`` with (k, v, k_pos) replaced by one
@@ -94,6 +95,13 @@ def paged_fairkv_decode(q, k_pool, v_pool, pos_pool, block_table, lengths,
     quantized-pool dequant state (DESIGN.md §15); every impl applies the
     identical dequant semantics, so quantized parity tests compare real
     implementations rather than a shared helper against itself.
+
+    A 5-D ``q`` of shape (B, S, Q, G, Dh) selects the multi-query
+    speculative-verify path (DESIGN.md §16): query ``i`` of row ``b``
+    attends causally within the speculative window, ``q_lens`` ((B,) int32,
+    default all-Q) bounding the valid queries per row.  Every impl applies
+    the same per-query mask, so the verify kernel validates against the
+    same oracle chain as single-token decode.
     """
     if impl not in PAGED_DECODE_IMPLS:
         raise ValueError(
@@ -105,20 +113,20 @@ def paged_fairkv_decode(q, k_pool, v_pool, pos_pool, block_table, lengths,
         return _ref.paged_fairkv_decode_ref(
             q, k_pool, v_pool, pos_pool, block_table, lengths, capacity,
             attn_cap, q_pos=q_pos, window=window,
-            k_scale=k_scale, v_scale=v_scale, kinds=kinds)
+            k_scale=k_scale, v_scale=v_scale, kinds=kinds, q_lens=q_lens)
     if impl == "gather":
         from repro.kernels.paged_decode import paged_fairkv_decode_gather
         return paged_fairkv_decode_gather(
             q, k_pool, v_pool, pos_pool, block_table, lengths, capacity,
             attn_cap=attn_cap, q_pos=q_pos, window=window, backend="auto",
             block_c=block_c, interpret=interpret,
-            k_scale=k_scale, v_scale=v_scale, kinds=kinds)
+            k_scale=k_scale, v_scale=v_scale, kinds=kinds, q_lens=q_lens)
     from repro.kernels.paged_fairkv_decode import paged_fairkv_decode_pallas
     ipret = (not _on_tpu()) if interpret is None else interpret
     return paged_fairkv_decode_pallas(
         q, k_pool, v_pool, pos_pool, block_table, lengths, capacity,
         attn_cap=attn_cap, q_pos=q_pos, window=window, interpret=ipret,
-        k_scale=k_scale, v_scale=v_scale, kinds=kinds)
+        k_scale=k_scale, v_scale=v_scale, kinds=kinds, q_lens=q_lens)
 
 
 def snapkv_scores(q_obs, k, obs_positions, k_positions, attn_cap: float = 0.0,

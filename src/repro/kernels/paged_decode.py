@@ -29,7 +29,7 @@ from typing import Optional
 import jax.numpy as jnp
 
 from repro.kernels import ops as K
-from repro.kernels.ref import dequant_block_codes
+from repro.kernels.ref import dequant_block_codes, fairkv_decode_mq_ref
 
 
 def paged_gather_views(
@@ -67,7 +67,7 @@ def paged_gather_views(
 
 
 def paged_fairkv_decode_gather(
-    q: jnp.ndarray,  # (B, S, G, Dh)
+    q: jnp.ndarray,  # (B, S, G, Dh) or (B, S, Q, G, Dh) multi-query
     k_pool: jnp.ndarray,  # (N, bs, Dh)
     v_pool: jnp.ndarray,  # (N, bs, Dh)
     pos_pool: jnp.ndarray,  # (N, bs) int32
@@ -83,12 +83,22 @@ def paged_fairkv_decode_gather(
     k_scale: Optional[jnp.ndarray] = None,
     v_scale: Optional[jnp.ndarray] = None,
     kinds: Optional[jnp.ndarray] = None,
+    q_lens: Optional[jnp.ndarray] = None,  # (B,) valid queries (5D q only)
 ) -> jnp.ndarray:
     """Gather-based paged decode — same contract as
-    ``ops.paged_fairkv_decode`` (which dispatches here for ``impl="gather"``)."""
+    ``ops.paged_fairkv_decode`` (which dispatches here for ``impl="gather"``).
+
+    A 5-D ``q`` (speculative verify) attends the gathered views through the
+    multi-query oracle math — the gather's distinguishing work is the
+    block→contiguous materialization, which is query-count-independent.
+    """
     k, v, k_pos = paged_gather_views(k_pool, v_pool, pos_pool, block_table,
                                      capacity, k_scale=k_scale,
                                      v_scale=v_scale, kinds=kinds)
+    if q.ndim == 5:
+        return fairkv_decode_mq_ref(q, k, v, lengths, attn_cap=attn_cap,
+                                    k_pos=k_pos, q_pos=q_pos, q_lens=q_lens,
+                                    window=window)
     return K.fairkv_decode(q, k, v, lengths, attn_cap=attn_cap, k_pos=k_pos,
                            q_pos=q_pos, window=window, backend=backend,
                            block_c=block_c, interpret=interpret)

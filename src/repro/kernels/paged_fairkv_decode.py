@@ -152,8 +152,179 @@ def _kernel(
         o_ref[0, 0] = out.astype(o_ref.dtype)
 
 
+def _mq_kernel(
+    *refs,
+    bs: int,
+    n_blocks: int,
+    n_q: int,
+    group: int,
+    scale: float,
+    attn_cap: float,
+    window: int,
+    quantized: bool,
+):
+    """Multi-query (speculative-verify) variant: one program attends the
+    full (Q, G) query block of one (slot, row) over one pool block.  The
+    query axis folds into the sublane dim — scores and scratch are
+    ``(Q·G, ·)`` — and the causal mask within the speculative window is a
+    per-query length limit: query ``i`` of a row with ``qn`` valid queries
+    sees the first ``len − (qn − 1 − i)`` entries (own token included,
+    later speculative tokens excluded)."""
+    if quantized:
+        (table_ref, lengths_ref, q_pos_ref, q_lens_ref, kinds_ref,
+         q_ref, k_ref, v_ref, kpos_ref, ksc_ref, vsc_ref,
+         o_ref, acc_ref, m_ref, l_ref) = refs
+    else:
+        (table_ref, lengths_ref, q_pos_ref, q_lens_ref,
+         q_ref, k_ref, v_ref, kpos_ref,
+         o_ref, acc_ref, m_ref, l_ref) = refs
+    s, b, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    ln = lengths_ref[s, b]
+    n_valid = (ln + bs - 1) // bs
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(j < n_valid)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32).reshape(n_q * group, -1)
+        if quantized:
+            kind = kinds_ref[s]
+            k = _dequant(k_ref[0], ksc_ref[0, 0], kind)  # (bs, Dh)
+        else:
+            k = k_ref[0].astype(jnp.float32)  # (bs, Dh)
+        scores = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (Q·G, bs)
+        if attn_cap > 0:
+            scores = attn_cap * jnp.tanh(scores / attn_cap)
+        offs = j * bs + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+        qi = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0) // group
+        qn = q_lens_ref[b]
+        # per-query causal limit; garbage lanes (qi >= qn) clamp to ln
+        limit = jnp.minimum(ln - (qn - 1 - qi), ln)
+        valid = offs < limit
+        if window > 0:
+            kp = kpos_ref[0]  # (bs,) int32 absolute entry positions
+            qp = q_pos_ref[b] + qi  # query i sits at q_pos + i
+            valid &= kp[None, :] > (qp - window)
+        scores = jnp.where(valid, scores, NEG_INF)
+        m_prev = m_ref[...]  # (Q·G, 1)
+        m_new = jnp.maximum(m_prev, scores.max(axis=1, keepdims=True))
+        p = jnp.where(valid, jnp.exp(scores - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        m_ref[...] = m_new
+        if quantized:
+            v = _dequant(v_ref[0], vsc_ref[0, 0], kinds_ref[s])  # (bs, Dh)
+        else:
+            v = v_ref[0].astype(jnp.float32)  # (bs, Dh)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + pv
+
+    @pl.when(j == n_blocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        out = acc_ref[...] / jnp.where(l > 0, l, 1.0)
+        out = jnp.where(l > 0, out, 0.0)
+        o_ref[0, 0] = out.reshape(n_q, group, -1).astype(o_ref.dtype)
+
+
+def _paged_decode_pallas_mq(
+    q, k_pool, v_pool, pos_pool, block_table, lengths, capacity,
+    attn_cap, q_pos, q_lens, window, interpret, k_scale, v_scale, kinds,
+):
+    """Multi-query pallas_call assembly — same grid/index maps as the
+    single-query path with ``q_lens`` riding as an extra scalar-prefetch
+    operand and (Q, G)-blocked query/output BlockSpecs."""
+    B, S, Q, G, Dh = q.shape
+    N, bs, _ = k_pool.shape
+    M = block_table.shape[2]
+    if M * bs < capacity:
+        raise ValueError(
+            f"block table spans {M}x{bs} tokens < capacity {capacity}")
+    table = jnp.asarray(block_table, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    if q_pos is None:
+        q_pos = jnp.zeros((B,), jnp.int32)
+    if q_lens is None:
+        q_lens = jnp.full((B,), Q, jnp.int32)
+    q_lens = jnp.asarray(q_lens, jnp.int32)
+    quantized = k_scale is not None
+
+    def q_map(s, b, j, tbl, lens, *rest):
+        return (b, s, 0, 0, 0)
+
+    def block_id(s, b, j, tbl, lens):
+        ln = lens[s, b]
+        last_valid = jnp.maximum((ln + bs - 1) // bs - 1, 0)
+        jj = jnp.minimum(j, last_valid)
+        return jnp.maximum(tbl[s, b, jj], 0)
+
+    def kv_map(s, b, j, tbl, lens, *rest):
+        return (block_id(s, b, j, tbl, lens), 0, 0)
+
+    def kpos_map(s, b, j, tbl, lens, *rest):
+        return (block_id(s, b, j, tbl, lens), 0)
+
+    def scale_map(s, b, j, tbl, lens, *rest):
+        return (block_id(s, b, j, tbl, lens), 0)
+
+    def o_map(s, b, j, tbl, lens, *rest):
+        return (b, s, 0, 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, Q, G, Dh), q_map),
+        pl.BlockSpec((1, bs, Dh), kv_map),
+        pl.BlockSpec((1, bs, Dh), kv_map),
+        pl.BlockSpec((1, bs), kpos_map),
+    ]
+    num_prefetch = 4
+    args = [table, lengths, q_pos, q_lens, q, k_pool, v_pool, pos_pool]
+    if quantized:
+        kind = (jnp.zeros((S,), jnp.int32) if kinds is None
+                else jnp.asarray(kinds, jnp.int32))
+        num_prefetch = 5
+        args = [table, lengths, q_pos, q_lens, kind, q, k_pool, v_pool,
+                pos_pool,
+                jnp.asarray(k_scale, jnp.float32).reshape(N, 1),
+                jnp.asarray(v_scale, jnp.float32).reshape(N, 1)]
+        in_specs = in_specs + [
+            pl.BlockSpec((1, 1), scale_map),
+            pl.BlockSpec((1, 1), scale_map),
+        ]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=num_prefetch,
+        grid=(S, B, M),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, Q, G, Dh), o_map),
+        scratch_shapes=[
+            pltpu.VMEM((Q * G, Dh), jnp.float32),
+            pltpu.VMEM((Q * G, 1), jnp.float32),
+            pltpu.VMEM((Q * G, 1), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _mq_kernel, bs=bs, n_blocks=M, n_q=Q, group=G,
+        scale=1.0 / math.sqrt(Dh), attn_cap=attn_cap, window=window,
+        quantized=quantized)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, S, Q, G, Dh), q.dtype),
+        interpret=interpret,
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(*args)
+
+
 def paged_fairkv_decode_pallas(
-    q: jnp.ndarray,  # (B, S, G, Dh)
+    q: jnp.ndarray,  # (B, S, G, Dh); (B, S, Q, G, Dh) = multi-query verify
     k_pool: jnp.ndarray,  # (N, bs, Dh) — one layer's key pool
     v_pool: jnp.ndarray,  # (N, bs, Dh)
     pos_pool: jnp.ndarray,  # (N, bs) int32
@@ -167,9 +338,20 @@ def paged_fairkv_decode_pallas(
     k_scale: Optional[jnp.ndarray] = None,  # (N,) fp32 per-block scales
     v_scale: Optional[jnp.ndarray] = None,  # (N,)
     kinds: Optional[jnp.ndarray] = None,  # (S,) int32 per-slot kind codes
+    q_lens: Optional[jnp.ndarray] = None,  # (B,) valid queries (5D q only)
 ) -> jnp.ndarray:
     """Decode attention over one paged layer — same contract as
-    ``ref.paged_fairkv_decode_ref``, consuming pools + table directly."""
+    ``ref.paged_fairkv_decode_ref``, consuming pools + table directly.
+
+    A 5-D ``q`` selects the multi-query speculative-verify path
+    (`_mq_kernel`); the 4-D single-query path below is byte-identical to
+    its pre-speculation form, so single-token decode traces are unchanged.
+    """
+    if q.ndim == 5:
+        return _paged_decode_pallas_mq(
+            q, k_pool, v_pool, pos_pool, block_table, lengths, capacity,
+            attn_cap, q_pos, q_lens, window, interpret, k_scale, v_scale,
+            kinds)
     B, S, G, Dh = q.shape
     N, bs, _ = k_pool.shape
     M = block_table.shape[2]

@@ -71,8 +71,59 @@ def fairkv_decode_ref(
     return out.astype(q.dtype)
 
 
+def fairkv_decode_mq_ref(
+    q: jnp.ndarray,  # (B, S, Q, G, Dh) — Q query positions per row per slot
+    k: jnp.ndarray,  # (S, B, C, Dh) slot-layout cache keys (post-RoPE)
+    v: jnp.ndarray,  # (S, B, C, Dh)
+    lengths: jnp.ndarray,  # (S, B) int32 — retained tokens AFTER the appends
+    attn_cap: float = 0.0,
+    k_pos: Optional[jnp.ndarray] = None,  # (S, B, C) absolute entry positions
+    q_pos: Optional[jnp.ndarray] = None,  # (B,) position of query index 0
+    q_lens: Optional[jnp.ndarray] = None,  # (B,) valid queries per row (<= Q)
+    window: int = 0,
+) -> jnp.ndarray:
+    """Multi-query decode attention — the speculative-verify oracle.
+
+    Query index ``i`` of row ``b`` sits at absolute position ``q_pos[b]+i``
+    and attends causally *within the speculative window*: with
+    ``qn = q_lens[b]`` valid queries and ``lengths`` counting the cache
+    after all ``qn`` appends, query ``i`` sees the first
+    ``lengths - (qn - 1 - i)`` entries (its own token included, later
+    speculative tokens excluded).  Query indices at or past ``qn`` are
+    garbage lanes (the scheduler masks them downstream); they are clamped
+    to the full length so they still compute finite values.  With Q == 1
+    and ``q_lens == 1`` this is exactly `fairkv_decode_ref`.
+    Returns (B, S, Q, G, Dh).
+    """
+    B, S, Q, G, Dh = q.shape
+    C = k.shape[2]
+    if q_lens is None:
+        q_lens = jnp.full((B,), Q, jnp.int32)
+    scores = jnp.einsum("bsqgd,sbcd->bsqgc", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(Dh)
+    if attn_cap > 0:
+        scores = attn_cap * jnp.tanh(scores / attn_cap)
+    ln = lengths.transpose(1, 0)  # (B, S)
+    qi = jnp.arange(Q)[None, None, :]  # (1, 1, Q)
+    limit = ln[:, :, None] - (q_lens[:, None, None] - 1 - qi)
+    limit = jnp.minimum(limit, ln[:, :, None])  # (B, S, Q)
+    valid = jnp.arange(C)[None, None, None, :] < limit[..., None]  # (B,S,Q,C)
+    if window > 0:
+        assert k_pos is not None and q_pos is not None
+        qp = q_pos[:, None, None] + qi  # (B, 1, Q)
+        in_win = (k_pos.transpose(1, 0, 2)[:, :, None, :]
+                  > (qp[..., None] - window))
+        valid &= in_win
+    scores = jnp.where(valid[:, :, :, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    nonempty = valid.any(axis=-1)[:, :, :, None, None]
+    probs = jnp.where(nonempty, probs, 0.0)
+    out = jnp.einsum("bsqgc,sbcd->bsqgd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def paged_fairkv_decode_ref(
-    q: jnp.ndarray,  # (B, S, G, Dh)
+    q: jnp.ndarray,  # (B, S, G, Dh) or (B, S, Q, G, Dh) multi-query
     k_pool: jnp.ndarray,  # (N, bs, Dh) — one layer's pools
     v_pool: jnp.ndarray,  # (N, bs, Dh)
     pos_pool: jnp.ndarray,  # (N, bs) int32
@@ -85,6 +136,7 @@ def paged_fairkv_decode_ref(
     k_scale: Optional[jnp.ndarray] = None,  # (N,) fp32 per-block scales
     v_scale: Optional[jnp.ndarray] = None,  # (N,)
     kinds: Optional[jnp.ndarray] = None,  # (S,) int32 per-slot kind codes
+    q_lens: Optional[jnp.ndarray] = None,  # (B,) valid queries (5D q only)
 ) -> jnp.ndarray:
     """Oracle for the paged decode path (`kernels.paged_decode`).
 
@@ -94,7 +146,8 @@ def paged_fairkv_decode_ref(
     paged path's semantics are *defined* as slot-path semantics over the
     gathered view.  Quantized pools (``k_scale is not None``) dequantize
     the gathered blocks first (`dequant_block_codes`) — all-int8 kinds
-    assumed when ``kinds`` is omitted.
+    assumed when ``kinds`` is omitted.  A 5-D ``q`` selects the multi-query
+    (speculative-verify) semantics of `fairkv_decode_mq_ref`.
     """
     ids = jnp.maximum(block_table, 0)
     S, B, M = ids.shape
@@ -110,6 +163,9 @@ def paged_fairkv_decode_ref(
     k = k.reshape(S, B, M * bs, Dh)[:, :, :capacity]
     v = v.reshape(S, B, M * bs, Dh)[:, :, :capacity]
     pos = pos_pool[ids].reshape(S, B, M * bs)[:, :, :capacity]
+    if q.ndim == 5:
+        return fairkv_decode_mq_ref(q, k, v, lengths, attn_cap, k_pos=pos,
+                                    q_pos=q_pos, q_lens=q_lens, window=window)
     return fairkv_decode_ref(q, k, v, lengths, attn_cap, k_pos=pos,
                              q_pos=q_pos, window=window)
 

@@ -34,6 +34,8 @@ including plugins.
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import sys
 
 import numpy as np
 
@@ -47,6 +49,7 @@ from repro.api import (
     PlannerConfig,
     PrefixConfig,
     SchedulerConfig,
+    SpeculationConfig,
     latency_percentiles,
     list_cache_backends,
     list_engines,
@@ -61,6 +64,10 @@ from repro.training.data import SyntheticLM
 def _engine_config(args, max_seq_len: int, batch_cap: int,
                    scheduler: SchedulerConfig = SchedulerConfig()
                    ) -> EngineConfig:
+    if getattr(args, "config", ""):
+        return _engine_config_from_file(args, max_seq_len, batch_cap,
+                                        scheduler)
+    speculate = getattr(args, "speculate", 0)
     # attention-free archs get a trivial single-shard plan inside
     # Engine.build, so n_shards/planner pass through unconditionally
     return EngineConfig.for_arch(
@@ -74,13 +81,15 @@ def _engine_config(args, max_seq_len: int, batch_cap: int,
         planner=PlannerConfig(mode=args.planner, engine=args.engine,
                               extra_copies=args.copies, batch_cap=batch_cap),
         scheduler=scheduler,
-        # --prefix-cache needs block refcounts and --kv-dtype needs block
-        # storage, which only the paged backend has; promote slot (the
-        # default) rather than erroring on the common invocation — any
-        # other backend choice still errors through EngineConfig validation
+        # --prefix-cache needs block refcounts, --kv-dtype needs block
+        # storage, and --speculate needs provisional-block rollback — all
+        # paged-backend features; promote slot (the default) rather than
+        # erroring on the common invocation — any other backend choice
+        # still errors through EngineConfig validation
         cache_backend=("paged"
                        if ((getattr(args, "prefix_cache", False)
-                            or getattr(args, "kv_dtype", "fp32") != "fp32")
+                            or getattr(args, "kv_dtype", "fp32") != "fp32"
+                            or speculate > 0)
                            and args.cache_backend == "slot")
                        else args.cache_backend),
         paging=PagingConfig(block_size=args.block_size,
@@ -95,9 +104,73 @@ def _engine_config(args, max_seq_len: int, batch_cap: int,
                           or (32 if getattr(args, "prefix_cache", False)
                               else 0)),
             max_entries=getattr(args, "prefix_entries", 256)),
+        speculation=SpeculationConfig(
+            enabled=speculate > 0, max_k=max(1, speculate),
+            draft_layers=getattr(args, "draft_layers", 0)),
         executor=args.executor,
         obs=ObsConfig(enabled=not args.no_obs,
                       print_every=args.obs_print_every))
+
+
+# explicit CLI flag -> EngineConfig field path, for --config overrides.
+# Only flags that map 1:1 onto config fields appear here; trace-shape flags
+# (--gen, --rows, ...) keep driving the workload, not the config.
+_CLI_FIELD_MAP = {
+    "shards": ("n_shards",),
+    "policy": ("compression", "policy"),
+    "budget": ("compression", "budget"),
+    "planner": ("planner", "mode"),
+    "engine": ("planner", "engine"),
+    "copies": ("planner", "extra_copies"),
+    "cache_backend": ("cache_backend",),
+    "block_size": ("paging", "block_size"),
+    "pool_blocks": ("paging", "n_blocks"),
+    "paged_impl": ("paging", "decode_impl"),
+    "kv_dtype": ("paging", "kv_dtype"),
+    "pool_hbm_bytes": ("paging", "pool_hbm_bytes"),
+    "executor": ("executor",),
+    "draft_layers": ("speculation", "draft_layers"),
+}
+
+
+def _set_path(cfg: EngineConfig, path, value) -> EngineConfig:
+    if len(path) == 1:
+        return cfg.replace(**{path[0]: value})
+    sub = dataclasses.replace(getattr(cfg, path[0]), **{path[1]: value})
+    return cfg.replace(**{path[0]: sub})
+
+
+def _engine_config_from_file(args, max_seq_len: int, batch_cap: int,
+                             scheduler: SchedulerConfig) -> EngineConfig:
+    """``--config cfg.json``: the file is the base `EngineConfig`
+    (`EngineConfig.from_dict`, strict about unknown keys); flags the user
+    *explicitly typed* override the file, flag defaults do not.  The
+    trace-shape-derived fields (``max_seq_len``, ``planner.batch_cap``,
+    scheduler rows) are raised to what the requested workload needs so a
+    config written for one trace still runs a larger one."""
+    import json
+
+    with open(args.config) as f:
+        cfg = EngineConfig.from_dict(json.load(f))
+    explicit = getattr(args, "_explicit", set())
+    for dest, path in _CLI_FIELD_MAP.items():
+        if dest in explicit:
+            cfg = _set_path(cfg, path, getattr(args, dest))
+    if "speculate" in explicit:
+        cfg = cfg.replace(speculation=dataclasses.replace(
+            cfg.speculation, enabled=args.speculate > 0,
+            max_k=max(1, args.speculate)))
+    if cfg.speculation.enabled and cfg.cache_backend == "slot":
+        cfg = cfg.replace(cache_backend="paged")
+    # workload-derived floors (never shrink what the file asked for)
+    cfg = cfg.replace(max_seq_len=max(cfg.max_seq_len, max_seq_len))
+    if cfg.planner.batch_cap is None or cfg.planner.batch_cap < batch_cap:
+        cfg = cfg.replace(planner=dataclasses.replace(
+            cfg.planner, batch_cap=batch_cap))
+    if scheduler.max_rows > cfg.scheduler.max_rows:
+        cfg = cfg.replace(scheduler=dataclasses.replace(
+            cfg.scheduler, max_rows=scheduler.max_rows))
+    return cfg
 
 
 def _build_engine(args, ecfg: EngineConfig) -> Engine:
@@ -241,17 +314,24 @@ def run_continuous(args) -> None:
           f"{fmt('p99_itl_s', 1e3, ' ms')}")
     print(f"mid-stream admissions: {out['mid_stream_admissions']} | "
           f"replans: {out['replans']} | preemptions: {out['preemptions']}")
-    mem = out["memory"]
-    if mem.get("backend") == "paged":
-        print(f"paged cache: {mem['blocks_in_use']}/{mem['blocks_total']} "
-              f"blocks ({mem['cache_bytes']} B) vs slot-equivalent "
-              f"{mem['slot_equivalent_bytes']} B")
-    pst = eng.prefix_stats()
-    if pst:
-        print(f"prefix cache: {pst['hits']} hits / {pst['misses']} misses | "
-              f"{pst['entries']} entries holding {pst['blocks_held']} "
-              f"blocks | {pst['evictions']} evictions")
-    for ev in out["replan_log"]:
+    st = eng.stats()  # one typed snapshot (DESIGN.md §8)
+    if st.pool.backend == "paged":
+        print(f"paged cache: {st.pool.blocks_in_use}/{st.pool.blocks_total} "
+              f"blocks ({st.pool.cache_bytes} B) vs slot-equivalent "
+              f"{st.pool.slot_equivalent_bytes} B")
+    if st.prefix.enabled:
+        print(f"prefix cache: {st.prefix.hits} hits / {st.prefix.misses} "
+              f"misses | {st.prefix.entries} entries holding "
+              f"{st.prefix.blocks_held} blocks | {st.prefix.evictions} "
+              f"evictions")
+    if st.speculation.enabled:
+        acc = ("n/a" if st.speculation.acceptance is None
+               else f"{st.speculation.acceptance:.2f}")
+        print(f"speculation: {st.speculation.accepted}/"
+              f"{st.speculation.proposed} draft tokens accepted "
+              f"(acceptance {acc}, max_k {st.speculation.max_k}, "
+              f"draft layers {st.speculation.draft_layers or 'all'})")
+    for ev in st.scheduler.replan_log:
         tag = "accepted" if ev["accepted"] else "rejected"
         print(f"  replan @ step {ev['step']} ({tag}): imbalance "
               f"{ev['imbalance_before']:.3f} -> {ev['imbalance_after']:.3f}")
@@ -335,11 +415,11 @@ def run_oneshot(args) -> None:
               f"{res.efficiency:.3f} ({args.planner})")
     print(f"decode  {np.median(res.step_s) * 1e3:7.1f} ms/step (median of "
           f"{args.gen}; first {res.step_s[0] * 1e3:.0f} ms incl. compile)")
-    mem = eng.memory_stats()
-    if mem.get("backend") == "paged":
-        print(f"paged cache: {mem['cache_bytes']} B in "
-              f"{mem['blocks_in_use']} blocks vs slot-equivalent "
-              f"{mem['slot_equivalent_bytes']} B")
+    pool = eng.stats().pool
+    if pool.backend == "paged":
+        print(f"paged cache: {pool.cache_bytes} B in "
+              f"{pool.blocks_in_use} blocks vs slot-equivalent "
+              f"{pool.slot_equivalent_bytes} B")
     _collective_audit(eng)
     _export_obs(eng, args)
     for b in range(min(args.batch, 2)):
@@ -348,7 +428,14 @@ def run_oneshot(args) -> None:
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default="",
+                    help="architecture id (required unless --config "
+                         "provides the model)")
+    ap.add_argument("--config", default="",
+                    help="JSON EngineConfig file (EngineConfig.to_dict "
+                         "format) used as the base config; explicitly "
+                         "typed CLI flags override file values, flag "
+                         "defaults do not")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--prompt-len", type=int, default=96)
     ap.add_argument("--batch", type=int, default=2)
@@ -388,6 +475,17 @@ def main() -> None:
                          "HBM byte budget instead of --pool-blocks "
                          "(bytes-aware admission: int8 pools hold ~4x the "
                          "blocks of fp32 at the same budget)")
+    # --- speculative decoding (DESIGN.md §16) --------------------------------
+    ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                    help="speculative decoding: propose up to K draft "
+                         "tokens per tick and verify them in one "
+                         "multi-query pass (0 = off; implies "
+                         "--cache-backend paged)")
+    ap.add_argument("--draft-layers", type=int, default=0,
+                    help="early-exit depth of the self-speculative draft "
+                         "(first N layers + the target's unembedding; "
+                         "0 = all layers, acceptance 1.0 — a correctness "
+                         "baseline, not a speedup)")
     # --- shared-prefix reuse + chunked prefill (DESIGN.md §14) ---------------
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="split prompt prefill into chunks of this many "
@@ -466,6 +564,16 @@ def main() -> None:
                     help="write Chrome trace-event JSON here on exit "
                          "(Perfetto-loadable)")
     args = ap.parse_args()
+    if not args.arch and not args.config:
+        ap.error("one of --arch or --config is required")
+    # record which flags the user explicitly typed (vs argparse defaults):
+    # --config merging applies only the former.  Matches both "--flag value"
+    # and "--flag=value" spellings.
+    argv = sys.argv[1:]
+    args._explicit = {
+        a.dest for a in ap._actions
+        if any(tok == opt or tok.startswith(opt + "=")
+               for opt in a.option_strings for tok in argv)}
 
     if args.http:
         run_http(args)

@@ -132,6 +132,28 @@ def param_count(params) -> int:
     return sum(x.size for x in jax.tree.leaves(params))
 
 
+def draft_view(params: dict, n_layers: int) -> dict:
+    """Layer-truncated draft model for self-speculative decoding.
+
+    The draft is an *early exit* of the target: its first ``n_layers``
+    transformer blocks followed by the target's own final norm and
+    unembedding.  The returned dict shares every array with ``params`` —
+    no copies, no extra memory — so it works on original-layout and
+    slotified (serve-layout) params alike, and a replan that re-slotifies
+    the target automatically refreshes the draft (the propose step
+    re-slices).  Because the draft runs the target's leading layers over
+    the target's own cache, its KV writes are *real* target KV for those
+    layers — verify fills only the remaining layers (DESIGN.md §16).
+    """
+    if not 0 < n_layers <= len(params["layers"]):
+        raise ValueError(
+            f"draft n_layers must be in [1, {len(params['layers'])}], "
+            f"got {n_layers}")
+    out = dict(params)
+    out["layers"] = list(params["layers"])[:n_layers]
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Blocks (shared by train / prefill)
 # ---------------------------------------------------------------------------

@@ -250,25 +250,35 @@ class PagedBackend(CacheBackend):
         cache = release_rows(state.cache, jnp.asarray(rows_np, jnp.int32))
         return _serve.reset_state_rows(state, rows, cache=cache)
 
-    def prepare_decode(self, state, active):
-        """Allocate the block backing each active row's next append.
+    def prepare_decode(self, state, active, n_tokens: int = 1):
+        """Allocate the blocks backing each active row's next appends.
 
         The next write index is ``lengths`` while a row is below capacity
         (the recency ring past that only revisits already-allocated
-        blocks), so an owned (layer, slot, row) needs ``len // bs + 1``
-        blocks before the tick.  Raises ``PoolExhausted`` when a layer's
-        free list runs dry — the scheduler's preemption signal.
+        blocks); ``n_tokens`` consecutive appends need the blocks through
+        ``(min(len + n_tokens, capacity) - 1) // bs``, so an owned
+        (layer, slot, row) may take several *provisional* blocks before
+        the tick (speculative decoding, DESIGN.md §16 — rejected windows
+        hand them back through `trim_rows`).  Raises ``PoolExhausted``
+        when a layer's free list runs dry — the scheduler's preemption
+        signal.
 
         Copy-on-write (DESIGN.md §14): before allocating growth, any owned
         next write that would land in a *shared* (refcount > 1) block —
         only the recency ring can wrap into the shared prefix region —
         gets a private block first: alloc in the same partition, decref
-        the shared id, queue a device content copy.  A defensive recheck
-        after allocation turns any surviving shared-write into a hard
-        error instead of silent corruption.
+        the shared id, queue a device content copy.  Checking the *first*
+        write block suffices for any ``n_tokens``: later writes of the
+        window land in blocks this call allocates fresh (refcount 1), and
+        at-capacity rows (the only ring-wrap case) are clamped to a
+        single-token window by the scheduler.  A defensive recheck after
+        allocation turns any surviving shared-write into a hard error
+        instead of silent corruption.
         """
         if state.cache is None:
             return state
+        if n_tokens < 1:
+            raise ValueError(f"n_tokens must be >= 1, got {n_tokens}")
         cache = state.cache
         B = cache.positions.shape[0]
         rows = np.arange(B) if active is None else np.asarray(list(active))
@@ -282,7 +292,8 @@ class PagedBackend(CacheBackend):
             dirty = self._cow_next_writes(rows, own, blk)
         have = (self.table[:, :, rows, :] > 0).sum(axis=-1)  # (L, S, R)
         growing = own & (lens < self.capacity)
-        need = np.where(growing, lens // self.block_size + 1, have)
+        end = np.minimum(lens + n_tokens, self.capacity)  # exclusive
+        need = np.where(growing, (end - 1) // self.block_size + 1, have)
         missing = need - have
         if missing.max(initial=0) > 0:
             dirty = True
@@ -334,6 +345,37 @@ class PagedBackend(CacheBackend):
         cache = self._apply_pending_cow(cache)
         return dataclasses.replace(state, cache=dataclasses.replace(
             cache, block_table=jnp.asarray(self.table)))
+
+    def trim_rows(self, state, rows):
+        """Release provisional blocks no longer covered by ``lengths``.
+
+        Speculative verify rolls rejected window entries back *in-trace*
+        (device ``lengths`` drop to the committed run, DESIGN.md §16); the
+        host mirror still maps the blocks that backed them.  For the given
+        rows, decref every mapped block past ``ceil(len / bs)`` — blocks
+        taken by `prepare_decode(n_tokens=...)` for writes that were
+        rejected or never made — and zero its mirror entries.  Refcounts
+        make this safe under sharing: a block another row still references
+        merely drops a reference.  Returns the state with the updated
+        device table (identity when nothing was trimmed).
+        """
+        if state.cache is None:
+            return state
+        rows_np = np.asarray(list(rows), np.int64)
+        if rows_np.size == 0:
+            return state
+        lens = np.asarray(state.cache.lengths)[:, :, rows_np]  # (L, S, R)
+        keep = -(-lens // self.block_size)  # ceil: blocks still covered
+        tbl = self.table[:, :, rows_np, :]  # (L, S, R, M)
+        M = tbl.shape[-1]
+        past = np.arange(M)[None, None, None, :] >= keep[..., None]
+        drop = np.where(past, tbl, 0)
+        if drop.max(initial=0) == 0:
+            return state
+        self.pool.free_table(drop.reshape(self.table.shape[0], -1))
+        self.table[:, :, rows_np, :] = np.where(past, 0, tbl)
+        return dataclasses.replace(state, cache=dataclasses.replace(
+            state.cache, block_table=jnp.asarray(self.table)))
 
     def _next_write_blocks(self, state, lens: np.ndarray) -> np.ndarray:
         """(L, S, R) block index of each pair's next append — the host

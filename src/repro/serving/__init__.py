@@ -29,3 +29,4 @@ from repro.serving.scheduler import (  # noqa: F401
     Scheduler,
     SchedulerConfig,
 )
+from repro.serving.speculation import SpeculationConfig  # noqa: F401

@@ -98,9 +98,11 @@ class CacheBackend:
         """Retire rows: clear state, reclaim backing memory."""
         raise NotImplementedError
 
-    def prepare_decode(self, state, active: Optional[Sequence[int]]):
-        """Host hook before a decode tick: guarantee the next append of
-        every active row has backing storage.  ``None`` = all rows."""
+    def prepare_decode(self, state, active: Optional[Sequence[int]],
+                       n_tokens: int = 1):
+        """Host hook before a decode tick: guarantee the next ``n_tokens``
+        appends of every active row have backing storage (speculative
+        ticks write up to k+1 tokens).  ``None`` = all rows."""
         return state
 
     def migrate_cache(self, cache, old_pa: PlanArrays, new_pa: PlanArrays,

@@ -785,6 +785,277 @@ def _decode_ssm(pl, hn, cfg, layer_idx, ssm_state, conv_state):
 
 
 # ---------------------------------------------------------------------------
+# Speculative decoding: propose + verify (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+
+def _spec_supported(cfg: ModelConfig) -> None:
+    if cfg.family != "dense" or cfg.attention_free:
+        raise ValueError(
+            "speculative decoding supports dense attention families only, "
+            f"got family={cfg.family!r}")
+    if cfg.is_encoder_decoder or cfg.is_vlm:
+        raise ValueError("speculative decoding does not support enc-dec/vlm")
+
+
+def propose_step(
+    serve_params: dict,
+    state: ServeState,
+    cfg: ModelConfig,
+    plan: PlanArrays,
+    ccfg: CompressionConfig,
+    depths: jnp.ndarray,  # (B,) int32 — speculative tokens per row (<= max_k)
+    active: Optional[jnp.ndarray] = None,
+    rows: Optional[jnp.ndarray] = None,
+    model_axis: Optional[str] = None,
+    data_axis: Optional[str] = None,
+    paged_impl: str = "auto",
+    kv_kinds=None,
+    draft_layers: int = 0,  # static; 0 = full depth (self-check mode)
+    max_k: int = 1,  # static unroll bound; per-row depth is traced
+) -> Tuple[ServeState, jnp.ndarray]:
+    """Draft ``max_k`` tokens autoregressively in ONE jitted call.
+
+    The draft is the layer-truncated early exit of the target
+    (`models.draft_view`), its head placement the leading slice of the
+    target plan (`core.planner.draft_plan`) — so the draft's KV appends
+    land in the *target's* paged cache at the target's own layers < d
+    (real KV; verify fills layers >= d).  ``max_k`` masked single-decode
+    steps are unrolled into this one trace: step ``i`` runs with
+    ``active & (i < depths)``, so per-row adaptive depth changes never
+    retrace (the zero-recompile invariant — depth is data, not shape).
+
+    Positions, ``decode_steps`` and ``last_tokens`` are restored to their
+    pre-propose values in the returned state: the verify pass re-derives
+    the position advance from the accepted run, and the tick counts as one
+    ring step regardless of depth.  Returns (state, proposals (B, max_k))
+    — entries past a row's depth are garbage lanes the scheduler masks.
+    """
+    _spec_supported(cfg)
+    from repro.core.planner import draft_plan
+
+    d = draft_layers if draft_layers > 0 else cfg.n_layers
+    sp_d = M.draft_view(serve_params, d)
+    plan_d = draft_plan(plan, d)
+    B = state.last_tokens.shape[0]
+    active_b = (jnp.ones((B,), bool) if active is None else active)
+    depths = jnp.asarray(depths, jnp.int32)
+    st = state
+    proposals = []
+    for i in range(max_k):
+        act_i = active_b & (jnp.int32(i) < depths)
+        st, _ = decode_step(sp_d, st, cfg, plan_d, ccfg,
+                            tokens=st.last_tokens, active=act_i, rows=rows,
+                            model_axis=model_axis, data_axis=data_axis,
+                            paged_impl=paged_impl, kv_kinds=kv_kinds)
+        proposals.append(st.last_tokens)
+    props = (jnp.stack(proposals, axis=1) if proposals
+             else jnp.zeros((B, 0), jnp.int32))
+    cache = dataclasses.replace(st.cache, positions=state.cache.positions)
+    new_state = ServeState(
+        cache=cache, ssm_state=st.ssm_state, conv_state=st.conv_state,
+        cross_k=st.cross_k, cross_v=st.cross_v,
+        last_tokens=state.last_tokens, decode_steps=state.decode_steps)
+    return new_state, props
+
+
+def verify_step(
+    serve_params: dict,
+    state: ServeState,
+    cfg: ModelConfig,
+    plan: PlanArrays,
+    ccfg: CompressionConfig,
+    tokens: jnp.ndarray,  # (B, Q) int32: [t0, p1..p_{Q-1}] (garbage past q_lens)
+    q_lens: jnp.ndarray,  # (B,) int32 valid window per row (1 <= q_len <= Q)
+    active: Optional[jnp.ndarray] = None,
+    rows: Optional[jnp.ndarray] = None,
+    model_axis: Optional[str] = None,
+    data_axis: Optional[str] = None,
+    paged_impl: str = "auto",
+    kv_kinds=None,
+    draft_layers: int = 0,  # static; layers < d were filled by propose
+) -> Tuple[ServeState, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One batched verify pass over the speculative window.
+
+    Runs the full target over ``Q = max_k + 1`` tokens per row — the last
+    committed token followed by the draft's proposals — through the
+    multi-query paged kernel (5-D q, `fairkv_decode_mq_ref` semantics).
+    Appends per layer restore the uniform-length invariant: draft layers
+    already hold the window's first ``q_len - 1`` entries (propose wrote
+    real KV), so only the final token appends there; verify-only layers
+    append every valid token in query order, walking the same
+    quantize-on-write scale evolution as sequential decode.
+
+    The greedy verdicts ``g[:, i] = argmax`` are exactly what single-token
+    decode would have emitted given the same prefix, so committing the
+    accepted run ``g[:, :n_commit]`` is bit-identical to non-speculative
+    greedy decode at any acceptance rate.  Rejected entries roll back
+    *in-trace* (lengths drop to ``base + n_commit``); the host-side block
+    trim (`paging.backend`) reclaims now-uncovered provisional blocks.
+
+    Returns (state, g (B, Q), n_commit (B,), logits (B, Q, V)).
+    """
+    _spec_supported(cfg)
+    if not isinstance(state.cache, PagedCache):
+        raise ValueError("speculative verify requires the paged cache backend")
+    d = draft_layers if draft_layers > 0 else cfg.n_layers
+    B, Q = tokens.shape
+    active_b = (jnp.ones((B,), bool) if active is None else active)
+    q_lens = jnp.asarray(q_lens, jnp.int32)
+    h = L.embed(tokens, serve_params["embed"])  # (B, Q, D)
+    if cfg.name.startswith("gemma2"):
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+    cache = state.cache
+    positions = cache.positions
+    positions_q = positions[:, None] + jnp.arange(Q, dtype=jnp.int32)[None, :]
+
+    for i, pl in enumerate(serve_params["layers"]):
+        hn = L.rms_norm(h, pl["ln1"], cfg.rms_eps)
+        attn, cache = _verify_attention(
+            pl, hn, positions_q, q_lens, cfg, i, cache, plan,
+            state.decode_steps, ccfg, i < d, active_b, rows, model_axis,
+            data_axis, paged_impl, kv_kinds)
+        h = h + _verify_slot_o(pl, attn, cfg, model_axis)
+        if cfg.d_ff > 0 or cfg.moe.num_experts > 0:
+            hn2 = L.rms_norm(h, pl["ln2"], cfg.rms_eps)
+            mlp_out, _ = M.mlp_block(pl, hn2, cfg)
+            h = h + mlp_out
+        h = constrain(h, "batch", None, "d_model")
+
+    h = L.rms_norm(h, serve_params["final_norm"], cfg.rms_eps)
+    table = serve_params.get("head", serve_params["embed"])
+    logits = L.unembed(h, table, cfg.logit_softcap)  # (B, Q, V)
+    g = jnp.argmax(logits[..., :cfg.vocab_size], axis=-1).astype(jnp.int32)
+
+    # leading run of proposals the target itself would have emitted
+    if Q > 1:
+        iq = jnp.arange(Q - 1, dtype=jnp.int32)[None, :]
+        ok = (tokens[:, 1:] == g[:, :-1]) & (iq + 1 < q_lens[:, None])
+        n_acc = jnp.cumprod(ok.astype(jnp.int32), axis=1).sum(axis=1)
+    else:
+        n_acc = jnp.zeros((B,), jnp.int32)
+    n_commit = jnp.minimum(n_acc + 1, q_lens)  # accepted run + bonus/fix
+
+    # in-trace rollback: rejected speculative entries drop out of `lengths`
+    # on every owned (slot, row) — the appended values become invisible to
+    # the kernel's length mask; the backend's host trim frees their blocks
+    rows_b = (jnp.arange(B, dtype=jnp.int32) if rows is None
+              else jnp.asarray(rows, jnp.int32))
+    own_all = ((plan.slot_head >= 0)[:, :, None]
+               & ((rows_b[None, None, :] % plan.replica_count[:, :, None])
+                  == plan.replica_idx[:, :, None]))  # (L, S, B)
+    trim = jnp.where(active_b, q_lens - n_commit, 0)  # (B,)
+    lengths = cache.lengths - jnp.where(own_all, trim[None, None, :], 0)
+    pos_next = jnp.where(active_b, positions + n_commit, positions)
+    cache = dataclasses.replace(cache, lengths=lengths, positions=pos_next)
+    last = jnp.take_along_axis(
+        g, jnp.maximum(n_commit - 1, 0)[:, None], axis=1)[:, 0]
+    new_state = ServeState(
+        cache=cache, ssm_state=state.ssm_state, conv_state=state.conv_state,
+        cross_k=state.cross_k, cross_v=state.cross_v,
+        last_tokens=jnp.where(active_b, last, state.last_tokens),
+        decode_steps=state.decode_steps + 1)
+    return new_state, g, n_commit, logits
+
+
+def _verify_attention(pl, hn, positions_q, q_lens, cfg, layer_idx, cache,
+                      plan, decode_steps, ccfg, draft_filled, active, rows,
+                      model_axis=None, data_axis=None, paged_impl="auto",
+                      kv_kinds=None):
+    """Multi-query slot attention over the speculative window (one layer).
+
+    ``hn`` is (B, Q, D); every token projects and RoPEs at its own absolute
+    position, then appends into the paged cache:
+
+    - ``draft_filled`` layers already hold the window's first ``q_len - 1``
+      entries (real KV written by propose); only query index ``q_len - 1``
+      appends.
+    - verify-only layers append all ``q_len`` valid tokens in query order —
+      per-row sequential writes into the block, so quantize-on-write scales
+      evolve exactly as under single-token decode.
+
+    After the appends every live (slot, row) sits at ``base + q_len`` and
+    the multi-query kernel masks query ``i`` to its causal prefix
+    ``base + i + 1`` (`fairkv_decode_mq_ref`).  Returns
+    ((B, S, Q, G, Dh), cache).
+    """
+    B, Q, _ = hn.shape
+    from repro.serving.quant import deq
+    if not isinstance(cache, PagedCache):
+        raise ValueError("speculative verify requires the paged cache backend")
+    q = jnp.einsum("bqd,sdgx->bsqgx", hn, deq(pl["wq_s"]))  # (B, S, Q, G, Dh)
+    k_new = jnp.einsum("bqd,sdx->bsqx", hn, deq(pl["wk_s"]))  # (B, S, Q, Dh)
+    v_new = jnp.einsum("bqd,sdx->bsqx", hn, deq(pl["wv_s"]))
+    if "bq_s" in pl:
+        q = q + pl["bq_s"][None, :, None]
+        k_new = k_new + pl["bk_s"][None, :, None]
+        v_new = v_new + pl["bv_s"][None, :, None]
+    q = _rope_slots_mq(q, positions_q, cfg)
+    k_new = _rope_slots_mq(k_new[:, :, :, None, :], positions_q,
+                           cfg)[:, :, :, 0, :]
+    own = (plan.owner_mask(layer_idx, B) if rows is None
+           else plan.owner_mask_rows(layer_idx, rows))  # (S, B)
+    own = own & active[None, :]
+    window = M.layer_window(cfg, layer_idx)
+    capacity = ccfg.static_capacity()
+    table_l = cache.block_table[layer_idx]  # (S, B, M)
+    if model_axis is not None:
+        # same partition-localization as `_decode_attention` (DESIGN.md §10)
+        n_part = cache.k_pool.shape[1]
+        part_idx = jax.lax.axis_index(model_axis)
+        if data_axis is not None:
+            row_parts = jax.lax.psum(1, data_axis)
+            part_idx = part_idx * row_parts + jax.lax.axis_index(data_axis)
+        loc = table_l - part_idx * n_part
+        table_l = jnp.where((loc > 0) & (loc < n_part), loc, 0)
+    kinds = None
+    if cache.k_scale is not None:
+        grid_l = (jnp.zeros((cfg.n_kv_heads,), jnp.int32) if kv_kinds is None
+                  else jnp.asarray(kv_kinds[layer_idx], jnp.int32))
+        kinds = jnp.take(grid_l, jnp.maximum(plan.slot_head[layer_idx], 0))
+    for qi in range(Q):
+        m_q = (q_lens == qi + 1) if draft_filled else (qi < q_lens)
+        own_q = own & m_q[None, :]
+        # the appended entry's recorded position is `cache.positions` —
+        # point it at this token's absolute position for the write
+        cache = paged_append_token(
+            dataclasses.replace(cache, positions=positions_q[:, qi]),
+            layer_idx, k_new[:, :, qi].swapaxes(0, 1),
+            v_new[:, :, qi].swapaxes(0, 1), own_q, decode_steps, capacity,
+            ring=max(1, ccfg.decode_margin), table_layer=table_l, kinds=kinds)
+    cache = dataclasses.replace(cache, positions=positions_q[:, 0])
+    out = K.paged_fairkv_decode(
+        q, cache.k_pool[layer_idx], cache.v_pool[layer_idx],
+        cache.pos_pool[layer_idx], table_l, cache.lengths[layer_idx],
+        capacity, attn_cap=cfg.attn_softcap, q_pos=positions_q[:, 0],
+        window=window, impl=paged_impl,
+        k_scale=(None if cache.k_scale is None
+                 else cache.k_scale[layer_idx]),
+        v_scale=(None if cache.v_scale is None
+                 else cache.v_scale[layer_idx]),
+        kinds=kinds, q_lens=q_lens)
+    return out, cache
+
+
+def _rope_slots_mq(q, positions_q, cfg):
+    """RoPE over (B, S, Q, G, Dh) at per-(row, query) positions (B, Q)."""
+    B, S_, Q, G, Dh = q.shape
+    q2 = q.transpose(0, 2, 1, 3, 4).reshape(B, Q, S_ * G, Dh)
+    q2 = L.apply_rope(q2, positions_q, cfg.rope_theta)
+    return q2.reshape(B, Q, S_, G, Dh).transpose(0, 2, 1, 3, 4)
+
+
+def _verify_slot_o(pl, attn, cfg, model_axis=None):
+    """(B, S, Q, G, Dh) → (B, Q, D); the same single o-projection psum as
+    `_decode_slot_o` — multi-query verify adds no new mesh collective."""
+    from repro.serving.quant import deq
+    out = jnp.einsum("bsqgx,sgxd->bqd", attn, deq(pl["wo_s"]))
+    if model_axis is not None:
+        out = jax.lax.psum(out, model_axis)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Row-level state ops (continuous batching, DESIGN.md §7)
 # ---------------------------------------------------------------------------
 

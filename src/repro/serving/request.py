@@ -65,6 +65,11 @@ class Request:
     # layer reused from the index (admission charges only unshared blocks)
     prefix_shared_blocks: Optional[np.ndarray] = None
     prefix_hit_tokens: int = 0  # matched prefix length on admission (0 = miss)
+    # speculative decoding (DESIGN.md §16): lifetime draft-token counts —
+    # acceptance = spec_accepted / spec_proposed feeds the adaptive depth
+    # and the per-request acceptance histogram at retirement
+    spec_proposed: int = 0
+    spec_accepted: int = 0
 
     @property
     def prompt_len(self) -> int:
@@ -109,6 +114,8 @@ class Request:
         self.first_token_time = None
         self.prefix_shared_blocks = None  # re-stamped on re-admission
         self.prefix_hit_tokens = 0
+        self.spec_proposed = 0  # the replay re-speculates from scratch
+        self.spec_accepted = 0
         self.n_preemptions += 1
 
     def queueing_steps(self) -> Optional[int]:

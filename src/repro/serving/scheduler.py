@@ -46,6 +46,7 @@ from repro.serving.cache_backend import CacheBackend, make_cache_backend
 from repro.serving.engine import slotify_params
 from repro.serving.request import (Request, RequestState,
                                    latency_percentiles)
+from repro.serving.speculation import SpeculationConfig
 
 
 # ---------------------------------------------------------------------------
@@ -191,6 +192,7 @@ class Scheduler:
         obs: Optional[Obs] = None,
         plan_profile: Optional[np.ndarray] = None,
         prefix_cfg: Optional[PrefixConfig] = None,
+        spec_cfg: Optional[SpeculationConfig] = None,
     ):
         if cfg.is_encoder_decoder or cfg.is_vlm:
             raise NotImplementedError(
@@ -263,6 +265,27 @@ class Scheduler:
                                       obs=self.obs)
             self.prefix.pool = pool
 
+        # speculative decoding (DESIGN.md §16): propose k draft tokens per
+        # tick against the live paged cache, verify them in one multi-query
+        # pass, commit the accepted run.  Provisional blocks come from the
+        # same pool as ordinary decode growth; rejection trims them back.
+        self.spec = spec_cfg if (spec_cfg is not None
+                                 and spec_cfg.enabled) else None
+        if self.spec is not None:
+            _serve._spec_supported(cfg)  # dense decoder-only models
+            if self.backend.name != "paged":
+                raise ValueError(
+                    "speculative decoding needs the paged backend "
+                    "(provisional blocks + rollback), got "
+                    f"cache_backend={self.backend.name!r}")
+            d = self.spec.draft_layers
+            if d > cfg.n_layers:
+                raise ValueError(
+                    f"speculation.draft_layers={d} exceeds the model's "
+                    f"{cfg.n_layers} layers")
+        # per-row adaptive speculation depth (request-scoped: seeded at
+        # max_k on admission, dropped with the row)
+        self._spec_depth: Dict[int, int] = {}
         # persisted straggler speed factors (set by a speed-aware replan):
         # imbalance() and every later replan score/plan against them, so an
         # auto-replan never silently reverts the mitigation
@@ -298,6 +321,100 @@ class Scheduler:
         """One decode tick through the executor's StepFn."""
         return self.executor.decode(self.sp, state, self.pa,
                                     state.last_tokens, active=active)
+
+    # ---- speculative decoding (DESIGN.md §16) ------------------------------
+
+    def _spec_depths(self) -> np.ndarray:
+        """(max_rows,) speculation depth for this tick: the per-request
+        adaptive depth clamped by the remaining token budget (a row never
+        proposes past its own ``max_new_tokens``) and by cache headroom
+        (an at-capacity row degrades to q_len = 1, i.e. plain decode)."""
+        depth = np.zeros(self.scfg.max_rows, np.int32)
+        lens = (np.asarray(self.state.cache.lengths)
+                if self.state.cache is not None else None)
+        cap = self.backend.capacity
+        for row, req in self.active.items():
+            want = self._spec_depth.setdefault(row, self.spec.max_k)
+            remaining = req.max_new_tokens - req.n_generated
+            headroom = cap - (int(lens[:, :, row].max())
+                              if lens is not None else 0)
+            depth[row] = max(0, min(want, remaining - 1, headroom - 1))
+        return depth
+
+    def _decode_tick_speculative(self, events: dict) -> None:
+        """One speculative tick: propose up to k draft tokens per row, one
+        multi-query verify pass, commit the accepted run (1..k+1 tokens).
+
+        Provisional cache entries are appended by propose/verify through the
+        ordinary block-pool path (`prepare_decode(n_tokens=...)` reserves
+        them up front, preempting if the pool is dry); after verify,
+        `trim_rows` returns every block past the committed lengths to the
+        pool — the rollback side of the trial-commit.  TTFT is untouched
+        (stamped at admission); ITL stays honest because `itl_seconds` is
+        the per-request *mean* cadence, which a multi-token commit
+        accelerates exactly as a client would observe."""
+        spec = self.spec
+        d = spec.draft_layers if spec.draft_layers > 0 else self.cfg.n_layers
+        depth = self._spec_depths()
+        self._prepare_decode(n_tokens=int(depth.max()) + 1)
+        if not self.active:  # everything got preempted reserving blocks
+            return
+        q_lens = jnp.asarray(depth + 1, jnp.int32)
+        mask = self.active_mask()
+        with self.obs.trace.span("decode_tick", rows=len(self.active),
+                                 spec_max_depth=int(depth.max())):
+            st, props = self.executor.propose(
+                self.sp, self.state, self.pa, jnp.asarray(depth),
+                active=mask, draft_layers=d, max_k=spec.max_k)
+            tokens = jnp.concatenate(
+                [st.last_tokens[:, None], jnp.asarray(props)], axis=1)
+            st, g, n_commit, logits = self.executor.verify(
+                self.sp, st, self.pa, tokens, q_lens,
+                active=mask, draft_layers=d)
+        self.state = self.backend.trim_rows(st, sorted(self.active))
+        g_np, nc = np.asarray(g), np.asarray(n_commit)
+        logits_np = np.asarray(logits) if self.scfg.collect_logits else None
+        tick_proposed = tick_accepted = 0
+        for row in sorted(self.active):
+            req = self.active[row]
+            n, prop = int(nc[row]), int(depth[row])
+            req.spec_proposed += prop
+            req.spec_accepted += max(0, n - 1)
+            tick_proposed += prop
+            tick_accepted += max(0, n - 1)
+            # commit the accepted run, truncating at EOS / max_new_tokens
+            # (the cache may hold a few tokens past the cut; the row is
+            # retired right below, which frees them with the row)
+            for i in range(n):
+                req.generated.append(int(g_np[row, i]))
+                if logits_np is not None:
+                    req.logits.append(logits_np[row, i])
+                if self._done(req):
+                    break
+            if spec.adaptive and prop > 0:
+                alpha = (n - 1) / prop
+                want = self._spec_depth[row]
+                if alpha < spec.low_acceptance:
+                    self._spec_depth[row] = max(spec.min_k, want - 1)
+                elif alpha >= spec.high_acceptance:
+                    self._spec_depth[row] = min(spec.max_k, want + 1)
+        if self.obs.enabled:
+            m = self.obs.metrics
+            m.counter("spec_proposed_total",
+                      help="draft tokens proposed by speculative decode"
+                      ).inc(tick_proposed)
+            m.counter("spec_accepted_total",
+                      help="draft tokens accepted by the verify pass"
+                      ).inc(tick_accepted)
+            depths = [self._spec_depth[r] for r in self.active]
+            m.gauge("spec_depth",
+                    help="mean adaptive speculation depth over live rows"
+                    ).set(float(np.mean(depths)))
+        for row in sorted(self.active):
+            req = self.active[row]
+            if self._done(req):
+                self._retire(req)
+                events["finished"].append(req.req_id)
 
     # ---- load accounting ---------------------------------------------------
 
@@ -733,6 +850,7 @@ class Scheduler:
         self.state = self.backend.release_rows(self.state, jnp.asarray([row]))
         del self.active[row]
         self.freelist.release(row)
+        self._spec_depth.pop(row, None)
 
     def _retire(self, req: Request) -> None:
         self._release_row(req)
@@ -755,6 +873,11 @@ class Scheduler:
         if req.arrival_time is not None:
             m.histogram("e2e_s", help="end-to-end request latency"
                         ).observe(req.finish_time - req.arrival_time)
+        if req.spec_proposed > 0:
+            m.histogram("spec_acceptance",
+                        help="per-request draft acceptance rate "
+                             "(accepted / proposed over the lifetime)"
+                        ).observe(req.spec_accepted / req.spec_proposed)
 
     # ---- cancellation + draining (DESIGN.md §13) ---------------------------
 
@@ -848,14 +971,14 @@ class Scheduler:
                         key=lambda r: (r.priority, r.admit_step, r.req_id)))
         return True
 
-    def _prepare_decode(self) -> None:
+    def _prepare_decode(self, n_tokens: int = 1) -> None:
         """Backend pre-tick hook with preemption: guarantee every active
-        row's next append has backing storage, evicting the youngest
-        requests while the pool is dry."""
+        row's next ``n_tokens`` appends have backing storage, evicting the
+        youngest requests while the pool is dry."""
         while True:
             try:
                 self.state = self.backend.prepare_decode(
-                    self.state, sorted(self.active))
+                    self.state, sorted(self.active), n_tokens=n_tokens)
                 return
             except PoolExhausted as e:
                 # reclaim index-only prefix entries before evicting live
@@ -1032,26 +1155,31 @@ class Scheduler:
         # tick: long prompts never head-of-line-block live rows (§14)
         if self.prefilling:
             self._run_chunks(events)
-        # one interleaved decode tick for every live row
-        if self.active:
+        # one interleaved decode tick for every live row — speculative
+        # (k draft proposals + one multi-query verify, DESIGN.md §16) when
+        # configured, single-token greedy otherwise
+        if self.active and self.spec is not None:
+            self._decode_tick_speculative(events)
+        elif self.active:
             self._prepare_decode()  # may preempt (paged pool dry)
-        if self.active:
-            with self.obs.trace.span("decode_tick", rows=len(self.active)):
-                self.state, logits = self._decode(self.state,
-                                                  self.active_mask())
-            toks = np.asarray(self.state.last_tokens)
-            logits_np = (np.asarray(logits) if self.scfg.collect_logits
-                         else None)
-            for row in sorted(self.active):
-                req = self.active[row]
-                req.generated.append(int(toks[row]))
-                if logits_np is not None:
-                    req.logits.append(logits_np[row])
-            for row in sorted(self.active):
-                req = self.active[row]
-                if self._done(req):
-                    self._retire(req)
-                    events["finished"].append(req.req_id)
+            if self.active:
+                with self.obs.trace.span("decode_tick",
+                                         rows=len(self.active)):
+                    self.state, logits = self._decode(self.state,
+                                                      self.active_mask())
+                toks = np.asarray(self.state.last_tokens)
+                logits_np = (np.asarray(logits) if self.scfg.collect_logits
+                             else None)
+                for row in sorted(self.active):
+                    req = self.active[row]
+                    req.generated.append(int(toks[row]))
+                    if logits_np is not None:
+                        req.logits.append(logits_np[row])
+                for row in sorted(self.active):
+                    req = self.active[row]
+                    if self._done(req):
+                        self._retire(req)
+                        events["finished"].append(req.req_id)
         events["preempted"] = self.n_preemptions - preempted_before
         # load accounting + replan trigger (hysteresis inside the trigger);
         # the load vector feeds the trigger and the gauges from one compute

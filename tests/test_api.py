@@ -281,3 +281,125 @@ def test_replan_oneshot_swaps_plan():
     out = eng.replan(profile=prof)
     assert eng.plan is not old_plan
     assert out["migrated_cache"] is False  # no live cache yet
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig.to_dict / from_dict round-trip (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+def _roundtrip(cfg):
+    import json
+    data = json.loads(json.dumps(cfg.to_dict()))  # force JSON types
+    return EngineConfig.from_dict(data)
+
+
+def test_config_dict_roundtrip_defaults():
+    cfg = _ecfg()
+    assert _roundtrip(cfg) == cfg
+
+
+def test_config_dict_roundtrip_property():
+    """Round-trip over the registered option space: every policy, backend,
+    executor, and planner mode survives ``to_dict -> json -> from_dict``
+    unchanged (tuples, nested sub-configs, and dtype-override dicts
+    included)."""
+    from tests._hypothesis_compat import given, settings, st
+    from repro.api import (PagingConfig, SpeculationConfig, list_engines,
+                           list_executors, list_policies)
+    from repro.core.planner import PLANNER_MODES
+
+    @settings(max_examples=15)
+    @given(policy=st.sampled_from(sorted(list_policies())),
+           mode=st.sampled_from(sorted(PLANNER_MODES)),
+           engine=st.sampled_from(sorted(list_engines())),
+           executor=st.sampled_from(sorted(list_executors())),
+           backend=st.sampled_from(["slot", "paged"]),
+           kv=st.sampled_from(["fp32", "int8"]),
+           spec=st.booleans(), max_k=st.integers(1, 6))
+    def run(policy, mode, engine, executor, backend, kv, spec, max_k):
+        if spec or kv != "fp32":
+            backend = "paged"  # speculation / quantized pools need paged
+        overrides = {(0, 1): "int8"} if kv == "int8" else {}
+        cfg = _ecfg(
+            compression=_ccfg(policy=policy),
+            planner=PlannerConfig(mode=mode, engine=engine, extra_copies=4,
+                                  batch_cap=2),
+            cache_backend=backend, executor=executor,
+            paging=PagingConfig(block_size=8, kv_dtype=kv,
+                                kv_dtype_overrides=overrides),
+            speculation=SpeculationConfig(enabled=spec, max_k=max_k))
+        back = _roundtrip(cfg)
+        assert back == cfg
+        assert back.paging.kv_dtype_overrides == \
+            cfg.paging.kv_dtype_overrides
+
+    run()
+
+
+def test_config_from_dict_rejects_unknown_keys():
+    data = _ecfg().to_dict()
+    data["speculation"]["maxk"] = 3  # typo'd nested key
+    with pytest.raises(ValueError) as ei:
+        EngineConfig.from_dict(data)
+    msg = str(ei.value)
+    assert "maxk" in msg and "engine.speculation" in msg
+    assert "max_k" in msg  # valid keys listed for the typo'd level
+    data = _ecfg().to_dict()
+    data["bogus_top"] = 1
+    with pytest.raises(ValueError, match="bogus_top"):
+        EngineConfig.from_dict(data)
+
+
+def test_config_from_dict_revalidates():
+    """from_dict goes through the constructors, so semantic validation
+    (registry names, cross-field rules) still fires on edited files."""
+    data = _ecfg().to_dict()
+    data["compression"]["policy"] = "not_a_policy"
+    with pytest.raises(ValueError, match="not_a_policy"):
+        EngineConfig.from_dict(data)
+    data = _ecfg().to_dict()
+    data["speculation"]["enabled"] = True  # slot backend + speculation
+    with pytest.raises(ValueError, match="paged"):
+        EngineConfig.from_dict(data)
+
+
+# ---------------------------------------------------------------------------
+# Engine.stats(): the consolidated snapshot vs the legacy accessors
+# ---------------------------------------------------------------------------
+
+
+def test_stats_idle_engine_always_constructible():
+    from repro.api import EngineStats
+    eng = Engine.build(_ecfg())
+    st = eng.stats()
+    assert isinstance(st, EngineStats)
+    assert st.scheduler.mode == "idle"
+    assert st.pool.detail == {} and st.pool.backend is None
+    assert st.plan.n_shards == 4  # plan exists from build
+    assert not st.speculation.enabled
+    assert isinstance(st.to_dict(), dict)
+    # legacy accessors keep their historical raising behavior when empty
+    with pytest.raises(RuntimeError):
+        eng.memory_stats()
+    with pytest.raises(RuntimeError):
+        eng.imbalance()
+
+
+def test_stats_continuous_matches_legacy_accessors():
+    cfg = _ecfg(scheduler=SchedulerConfig(max_rows=2, enable_replan=False),
+                max_seq_len=32)
+    eng = Engine.build(cfg)
+    reqs = synthesize_requests(3, 0.5, cfg.model.vocab_size, min_prompt=8,
+                               max_prompt=12, max_new_tokens=4, seed=0)
+    out = eng.run_trace(reqs, max_steps=200)
+    assert out["finished"] == 3
+    st = eng.stats()
+    assert st.scheduler.mode == "continuous"
+    assert st.scheduler.finished == 3
+    assert st.scheduler.steps == eng.scheduler.step_idx
+    assert st.scheduler.imbalance == pytest.approx(eng.imbalance())
+    assert st.scheduler.replan_log == eng.replan_log
+    assert st.pool.detail == eng.memory_stats()
+    assert st.pool.backend == "slot"
+    assert st.to_dict()["scheduler"]["finished"] == 3
